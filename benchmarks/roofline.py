@@ -1,0 +1,98 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/dryrun_results/*.json (written by repro.launch.dryrun) and
+emits, per (arch × shape × mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and a one-line "what would move the
+dominant term" hint.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "dryrun_results")
+
+HINTS = {
+    ("compute", True): "raise useful-flops ratio: cut remat recompute "
+                       "(save-dots policy) / lower MoE capacity factor",
+    ("memory", True): "fuse attention chunk traffic into the Pallas kernel "
+                      "(scores never leave VMEM); bf16 master-residuals",
+    ("collective", True): "bf16 TP all-reduces; sequence-sharded activations "
+                          "(AR -> RS+AG); overlap FSDP gathers with compute",
+    ("compute", False): "decode is tiny-FLOP: batch more requests per step",
+    ("memory", False): "KV-cache dtype (int8/f8) halves the dominant cache "
+                       "read; MLA-style latent caches; paged layouts",
+    ("collective", False): "decode collectives are latency-bound: fuse the "
+                           "per-layer psums; widen model-axis rings",
+}
+
+
+def load(mesh_filter=None, tag=None):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        parts = os.path.basename(fn)[:-5].split("__")
+        file_tag = parts[3] if len(parts) > 3 else None
+        if file_tag != tag:
+            continue                      # tagged perf variants stay out of
+        with open(fn) as f:               # the main table unless requested
+            r = json.load(f)
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r):
+    terms = {"compute": r["compute_term_s"], "memory": r["memory_term_s"],
+             "collective": r["collective_term_s"]}
+    dom = max(terms, key=terms.get)
+    total = sum(terms.values())
+    frac = terms[dom] / max(total, 1e-12)
+    bound = max(terms.values())
+    # roofline fraction: useful model flops-time over the bounding term
+    mf_time = r["model_flops"]["model_flops_global"] / r["n_chips"] / 197e12
+    roofline_frac = mf_time / max(bound, 1e-12)
+    is_train = r["shape"].startswith("train") or r["shape"].startswith("prefill")
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "compute_s": terms["compute"], "memory_s": terms["memory"],
+        "collective_s": terms["collective"], "dominant": dom,
+        "useful_ratio": r["useful_ratio"],
+        "roofline_fraction": roofline_frac,
+        "peak_gib": r["memory"]["peak_bytes"] / 2**30,
+        "hint": HINTS[(dom, is_train)],
+    }
+
+
+def markdown_table(mesh="16x16"):
+    rows = [fmt_row(r) for r in load(mesh_filter=mesh)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful | roofline-frac | peak GiB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+            f"{r['peak_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+def run(rows):
+    for mesh in ("16x16", "2x16x16"):
+        for r in load(mesh_filter=mesh):
+            fr = fmt_row(r)
+            rows.append((f"roofline_{r['arch']}_{r['shape']}_{mesh}",
+                         max(fr["compute_s"], fr["memory_s"],
+                             fr["collective_s"]) * 1e6,
+                         f"dom={fr['dominant']},frac={fr['roofline_fraction']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table("16x16"))

@@ -1,0 +1,40 @@
+"""Benchmark entry point: one function per paper table/figure + the roofline
+report.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig3,fig5,...]
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: table2,fig3,fig4,fig5,fig6,fig7,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    rows = []
+
+    def want(*keys):
+        return only is None or any(k in only for k in keys)
+
+    from benchmarks import (bench_accuracy, bench_complexity,
+                            bench_training_time, roofline)
+    if want("table2", "fig5", "fig6", "fig7"):
+        bench_complexity.run(rows)
+    if want("fig3"):
+        bench_training_time.run(rows)
+    if want("fig4"):
+        bench_accuracy.run(rows)
+    if want("roofline"):
+        roofline.run(rows)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,20 @@
+"""Coded data-parallel LM training with stragglers + crash recovery.
+
+Runs a reduced qwen2 on CPU with Berrut-coded gradient aggregation, drops a
+random block's contribution every third step (straggler), then simulates a
+pod loss at step 60 (elastic shrink — no recompilation, the decode weights
+renormalize).  Checkpoints allow kill/resume at any point.
+
+  PYTHONPATH=src python examples/coded_lm_training.py
+"""
+
+import shutil
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    shutil.rmtree("/tmp/repro_coded_lm", ignore_errors=True)
+    main(["--arch", "qwen2-7b", "--tiny", "--coded",
+          "--steps", "90", "--blocks", "4", "--stragglers", "1",
+          "--elastic-at", "60", "--ckpt-dir", "/tmp/repro_coded_lm",
+          "--global-batch", "16", "--seq-len", "64", "--log-every", "10"])

@@ -1,0 +1,11 @@
+"""Batched serving demo: greedy decode of a 4-request batch on a reduced
+deepseek (MLA absorbed-cache decode path).
+
+  PYTHONPATH=src python examples/serve_demo.py
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "deepseek-v2-lite-16b", "--tiny",
+          "--batch", "4", "--prompt-len", "12", "--gen", "24"])

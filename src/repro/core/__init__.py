@@ -1,0 +1,16 @@
+"""SPACDC core: Berrut coded computing, baselines, coded training, privacy."""
+
+from .berrut import (berrut_weight_matrix, berrut_weights, chebyshev_points,
+                     combine, default_alpha_beta, interpolate)
+from .spacdc import SPACDCCode, SPACDCConfig, pad_to_blocks
+from .coded_training import (BerrutGradientCode, coded_backprop_decode,
+                             coded_backprop_encode, coded_psum)
+from . import baselines, privacy
+
+__all__ = [
+    "berrut_weight_matrix", "berrut_weights", "chebyshev_points", "combine",
+    "default_alpha_beta", "interpolate",
+    "SPACDCCode", "SPACDCConfig", "pad_to_blocks",
+    "BerrutGradientCode", "coded_backprop_decode", "coded_backprop_encode",
+    "coded_psum", "baselines", "privacy",
+]

@@ -1,0 +1,291 @@
+"""Baseline coded-computing schemes the paper compares against (Table II).
+
+All schemes share a tiny common interface so the complexity benchmarks and
+the SPACDC-DL baselines (MDS-DL / MATDOT-DL / CONV-DL) can swap them in:
+
+    shards   = scheme.encode(X)            # (N, ...) one shard per worker
+    results  = f applied per shard         # worker compute
+    Y        = scheme.decode(results, responders)
+
+Unlike SPACDC/BACC these classical codes have a hard *recovery threshold*:
+``decode`` raises if ``len(responders) < scheme.recovery_threshold``.
+
+Evaluation points are real (float64 Vandermonde solves); for the block
+sizes used in the experiments (K ≤ ~30) conditioning is acceptable —
+exactly the regime the paper benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import berrut
+
+__all__ = [
+    "UncodedScheme", "MDSCode", "PolynomialCode", "MatDotCode",
+    "LCCScheme", "SecPolyCode", "BACCScheme",
+]
+
+
+def _cheb_points(n: int) -> np.ndarray:
+    """Chebyshev nodes keep the real-field Vandermonde solves well-conditioned."""
+    return berrut.chebyshev_points(n, kind=1)
+
+
+def _lagrange_matrix(queries: np.ndarray, nodes: np.ndarray) -> np.ndarray:
+    """(Q, n) exact Lagrange evaluation matrix."""
+    q = np.asarray(queries, dtype=np.float64)[:, None]   # (Q, 1)
+    x = np.asarray(nodes, dtype=np.float64)[None, :]     # (1, n)
+    n = x.shape[1]
+    out = np.ones((q.shape[0], n), dtype=np.float64)
+    for j in range(n):
+        for k in range(n):
+            if k != j:
+                out[:, j] *= (q[:, 0] - x[0, k]) / (x[0, j] - x[0, k])
+    return out
+
+
+def _combine(w, blocks):
+    return berrut.combine(jnp.asarray(w, dtype=jnp.float32), jnp.asarray(blocks))
+
+
+class _SchemeBase:
+    name: str = "base"
+    n_workers: int
+    recovery_threshold: int
+
+    def _check(self, responders):
+        if len(responders) < self.recovery_threshold:
+            raise ValueError(
+                f"{self.name}: {len(responders)} responders < recovery "
+                f"threshold {self.recovery_threshold}")
+
+
+@dataclasses.dataclass
+class UncodedScheme(_SchemeBase):
+    """CONV: X split into N blocks, no redundancy — must wait for everyone."""
+    n_workers: int
+    name: str = "conv"
+
+    def __post_init__(self):
+        self.recovery_threshold = self.n_workers
+
+    def encode(self, x: jnp.ndarray) -> jnp.ndarray:
+        from .spacdc import pad_to_blocks
+        x = pad_to_blocks(x, self.n_workers)
+        return x.reshape((self.n_workers, -1) + x.shape[1:])
+
+    def decode(self, results: jnp.ndarray, responders: Sequence[int]):
+        self._check(responders)
+        order = np.argsort(np.asarray(responders))
+        return jnp.asarray(results)[order]
+
+
+@dataclasses.dataclass
+class MDSCode(_SchemeBase):
+    """(N, K) MDS code via real Vandermonde generator [Lee et al. '18].
+
+    Linear tasks only (f(X) = X @ W): decode solves the K×K Vandermonde
+    subsystem of the responding workers.
+    """
+    n_workers: int
+    k_blocks: int
+    name: str = "mds"
+
+    def __post_init__(self):
+        self.recovery_threshold = self.k_blocks
+        self.points = _cheb_points(self.n_workers)
+        # generator G[i, j] = x_i^j  (N × K)
+        self.generator = np.vander(self.points, self.k_blocks, increasing=True)
+
+    def encode(self, x: jnp.ndarray) -> jnp.ndarray:
+        from .spacdc import pad_to_blocks
+        x = pad_to_blocks(x, self.k_blocks)
+        blocks = x.reshape((self.k_blocks, -1) + x.shape[1:])
+        return _combine(self.generator, blocks)
+
+    def decode(self, results: jnp.ndarray, responders: Sequence[int]):
+        self._check(responders)
+        resp = np.asarray(responders[: self.recovery_threshold])
+        sub = self.generator[resp]                       # (K, K)
+        inv = np.linalg.inv(sub)
+        return _combine(inv, jnp.asarray(results)[: self.recovery_threshold])
+
+
+@dataclasses.dataclass
+class PolynomialCode(_SchemeBase):
+    """Polynomial codes [Yu et al. '17] for C = A @ B.
+
+    A split into p row-blocks (A(x) = Σ A_i x^i), B into q column-blocks
+    (B(x) = Σ B_j x^{j p}).  C(x) = A(x)B(x) has degree pq-1 → threshold pq.
+    """
+    n_workers: int
+    p: int
+    q: int
+    name: str = "polynomial"
+
+    def __post_init__(self):
+        self.recovery_threshold = self.p * self.q
+        if self.n_workers < self.recovery_threshold:
+            raise ValueError("polynomial code needs N >= p*q")
+        self.points = _cheb_points(self.n_workers)
+
+    def encode_pair(self, a: jnp.ndarray, b: jnp.ndarray):
+        from .spacdc import pad_to_blocks
+        a = pad_to_blocks(a, self.p)
+        bt = pad_to_blocks(b.T, self.q)  # split B by columns
+        a_blocks = a.reshape((self.p, -1) + a.shape[1:])
+        b_blocks = bt.reshape((self.q, -1) + bt.shape[1:])
+        va = np.vander(self.points, self.p, increasing=True)          # x^i
+        vb = np.vander(self.points ** self.p, self.q, increasing=True)  # x^{jp}
+        return _combine(va, a_blocks), jnp.swapaxes(_combine(vb, b_blocks), 1, 2)
+
+    def decode(self, results: jnp.ndarray, responders: Sequence[int]):
+        """results: (|F|, m/p, n/q) products A(x_i)B(x_i); returns (p, q, m/p, n/q)."""
+        self._check(responders)
+        r = self.recovery_threshold
+        resp = np.asarray(responders[:r])
+        vand = np.vander(self.points[resp], r, increasing=True)  # (r, r)
+        coeffs = _combine(np.linalg.inv(vand), jnp.asarray(results)[:r])  # (pq, ...)
+        return coeffs.reshape((self.q, self.p) + coeffs.shape[1:]).swapaxes(0, 1)
+
+
+@dataclasses.dataclass
+class MatDotCode(_SchemeBase):
+    """MatDot codes [Dutta et al. '20] for C = A @ B.
+
+    A split by columns, B by rows into p blocks; A(x)=Σ A_i x^i,
+    B(x)=Σ B_j x^{p-1-j}.  AB is the coefficient of x^{p-1} → threshold 2p-1,
+    but each worker returns a full m×n product (high communication — the
+    point the paper's Fig 6 makes).
+    """
+    n_workers: int
+    p: int
+    name: str = "matdot"
+
+    def __post_init__(self):
+        self.recovery_threshold = 2 * self.p - 1
+        if self.n_workers < self.recovery_threshold:
+            raise ValueError("matdot needs N >= 2p-1")
+        self.points = _cheb_points(self.n_workers)
+
+    def encode_pair(self, a: jnp.ndarray, b: jnp.ndarray):
+        from .spacdc import pad_to_blocks
+        at = pad_to_blocks(a.T, self.p)   # column split of A
+        b2 = pad_to_blocks(b, self.p)     # row split of B
+        a_blocks = jnp.swapaxes(at.reshape((self.p, -1) + at.shape[1:]), 1, 2)
+        b_blocks = b2.reshape((self.p, -1) + b2.shape[1:])
+        va = np.vander(self.points, self.p, increasing=True)
+        vb = va[:, ::-1]  # x^{p-1-j}
+        return _combine(va, a_blocks), _combine(vb, b_blocks)
+
+    def decode(self, results: jnp.ndarray, responders: Sequence[int]):
+        self._check(responders)
+        r = self.recovery_threshold
+        resp = np.asarray(responders[:r])
+        vand = np.vander(self.points[resp], r, increasing=True)
+        coeffs = _combine(np.linalg.inv(vand), jnp.asarray(results)[:r])
+        return coeffs[self.p - 1]  # coefficient of x^{p-1} is A@B
+
+
+@dataclasses.dataclass
+class LCCScheme(_SchemeBase):
+    """Lagrange Coded Computing [Yu et al. '19] for polynomial f of degree deg_f.
+
+    K data blocks + T noise blocks Lagrange-encoded; threshold
+    (K+T-1)*deg_f + 1.  Exact for polynomial f (tested with f(X)=X X^T).
+    """
+    n_workers: int
+    k_blocks: int
+    t_colluding: int = 0
+    deg_f: int = 2
+    noise_scale: float = 1.0
+    seed: int = 0
+    name: str = "lcc"
+
+    def __post_init__(self):
+        kt = self.k_blocks + self.t_colluding
+        self.recovery_threshold = (kt - 1) * self.deg_f + 1
+        if self.n_workers < self.recovery_threshold:
+            raise ValueError("LCC needs N >= (K+T-1)deg_f + 1")
+        self.beta = _cheb_points(kt)
+        self.alpha = berrut.chebyshev_points(self.n_workers, kind=2, lo=-1.05, hi=1.05)
+        for i in range(len(self.alpha)):
+            while np.any(np.abs(self.alpha[i] - self.beta) < 1e-9):
+                self.alpha[i] += 1e-3
+
+    def encode(self, x: jnp.ndarray) -> jnp.ndarray:
+        from .spacdc import pad_to_blocks
+        x = pad_to_blocks(x, self.k_blocks)
+        blocks = x.reshape((self.k_blocks, -1) + x.shape[1:])
+        if self.t_colluding:
+            rng = np.random.default_rng(self.seed)
+            noise = self.noise_scale * rng.standard_normal(
+                (self.t_colluding,) + blocks.shape[1:])
+            blocks = jnp.concatenate([blocks, jnp.asarray(noise, blocks.dtype)], 0)
+        return _combine(_lagrange_matrix(self.alpha, self.beta), blocks)
+
+    def decode(self, results: jnp.ndarray, responders: Sequence[int]):
+        self._check(responders)
+        r = self.recovery_threshold
+        resp = np.asarray(responders[:r])
+        # f(u(z)) has degree (K+T-1)*deg_f: interpolate it from r samples,
+        # then evaluate at beta_0..beta_{K-1}.
+        nodes = self.alpha[resp]
+        eval_mat = _lagrange_matrix(self.beta[: self.k_blocks], nodes)
+        return _combine(eval_mat, jnp.asarray(results)[:r])
+
+
+@dataclasses.dataclass
+class SecPolyCode(_SchemeBase):
+    """Secure polynomial codes [Yang & Lee '19]: polynomial code + 1 random
+    block appended to the A-polynomial for (T=1) privacy."""
+    n_workers: int
+    p: int
+    q: int
+    noise_scale: float = 1.0
+    seed: int = 0
+    name: str = "secpoly"
+
+    def __post_init__(self):
+        self.inner = PolynomialCode(self.n_workers, self.p + 1, self.q)
+        self.recovery_threshold = self.inner.recovery_threshold
+
+    def encode_pair(self, a: jnp.ndarray, b: jnp.ndarray):
+        from .spacdc import pad_to_blocks
+        a = pad_to_blocks(a, self.p)
+        rng = np.random.default_rng(self.seed)
+        noise = self.noise_scale * rng.standard_normal((a.shape[0] // self.p,) + a.shape[1:])
+        a_sec = jnp.concatenate([a, jnp.asarray(noise, a.dtype)], 0)
+        return self.inner.encode_pair(a_sec, b)
+
+    def decode(self, results, responders):
+        out = self.inner.decode(results, responders)   # (p+1, q, ...)
+        return out[: self.p]                           # drop the noise row
+
+
+@dataclasses.dataclass
+class BACCScheme(_SchemeBase):
+    """Berrut Approximated Coded Computing [Jahani-Nezhad & Maddah-Ali '23].
+
+    SPACDC minus the privacy noise and minus transmission encryption —
+    the closest prior work; used as the approximation-quality baseline.
+    """
+    n_workers: int
+    k_blocks: int
+    name: str = "bacc"
+
+    def __post_init__(self):
+        from .spacdc import SPACDCCode, SPACDCConfig
+        self.recovery_threshold = 1  # rateless — any subset decodes
+        self._code = SPACDCCode(SPACDCConfig(self.n_workers, self.k_blocks, 0))
+
+    def encode(self, x):
+        return self._code.encode(x)
+
+    def decode(self, results, responders):
+        return self._code.decode(jnp.asarray(results), np.asarray(responders))

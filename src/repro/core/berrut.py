@@ -1,0 +1,178 @@
+"""Berrut rational interpolation — the mathematical core of SPACDC.
+
+The paper (Eq. 17/18) builds both its encoder and decoder from Berrut's
+first rational interpolant [Berrut 1988]:
+
+    r(x) = sum_i  w_i(x) * f_i,     w_i(x) = [(-1)^i / (x - x_i)] / sum_j (-1)^j / (x - x_j)
+
+Key properties we rely on (and test):
+  * r(x_k) = f_k exactly (interpolation at the nodes).
+  * The weights sum to 1 for every x (partition of unity), so the decode is
+    an affine combination of worker results — no Runge blow-up, no pole in
+    the real line, and no minimum number of points ("recovery threshold").
+  * With Chebyshev-distributed nodes the interpolant converges for smooth f.
+
+Everything here is pure jnp and differentiable; the Pallas kernel in
+``repro.kernels.berrut_encode`` implements the same contraction for the
+hot path and is validated against :func:`combine` as its oracle.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "chebyshev_points",
+    "default_alpha_beta",
+    "berrut_weights",
+    "berrut_weight_matrix",
+    "combine",
+    "interpolate",
+]
+
+
+def chebyshev_points(n: int, *, kind: int = 2, lo: float = -1.0, hi: float = 1.0) -> np.ndarray:
+    """Chebyshev points of the first (roots) or second (extrema) kind on [lo, hi].
+
+    BACC/SPACDC evaluate the encoder at Chebyshev points because Berrut's
+    interpolant converges (O(h) / O(h^2)) for equispaced-ish nodes but is
+    far better conditioned on Chebyshev grids.
+    """
+    if n <= 0:
+        raise ValueError(f"need n > 0, got {n}")
+    k = np.arange(n, dtype=np.float64)
+    if kind == 1:
+        pts = np.cos((2.0 * k + 1.0) * np.pi / (2.0 * n))
+    elif kind == 2:
+        pts = np.cos(k * np.pi / max(n - 1, 1)) if n > 1 else np.zeros(1)
+    else:
+        raise ValueError(f"kind must be 1 or 2, got {kind}")
+    # map [-1, 1] -> [lo, hi]
+    return (lo + hi) / 2.0 + (hi - lo) / 2.0 * pts
+
+
+def default_alpha_beta(n_workers: int, k_blocks: int, t_noise: int = 0):
+    """Paper-style node layout.
+
+    beta_i (i < K+T): interpolation nodes carrying the data/noise blocks,
+    alpha_j (j < N): worker evaluation points.  They must be disjoint
+    (Eq. 17 requires {alpha} ∩ {beta} = ∅).  Following BACC we place the
+    betas at Chebyshev-1 roots of the *combined* grid and the alphas at
+    Chebyshev-2 points of a slightly larger interval, then nudge any
+    collisions.  Returns (alphas[N], betas[K+T]) float64 numpy.
+    """
+    kt = k_blocks + t_noise
+    betas = chebyshev_points(kt, kind=1)
+    alphas = chebyshev_points(n_workers, kind=2, lo=-1.05, hi=1.05)
+    # resolve collisions deterministically (betas win; alphas shift by eps)
+    eps = 1e-3
+    for i in range(len(alphas)):
+        while np.any(np.abs(alphas[i] - betas) < 1e-9):
+            alphas[i] += eps
+    if len(np.unique(alphas)) != len(alphas):
+        raise ValueError("alpha points are not distinct")
+    return alphas, betas
+
+
+def fh_weights(nodes: np.ndarray, d: int = 0) -> np.ndarray:
+    """Floater–Hormann barycentric weights of blending degree d (d=0 ≡
+    Berrut's (-1)^i signs, the paper's construction).  Higher d buys
+    O(h^{d+1}) approximation order at the same node count — our beyond-paper
+    accuracy upgrade for the SPACDC decoder (EXPERIMENTS §Perf notes).
+
+    w_i = Σ_{k ∈ J_i} (-1)^k Π_{j=k..k+d, j≠i} 1/(x_i − x_j),
+    J_i = {k : max(0, i−d) ≤ k ≤ min(i, n−1−d)}   [Floater & Hormann 2007]
+    """
+    x = np.asarray(nodes, dtype=np.float64)
+    order = np.argsort(x)
+    xs = x[order]
+    n = len(xs)
+    if d >= n:
+        raise ValueError(f"blending degree {d} needs > {d} nodes")
+    w_sorted = np.zeros(n)
+    for i in range(n):
+        total = 0.0
+        for k in range(max(0, i - d), min(i, n - 1 - d) + 1):
+            prod = 1.0
+            for j in range(k, k + d + 1):
+                if j != i:
+                    prod /= (xs[i] - xs[j])
+            total += (-1) ** k * prod
+        w_sorted[i] = total
+    w = np.empty(n)
+    w[order] = w_sorted
+    return w
+
+
+def bary_weight_matrix(queries, nodes, bary_w) -> jnp.ndarray:
+    """(Q, n) barycentric evaluation matrix for explicit weights bary_w."""
+    q = jnp.asarray(queries)[..., None]
+    x = jnp.asarray(nodes)[None, :]
+    wv = jnp.asarray(bary_w, dtype=jnp.float32)[None, :]
+    diff = q - x
+    hit = jnp.abs(diff) < 1e-12
+    any_hit = jnp.any(hit, axis=-1, keepdims=True)
+    terms = wv / jnp.where(hit, 1.0, diff)
+    w_reg = terms / jnp.sum(terms, axis=-1, keepdims=True)
+    w_hit = hit.astype(w_reg.dtype)
+    w_hit = w_hit / jnp.maximum(jnp.sum(w_hit, axis=-1, keepdims=True), 1.0)
+    return jnp.where(any_hit, w_hit, w_reg)
+
+
+def berrut_weights(x: jnp.ndarray, nodes: jnp.ndarray, signs: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Berrut basis l_i(x) for scalar/batched x over given nodes.
+
+    x: (...,) query points.  nodes: (n,).  Returns (..., n) weights that sum
+    to 1 along the last axis.  ``signs`` lets callers pass the original
+    (-1)^i signs of a *parent* node set when evaluating on a subset (the
+    straggler case: the sign pattern follows worker indices, not the packed
+    position — this is what Eq. (18) means by i ∈ F).
+    """
+    nodes = jnp.asarray(nodes)
+    n = nodes.shape[-1]
+    if signs is None:
+        signs = jnp.where(jnp.arange(n) % 2 == 0, 1.0, -1.0)
+    diff = x[..., None] - nodes  # (..., n)
+    # Guard exact node hits: Berrut weights degenerate to a one-hot there.
+    hit = jnp.abs(diff) < 1e-12
+    any_hit = jnp.any(hit, axis=-1, keepdims=True)
+    safe = jnp.where(hit, 1.0, diff)
+    terms = signs / safe
+    w_regular = terms / jnp.sum(terms, axis=-1, keepdims=True)
+    w_hit = hit.astype(w_regular.dtype)
+    w_hit = w_hit / jnp.maximum(jnp.sum(w_hit, axis=-1, keepdims=True), 1.0)
+    return jnp.where(any_hit, w_hit, w_regular)
+
+
+def berrut_weight_matrix(queries, nodes, signs=None) -> jnp.ndarray:
+    """(Q, n) matrix W with W[q, i] = l_i(query_q). Rows sum to 1."""
+    return berrut_weights(jnp.asarray(queries), jnp.asarray(nodes), signs)
+
+
+def combine(weights: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
+    """Weighted combination out[q] = sum_j W[q, j] * blocks[j].
+
+    weights: (Q, J); blocks: (J, ...) -> (Q, ...).  This single contraction
+    is both the SPACDC encoder (W = basis at alpha points, blocks = data+noise)
+    and decoder (W = basis at beta points over responders, blocks = results).
+    Accumulate in f32 regardless of block dtype.
+    """
+    j = blocks.shape[0]
+    flat = blocks.reshape(j, -1)
+    out = jnp.dot(weights.astype(jnp.float32), flat.astype(jnp.float32),
+                  precision=jax.lax.Precision.HIGHEST)
+    return out.reshape((weights.shape[0],) + blocks.shape[1:]).astype(blocks.dtype)
+
+
+def interpolate(x, nodes, values, signs=None):
+    """Evaluate the Berrut interpolant of (nodes, values) at x.
+
+    values: (n, ...).  Returns (..., per x shape) — for scalar x, shape of a
+    single value block.
+    """
+    w = berrut_weights(jnp.asarray(x), jnp.asarray(nodes), signs)
+    if w.ndim == 1:
+        return combine(w[None], values)[0]
+    return combine(w, values)

@@ -1,0 +1,167 @@
+"""SPACDC applied to distributed training — two layers of fidelity.
+
+1. ``coded_backprop_*`` — the paper's own SPACDC-DL (§VI): the layer-weight
+   matrix Θ^l is split into K row-blocks, Berrut-encoded with T noise blocks,
+   and N workers compute the backward product
+   f_δ(Θ̃) = Θ̃^T δ^{l+1} ⊙ σ'(τ^l) on coded blocks.  The master decodes
+   δ^l ≈ ℵ(ξ_i) from whichever workers respond.  Used by the MNIST
+   reproduction in ``runtime/master_worker.py``.
+
+2. ``BerrutGradientCode`` — the TPU-pod adaptation: approximate *gradient
+   coding* over the data-parallel axis.  The global batch is split into B
+   blocks; dp-shard i computes the gradients of the ``redundancy`` blocks
+   cyclically assigned to it and returns their Berrut-encoded combination
+   (a linear combination — gradients are continuous even when tokens are
+   discrete, which is why we code gradients rather than raw token ids; the
+   paper's own DL experiment likewise codes Θ, never the dataset tokens).
+   Decoding is a Berrut-weighted ``psum`` over survivors — a *coded
+   all-reduce* with no recovery threshold.  Losing pods/shard (straggler
+   mask) renormalizes the decode weights instead of halting the step.
+
+Both paths share the math in ``repro.core.berrut``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import berrut
+from .spacdc import SPACDCCode, SPACDCConfig
+
+__all__ = [
+    "coded_backprop_encode", "coded_backprop_decode",
+    "BerrutGradientCode", "coded_psum",
+]
+
+
+# --------------------------------------------------------------------------
+# (1) Paper-faithful SPACDC-DL backward products (Algorithm 2)
+# --------------------------------------------------------------------------
+
+def coded_backprop_encode(code: SPACDCCode, theta_t: jnp.ndarray,
+                          key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Encode (Θ^l)^T row-blocks into N coded weight shards (Eq. 25)."""
+    return code.encode(theta_t, key)
+
+
+def coded_backprop_decode(code: SPACDCCode, partials: jnp.ndarray,
+                          responders, sigma_prime: jnp.ndarray) -> jnp.ndarray:
+    """Decode worker partial products and apply the σ' Hadamard (Eq. 26).
+
+    partials: (|F|, rows/K, batch) worker results Θ̃_i^T δ.
+    sigma_prime: (rows, batch) activation derivative at layer l.
+    Returns δ^l ≈ (Θ^l)^T δ^{l+1} ⊙ σ'(τ^l)  with shape (rows, batch).
+    """
+    decoded = code.decode(jnp.asarray(partials), responders)  # (K, rows/K, batch)
+    rows = sigma_prime.shape[0]
+    flat = decoded.reshape((-1,) + decoded.shape[2:])[:rows]
+    return flat * sigma_prime
+
+
+# --------------------------------------------------------------------------
+# (2) TPU-pod approximate gradient coding
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BerrutGradientCode:
+    """Berrut approximate gradient coding over ``n_shards`` dp workers.
+
+    The global batch is viewed as ``n_blocks`` microbatch blocks.  Shard i
+    is assigned blocks {i, i+1, ..., i+redundancy-1} (mod n_blocks) and
+    emits  e_i = Σ_j  E[i, j] · g(D_j)  where E is the Berrut encoder matrix
+    masked to the shard's assignment and renormalized.  The decoder
+    approximates the mean gradient  ḡ = (1/B) Σ_j g(D_j)  from any responder
+    subset via the Berrut interpolant evaluated at the block nodes.
+
+    redundancy=1, n_blocks=n_shards  ⇒ e_i = g(D_i) (plain DP); the decode
+    then reduces to a survivor-renormalized mean — rateless DP.
+    redundancy>1 buys straggler resilience at redundancy× compute, exactly
+    the paper's N/K trade.
+    """
+    n_shards: int
+    n_blocks: int
+    redundancy: int = 1
+    t_noise: int = 0
+    noise_scale: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (1 <= self.redundancy <= self.n_blocks):
+            raise ValueError("redundancy must be in [1, n_blocks]")
+
+    # -- static (numpy) coding matrices; embedded as constants in the jitted step
+    def assignment(self) -> np.ndarray:
+        """(n_shards, redundancy) block ids per shard (cyclic)."""
+        base = np.arange(self.n_shards)[:, None] * max(1, self.n_blocks // self.n_shards)
+        return (base + np.arange(self.redundancy)[None, :]) % self.n_blocks
+
+    def encoder_matrix(self) -> np.ndarray:
+        """(n_shards, n_blocks) row-sparse Berrut encoder (support = assignment)."""
+        code = SPACDCCode(SPACDCConfig(self.n_shards, self.n_blocks, self.t_noise,
+                                       self.noise_scale, self.seed))
+        full = np.asarray(code.enc_matrix)[:, : self.n_blocks]  # (N, B)
+        mask = np.zeros_like(full)
+        asn = self.assignment()
+        for i in range(self.n_shards):
+            mask[i, asn[i]] = 1.0
+        sparse = full * mask
+        # renormalize rows to sum 1 so each shard emits an affine combo
+        sparse /= np.maximum(np.abs(sparse.sum(axis=1, keepdims=True)), 1e-9) * \
+            np.sign(sparse.sum(axis=1, keepdims=True) + 1e-12)
+        return sparse
+
+    def decoder_weights(self, mask: jnp.ndarray) -> jnp.ndarray:
+        """(n_shards,) decode weights for the masked responder set.
+
+        w solves (softly) the 'recover the uniform mean' condition
+        w^T E ≈ 1/B·1 over survivors.  With the Berrut node layout this is
+        the partition-of-unity interpolant averaged over the B block nodes.
+        """
+        code = SPACDCCode(SPACDCConfig(self.n_shards, self.n_blocks, self.t_noise,
+                                       self.noise_scale, self.seed))
+        mask = mask.astype(jnp.float32)
+        # alternate signs over surviving nodes in sorted order (pole-free Berrut)
+        order = jnp.argsort(code.alphas)
+        rank_sorted = jnp.cumsum(mask[order]) - 1.0
+        rank = jnp.zeros_like(mask).at[order].set(rank_sorted)
+        signs = jnp.where(jnp.mod(rank, 2.0) == 0.0, 1.0, -1.0) * mask
+        betas = code.betas[: self.n_blocks]
+        diff = betas[:, None] - code.alphas[None, :]          # (B, N)
+        terms = signs / diff
+        w_per_block = terms / jnp.sum(terms, axis=-1, keepdims=True)  # (B, N)
+        return jnp.mean(w_per_block, axis=0)                  # (N,)
+
+    # -- traced pieces -----------------------------------------------------
+    def encode_local(self, block_grads: jnp.ndarray, shard_index: jnp.ndarray) -> jnp.ndarray:
+        """Combine this shard's per-block gradients with its encoder row.
+
+        block_grads: (redundancy, ...) gradients of the assigned blocks in
+        assignment order.  shard_index: scalar int (lax.axis_index).
+        """
+        enc = jnp.asarray(self.encoder_matrix(), dtype=jnp.float32)   # (N, B)
+        asn = jnp.asarray(self.assignment())                          # (N, r)
+        row = enc[shard_index]                                        # (B,)
+        w = row[asn[shard_index]]                                     # (r,)
+        flat = block_grads.reshape(self.redundancy, -1).astype(jnp.float32)
+        out = jnp.einsum("r,rf->f", w, flat)
+        return out.reshape(block_grads.shape[1:])
+
+
+def coded_psum(encoded_grad, mask: jnp.ndarray, gcode: BerrutGradientCode,
+               axis_name: str | tuple):
+    """Coded all-reduce: Berrut-decode the mean gradient over survivors.
+
+    encoded_grad: pytree of this shard's encoded gradient contribution.
+    mask: (n_shards,) float/bool responder mask — a *runtime* value, so
+    elastic shrink/grow needs no recompilation.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    w = gcode.decoder_weights(mask)[idx].astype(jnp.float32)
+    scaled = jax.tree.map(lambda g: (g.astype(jnp.float32) * w *
+                                     mask[idx].astype(jnp.float32)), encoded_grad)
+    return jax.tree.map(lambda g: jax.lax.psum(g, axis_name), scaled)

@@ -1,0 +1,160 @@
+"""SPACDC scheme (paper §V) — encode / distributed compute / decode.
+
+Pipeline (Algorithm 1):
+  1. Data process: split X (m×d) into K row-blocks, append T i.i.d. noise
+     blocks, Berrut-combine at N worker points alpha_i  -> coded shards X̃_i.
+     (Optionally MEA-ECC-encrypt each shard for transmission.)
+  2. Task computing: worker i computes Ỹ_i = f(X̃_i) for arbitrary f.
+  3. Result recovering: from any responder subset F, build the Berrut
+     interpolant over {(alpha_i, Ỹ_i)}_{i∈F} and evaluate at beta_0..beta_{K-1}
+     to get Y_i ≈ f(X_i).  No recovery threshold: |F| can be anything ≥ 1.
+
+The encode/decode contraction is the oracle for the Pallas kernel in
+``repro.kernels.berrut_encode`` (set ``use_kernel=True`` to use it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import berrut
+
+__all__ = ["SPACDCConfig", "SPACDCCode", "pad_to_blocks"]
+
+
+def pad_to_blocks(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Zero-pad rows so axis-0 is divisible by K (paper §V-B.1)."""
+    m = x.shape[0]
+    rem = (-m) % k
+    if rem:
+        pad = [(0, rem)] + [(0, 0)] * (x.ndim - 1)
+        x = jnp.pad(x, pad)
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class SPACDCConfig:
+    n_workers: int          # N
+    k_blocks: int           # K
+    t_colluding: int = 0    # T — number of noise blocks / colluding workers tolerated
+    noise_scale: float = 1.0  # std of the i.i.d. noise blocks (field-uniform analogue)
+    fh_degree: int = 0      # Floater–Hormann blending degree (0 = Berrut,
+                            # the paper's scheme; >0 = beyond-paper accuracy)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.k_blocks < 1 or self.n_workers < 1:
+            raise ValueError("need K >= 1, N >= 1")
+        if self.t_colluding < 0:
+            raise ValueError("T must be >= 0")
+
+
+class SPACDCCode:
+    """Stateful encoder/decoder holding the node layout for (N, K, T)."""
+
+    def __init__(self, cfg: SPACDCConfig):
+        self.cfg = cfg
+        alphas, betas = berrut.default_alpha_beta(cfg.n_workers, cfg.k_blocks, cfg.t_colluding)
+        self.alphas = jnp.asarray(alphas, dtype=jnp.float32)
+        self.betas = jnp.asarray(betas, dtype=jnp.float32)
+        # Encoder matrix: evaluate the (K+T)-node basis at the alpha points.
+        if cfg.fh_degree:
+            bw = berrut.fh_weights(betas, cfg.fh_degree)
+            self.enc_matrix = berrut.bary_weight_matrix(self.alphas, self.betas, bw)
+        else:
+            self.enc_matrix = berrut.berrut_weight_matrix(self.alphas, self.betas)  # (N, K+T)
+
+    # ---------------------------------------------------------------- encode
+    def make_noise(self, block_shape, dtype=jnp.float32, key: Optional[jax.Array] = None):
+        t = self.cfg.t_colluding
+        if t == 0:
+            return jnp.zeros((0,) + tuple(block_shape), dtype)
+        if key is None:
+            key = jax.random.PRNGKey(self.cfg.seed)
+        return (self.cfg.noise_scale *
+                jax.random.normal(key, (t,) + tuple(block_shape))).astype(dtype)
+
+    def split_blocks(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(m, ...) -> (K, m/K, ...), zero-padding if needed."""
+        k = self.cfg.k_blocks
+        x = pad_to_blocks(x, k)
+        return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+
+    def encode_blocks(self, blocks: jnp.ndarray, key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """blocks: (K, blk, ...) -> coded shards (N, blk, ...).  Appends T noise blocks."""
+        k = self.cfg.k_blocks
+        if blocks.shape[0] != k:
+            raise ValueError(f"expected {k} blocks, got {blocks.shape[0]}")
+        noise = self.make_noise(blocks.shape[1:], blocks.dtype, key)
+        stacked = jnp.concatenate([blocks, noise], axis=0)  # (K+T, ...)
+        return berrut.combine(self.enc_matrix, stacked)
+
+    def encode(self, x: jnp.ndarray, key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """Full data-process phase: (m, d) -> (N, m/K, d)."""
+        return self.encode_blocks(self.split_blocks(x), key)
+
+    # ---------------------------------------------------------------- decode
+    def decode_matrix(self, responders: Sequence[int] | np.ndarray) -> jnp.ndarray:
+        """(K, |F|) decode matrix for a concrete responder index set F.
+
+        Eq. (18) writes (-1)^i for i ∈ F; for the interpolant to stay
+        pole-free the signs must *alternate over the surviving nodes in
+        sorted order* (Berrut's construction) — with the full set this is
+        identical to index parity, with stragglers it is the only sound
+        reading.  We therefore rank the surviving alphas and alternate.
+        """
+        resp = np.asarray(responders, dtype=np.int64)
+        if resp.size == 0:
+            raise ValueError("decode needs at least one responder")
+        nodes_np = np.asarray(self.alphas)[resp]
+        if self.cfg.fh_degree and resp.size > self.cfg.fh_degree:
+            bw = berrut.fh_weights(nodes_np, self.cfg.fh_degree)
+            return berrut.bary_weight_matrix(self.betas[: self.cfg.k_blocks],
+                                             jnp.asarray(nodes_np), bw)
+        rank = np.argsort(np.argsort(nodes_np))
+        signs = jnp.asarray(np.where(rank % 2 == 0, 1.0, -1.0), dtype=jnp.float32)
+        return berrut.berrut_weight_matrix(self.betas[: self.cfg.k_blocks],
+                                           jnp.asarray(nodes_np), signs)
+
+    def decode(self, results: jnp.ndarray, responders: Sequence[int] | np.ndarray) -> jnp.ndarray:
+        """results: (|F|, ...) worker outputs (ordered as `responders`) -> (K, ...) approx f(X_i)."""
+        return berrut.combine(self.decode_matrix(responders), results)
+
+    def decode_masked(self, results: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+        """Traceable decode: results (N, ...) with a boolean responder mask (N,).
+
+        Used inside jit/shard_map where the responder set is a runtime value
+        (straggler simulation, elastic scaling).  Non-responders get weight 0
+        and the Berrut weights renormalize over the survivors.
+        """
+        mask = mask.astype(jnp.float32)
+        # rank of each *surviving* node in sorted(alpha) order -> alternating sign
+        order = jnp.argsort(self.alphas)
+        mask_sorted = mask[order]
+        rank_sorted = jnp.cumsum(mask_sorted) - 1.0
+        rank = jnp.zeros_like(mask).at[order].set(rank_sorted)
+        signs = jnp.where(jnp.mod(rank, 2.0) == 0.0, 1.0, -1.0) * mask
+        diff = self.betas[: self.cfg.k_blocks, None] - self.alphas[None, :]  # (K, N)
+        terms = signs / diff
+        w = terms / jnp.sum(terms, axis=-1, keepdims=True)
+        return berrut.combine(w, results)
+
+    # ------------------------------------------------------------ end-to-end
+    def run(self, x: jnp.ndarray, f: Callable[[jnp.ndarray], jnp.ndarray],
+            responders: Optional[Sequence[int]] = None,
+            key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """Reference end-to-end execution (vmapped "workers"): Y_i ≈ f(X_i).
+
+        Returns (K, f(blk).shape) stacked approximations.
+        """
+        shards = self.encode(x, key)                      # (N, m/K, d)
+        results = jax.vmap(f)(shards)                     # (N, ...)
+        if responders is None:
+            responders = np.arange(self.cfg.n_workers)
+        resp = np.asarray(responders)
+        return self.decode(results[resp], resp)

@@ -1,0 +1,10 @@
+"""Transmission-security substrate: ECC + MEA-ECC (paper §IV)."""
+
+from .ecc import (CURVE_SECP256K1, ECPoint, EllipticCurve, KeyPair,
+                  generate_keypair, shared_secret)
+from .mea_ecc import MEAECC, FixedPointCodec
+
+__all__ = [
+    "CURVE_SECP256K1", "ECPoint", "EllipticCurve", "KeyPair",
+    "generate_keypair", "shared_secret", "MEAECC", "FixedPointCodec",
+]

@@ -1,0 +1,147 @@
+"""Elliptic-curve primitives over a prime field (paper §IV-A, Defs 2).
+
+Pure-Python big-int Weierstrass curve  y² = x³ + ax + b (mod q)  with
+point addition/doubling (Eqs. 9–11), double-and-add scalar multiplication
+(Eq. 12), key generation and ECDH shared-key agreement (§IV-B steps 1–2).
+
+This is the *host-side* transmission-security layer — it never enters a
+jit trace.  Default parameters are secp256k1; a tiny toy curve is exposed
+for exhaustive group-law tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import secrets
+from typing import Optional, Tuple
+
+__all__ = [
+    "EllipticCurve", "ECPoint", "KeyPair", "CURVE_SECP256K1", "CURVE_TOY",
+    "generate_keypair", "shared_secret",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ECPoint:
+    """Affine point; None coordinates encode the point at infinity O."""
+    x: Optional[int]
+    y: Optional[int]
+
+    @property
+    def is_infinity(self) -> bool:
+        return self.x is None
+
+    def __iter__(self):
+        yield self.x
+        yield self.y
+
+
+INFINITY = ECPoint(None, None)
+
+
+@dataclasses.dataclass(frozen=True)
+class EllipticCurve:
+    q: int          # field prime
+    a: int
+    b: int
+    gx: int         # generator
+    gy: int
+    order: int      # order of G
+
+    def __post_init__(self):
+        if (4 * self.a ** 3 + 27 * self.b ** 2) % self.q == 0:
+            raise ValueError("singular curve: 4a^3 + 27b^2 ≡ 0 (mod q)")  # Eq. (8)
+
+    @property
+    def generator(self) -> ECPoint:
+        return ECPoint(self.gx, self.gy)
+
+    def contains(self, p: ECPoint) -> bool:
+        if p.is_infinity:
+            return True
+        return (p.y * p.y - (p.x ** 3 + self.a * p.x + self.b)) % self.q == 0
+
+    # ---- group law (Eqs. 9–11) -------------------------------------------
+    def add(self, p: ECPoint, r: ECPoint) -> ECPoint:
+        if p.is_infinity:
+            return r
+        if r.is_infinity:
+            return p
+        if p.x == r.x and (p.y + r.y) % self.q == 0:
+            return INFINITY
+        if p == r:
+            lam = (3 * p.x * p.x + self.a) * pow(2 * p.y, -1, self.q) % self.q
+        else:
+            lam = (r.y - p.y) * pow(r.x - p.x, -1, self.q) % self.q
+        x3 = (lam * lam - p.x - r.x) % self.q
+        y3 = (lam * (p.x - x3) - p.y) % self.q
+        return ECPoint(x3, y3)
+
+    def neg(self, p: ECPoint) -> ECPoint:
+        if p.is_infinity:
+            return p
+        return ECPoint(p.x, (-p.y) % self.q)
+
+    def multiply(self, k: int, p: ECPoint) -> ECPoint:
+        """Double-and-add k·P (Eq. 12), O(log k) group ops."""
+        if k % self.order == 0 or p.is_infinity:
+            return INFINITY
+        k %= self.order
+        result, addend = INFINITY, p
+        while k:
+            if k & 1:
+                result = self.add(result, addend)
+            addend = self.add(addend, addend)
+            k >>= 1
+        return result
+
+
+# secp256k1 (Bitcoin/ECDSA curve) — production parameters.
+CURVE_SECP256K1 = EllipticCurve(
+    q=0xFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFEFFFFFC2F,
+    a=0,
+    b=7,
+    gx=0x79BE667EF9DCBBAC55A06295CE870B07029BFCDB2DCE28D959F2815B16F81798,
+    gy=0x483ADA7726A3C4655DA4FBFC0E1108A8FD17B448A68554199C47D08FFB10D4B8,
+    order=0xFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFEBAAEDCE6AF48A03BBFD25E8CD0364141,
+)
+
+# y^2 = x^3 + 2x + 2 over F_17, G=(5,1), |G| = 19 — exhaustive-testable.
+CURVE_TOY = EllipticCurve(q=17, a=2, b=2, gx=5, gy=1, order=19)
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyPair:
+    sk: int
+    pk: ECPoint
+
+
+def generate_keypair(curve: EllipticCurve = CURVE_SECP256K1,
+                     rng: Optional[secrets.SystemRandom] = None,
+                     sk: Optional[int] = None) -> KeyPair:
+    """§IV-B step 1: sk < order random, pk = sk·G."""
+    if sk is None:
+        rng = rng or secrets.SystemRandom()
+        sk = rng.randrange(1, curve.order)
+    return KeyPair(sk, curve.multiply(sk, curve.generator))
+
+
+def shared_secret(curve: EllipticCurve, own: KeyPair, their_pk: ECPoint) -> ECPoint:
+    """§IV-B step 2: s = sk_own · pk_their (commutes — tested)."""
+    return curve.multiply(own.sk, their_pk)
+
+
+def keystream(secret: ECPoint, nonce: int, n_words: int, q: int) -> list[int]:
+    """SHA-256 counter PRF over the shared secret — per-element mask stream
+    for the hardened ('stream') MEA-ECC mode."""
+    seed = hashlib.sha256(f"{secret.x}:{secret.y}:{nonce}".encode()).digest()
+    out, counter = [], 0
+    while len(out) < n_words:
+        h = hashlib.sha256(seed + counter.to_bytes(8, "big")).digest()
+        for i in range(0, 32, 8):
+            if len(out) >= n_words:
+                break
+            out.append(int.from_bytes(h[i:i + 8], "big") % q)
+        counter += 1
+    return out

@@ -1,0 +1,120 @@
+"""MEA-ECC — Matrix Encryption Algorithm over ECC (paper §IV-B).
+
+Paper construction (steps 3–4): the ciphertext of matrix M for worker W is
+
+    C = ( k·G ,  M + Ψ(k·pk_W)·1_{m,d} )          Ψ(x, y) = x
+
+and the worker strips the mask with its private key:
+    M = C₂ − Ψ(sk_W · (k·G))·1.
+
+Matrices live in F_q via a fixed-point codec (scale 2^16, two's-complement
+embedding) so encrypt→decrypt is **bit-exact** for float32 inputs.
+
+Modes
+-----
+* ``mode="paper"``  — faithful: a single scalar mask for the whole matrix
+  (all-ones matrix 1_{m,d}).  Weak (one known plaintext element reveals the
+  mask) but exactly Eq. in §IV-B; kept for reproduction.
+* ``mode="stream"`` — beyond-paper hardening: per-element mask words drawn
+  from a SHA-256 counter PRF keyed by the ECDH point and the ephemeral
+  nonce k·G.  Same interface, still exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import secrets
+from typing import Literal, Tuple
+
+import numpy as np
+
+from .ecc import (CURVE_SECP256K1, ECPoint, EllipticCurve, KeyPair,
+                  generate_keypair, keystream, shared_secret)
+
+__all__ = ["FixedPointCodec", "MEAECC", "Ciphertext"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointCodec:
+    """Embed float matrices into Z_q: round(x * 2^frac_bits) mod q.
+
+    Values must satisfy |x| < q / 2^{frac_bits+1}; with secp256k1's 256-bit
+    q this is never binding for ML tensors.
+    """
+    q: int
+    frac_bits: int = 16
+
+    def encode(self, m: np.ndarray) -> np.ndarray:
+        scaled = np.rint(np.asarray(m, dtype=np.float64) * (1 << self.frac_bits)).astype(object)
+        return np.vectorize(lambda v: int(v) % self.q, otypes=[object])(scaled)
+
+    def decode(self, w: np.ndarray) -> np.ndarray:
+        half = self.q // 2
+
+        def back(v):
+            v = int(v)
+            if v > half:
+                v -= self.q
+            # clamp to float32 range (wrong-key decrypts yield huge ints)
+            return max(min(v / float(1 << self.frac_bits), 3e38), -3e38)
+
+        return np.vectorize(back, otypes=[np.float64])(w).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ciphertext:
+    ephemeral: ECPoint          # k·G
+    payload: np.ndarray         # masked field matrix (object dtype, big ints)
+    shape: Tuple[int, ...]
+    mode: str
+
+
+class MEAECC:
+    """Master-side encrypt (to a worker pk) / worker-side decrypt (with sk)."""
+
+    def __init__(self, curve: EllipticCurve = CURVE_SECP256K1,
+                 frac_bits: int = 16,
+                 mode: Literal["paper", "stream"] = "paper"):
+        self.curve = curve
+        self.codec = FixedPointCodec(curve.q, frac_bits)
+        self.mode = mode
+
+    # ---- §IV-B step 3 ------------------------------------------------------
+    def encrypt(self, m: np.ndarray, recipient_pk: ECPoint,
+                k: int | None = None) -> Ciphertext:
+        if k is None:
+            k = secrets.SystemRandom().randrange(2, self.curve.order - 1)
+        eph = self.curve.multiply(k, self.curve.generator)        # k·G
+        mask_point = self.curve.multiply(k, recipient_pk)          # k·pk_W
+        field = self.codec.encode(m)
+        flat = field.reshape(-1)
+        if self.mode == "paper":
+            psi = mask_point.x % self.curve.q                      # Ψ(x,y)=x
+            masked = np.vectorize(lambda v: (int(v) + psi) % self.curve.q,
+                                  otypes=[object])(flat)
+        else:
+            words = keystream(mask_point, eph.x or 0, flat.size, self.curve.q)
+            masked = np.array([(int(v) + w) % self.curve.q
+                               for v, w in zip(flat, words)], dtype=object)
+        return Ciphertext(eph, masked.reshape(field.shape), tuple(m.shape), self.mode)
+
+    # ---- §IV-B step 4 ------------------------------------------------------
+    def decrypt(self, c: Ciphertext, recipient: KeyPair) -> np.ndarray:
+        mask_point = self.curve.multiply(recipient.sk, c.ephemeral)  # sk·(k·G)
+        flat = c.payload.reshape(-1)
+        if c.mode == "paper":
+            psi = mask_point.x % self.curve.q
+            unmasked = np.vectorize(lambda v: (int(v) - psi) % self.curve.q,
+                                    otypes=[object])(flat)
+        else:
+            words = keystream(mask_point, c.ephemeral.x or 0, flat.size, self.curve.q)
+            unmasked = np.array([(int(v) - w) % self.curve.q
+                                 for v, w in zip(flat, words)], dtype=object)
+        return self.codec.decode(unmasked.reshape(c.payload.shape)).reshape(c.shape)
+
+    # ---- convenience: secure round trip master -> worker -> master ---------
+    def secure_channel_roundtrip(self, m: np.ndarray) -> np.ndarray:
+        """Self-test helper: generates both parties' keys and round-trips."""
+        worker = generate_keypair(self.curve)
+        c = self.encrypt(m, worker.pk)
+        return self.decrypt(c, worker)

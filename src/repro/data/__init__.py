@@ -1,0 +1,4 @@
+from .pipeline import TokenPipeline, make_batch
+from .mnist import synthetic_mnist
+
+__all__ = ["TokenPipeline", "make_batch", "synthetic_mnist"]

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: causal/full GQA flash attention (forward).
+
+TPU-native tiling of the flash algorithm:
+  grid = (B·KVH·G, Sq // bq, Skv // bkv)   (kv innermost — sequential axis)
+  q tile (bq, hd) VMEM-resident across the kv sweep; k/v tiles (bkv, hd);
+  online-softmax running (m, l, acc) carried in VMEM scratch across the kv
+  grid axis; matmul dims padded to (8, 128) multiples so both the s = q·kᵀ
+  and o = p·v contractions hit the MXU.  Causal tiles strictly above the
+  diagonal short-circuit via ``pl.when``; kv padding masked by position.
+
+This is the TPU twin of the XLA blockwise path in ``models.attention`` (the
+dry-run compiles that path since the CPU target can't lower TPU Pallas);
+both are validated against ``ref.mha_reference`` — the kernel in interpret
+mode (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BKV = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, causal: bool, softcap: float, bq: int, bkv: int,
+                  n_kv_steps: int, kv_len: int):
+    kv_i = pl.program_id(2)
+    q_i = pl.program_id(1)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _step():
+        q_pos = q_i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_pos = kv_i * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        q = q_ref[0].astype(jnp.float32)                # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                # (bkv, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        valid = k_pos < kv_len
+        if causal:
+            valid = valid & (k_pos <= q_pos)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(p, v_ref[0].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + pv
+
+    if causal:
+        pl.when((kv_i * bkv) <= (q_i * bq + bq - 1))(_step)
+    else:
+        _step()
+
+    @pl.when(kv_i == n_kv_steps - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _pad_to(x, m):
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "softcap", "bq", "bkv",
+                                             "interpret"))
+def flash_attention_kernel(q, k, v, *, causal: bool = True,
+                           softcap: float = 0.0, bq: int = DEFAULT_BQ,
+                           bkv: int = DEFAULT_BKV, interpret: bool = True):
+    """q (B,Sq,H,hd) k/v (B,Skv,KV,hd) -> (B,Sq,H,hd).
+
+    GQA: q regrouped to (B·KVH·G, Sq, hd) with k/v broadcast per group —
+    each grid row attends one (batch, kv-head, group-member)."""
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    sqp, skvp = _pad_to(sq, bq), _pad_to(skv, bkv)
+    hdp = _pad_to(hd, 128)
+    scale = 1.0 / (hd ** 0.5)
+
+    # (B, Sq, KVH, G, hd) -> (B·KVH·G, Sqp, hdp)
+    qg = q.reshape(b, sq, kvh, g, hd).transpose(0, 2, 3, 1, 4) \
+        .reshape(b * kvh * g, sq, hd).astype(jnp.float32) * scale
+    qg = jnp.pad(qg, ((0, 0), (0, sqp - sq), (0, hdp - hd))).astype(q.dtype)
+    # k/v: (B, Skv, KVH, hd) -> broadcast G -> (B·KVH·G, Skvp, hdp)
+    kg = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (b, kvh, g, skv, hd)).reshape(b * kvh * g, skv, hd)
+    vg = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (b, kvh, g, skv, hd)).reshape(b * kvh * g, skv, hd)
+    kg = jnp.pad(kg, ((0, 0), (0, skvp - skv), (0, hdp - hd)))
+    vg = jnp.pad(vg, ((0, 0), (0, skvp - skv), (0, hdp - hd)))
+
+    n_kv = skvp // bkv
+    kern = functools.partial(_flash_kernel, causal=causal, softcap=softcap,
+                             bq=bq, bkv=bkv, n_kv_steps=n_kv, kv_len=skv)
+    out = pl.pallas_call(
+        kern,
+        grid=(b * kvh * g, sqp // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, hdp), lambda bi, qi, ki: (bi, qi, 0)),
+            pl.BlockSpec((1, bkv, hdp), lambda bi, qi, ki: (bi, ki, 0)),
+            pl.BlockSpec((1, bkv, hdp), lambda bi, qi, ki: (bi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hdp), lambda bi, qi, ki: (bi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh * g, sqp, hdp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hdp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    out = out[:, :sq, :hd].reshape(b, kvh, g, sq, hd) \
+        .transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out

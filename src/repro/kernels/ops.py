@@ -1,0 +1,50 @@
+"""Backend-dispatching wrappers for the Pallas kernels.
+
+On TPU the Pallas kernels run compiled; everywhere else (CPU tests, the
+dry-run's CPU target) they run the pure-XLA twin from models/ or the
+interpret-mode kernel.  The dispatch is explicit and importable so tests can
+force either path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .berrut_encode import berrut_encode_kernel
+from .flash_attention import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def berrut_combine(weights, blocks, *, force_kernel: bool | None = None):
+    """SPACDC encode/decode contraction with kernel dispatch.
+
+    blocks may be any (J, ...) tree-shaped payload; flattened internally.
+    """
+    j = blocks.shape[0]
+    flat = blocks.reshape(j, -1)
+    use_kernel = _on_tpu() if force_kernel is None else force_kernel
+    if use_kernel:
+        out = berrut_encode_kernel(weights, flat, interpret=not _on_tpu())
+    else:
+        out = ref.berrut_combine(weights, flat)
+    return out.reshape((weights.shape[0],) + blocks.shape[1:])
+
+
+def flash_attention(q, k, v, *, causal=True, softcap=0.0,
+                    force_kernel: bool | None = None):
+    """Full-sequence attention with kernel dispatch (positions implicit)."""
+    use_kernel = _on_tpu() if force_kernel is None else force_kernel
+    if use_kernel:
+        return flash_attention_kernel(q, k, v, causal=causal, softcap=softcap,
+                                      interpret=not _on_tpu())
+    b, sq = q.shape[:2]
+    from ..models.attention import flash_attention as xla_flash
+    pos_q = jnp.broadcast_to(jnp.arange(sq)[None], (b, sq))
+    pos_k = jnp.broadcast_to(jnp.arange(k.shape[1])[None], (b, k.shape[1]))
+    return xla_flash(q, k, v, q_positions=pos_q, kv_positions=pos_k,
+                     causal=causal, softcap=softcap)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def berrut_combine(weights: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
+    """SPACDC encode/decode contraction: out[q] = Σ_j W[q,j]·blocks[j].
+
+    weights (Q, J); blocks (J, M) (flattened block payload).  f32 accumulate.
+    """
+    return jnp.dot(weights.astype(jnp.float32), blocks.astype(jnp.float32),
+                   precision=jax.lax.Precision.HIGHEST).astype(blocks.dtype)
+
+
+def mha_reference(q, k, v, *, causal: bool, softcap: float = 0.0):
+    """Dense multi-head attention oracle.  q (B,Sq,H,hd) k/v (B,Skv,KV,hd)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd).astype(jnp.float32) / (hd ** 0.5)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qg, k.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        mask = jnp.arange(k.shape[1])[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)

@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh (16×16 single-pod and 2×16×16 multi-pod) and extract the
+roofline terms from the compiled artifact.  No arrays are ever allocated:
+params/optimizer/cache/batch are ShapeDtypeStructs with NamedShardings.
+
+The XLA_FLAGS line above MUST precede any jax import (device count locks on
+first init) and must NOT leak into tests/benches — hence module-local, never
+in conftest/pyproject.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+  python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get_config, shape_applicable
+from ..core import BerrutGradientCode
+from ..dist.sharding import resolve_spec, tree_shardings
+from ..models import build_model, input_specs
+from ..optim import adamw
+from ..optim.optimizers import OptState
+from .hlo_analysis import analyze
+from .mesh import make_production_mesh
+from .roofline_math import model_flops
+from .steps import build_serve_step, build_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "dryrun_results")
+
+# v5e constants for the roofline terms
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+def _accum_for(shape, n_dp: int) -> int:
+    """One sequence per microbatch per block keeps remat memory flat."""
+    per_block = max(shape.global_batch // n_dp, 1)
+    return per_block
+
+
+def make_cell(arch: str, shape_name: str, multi_pod: bool, redundancy: int = 1):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dp = 32 if multi_pod else 16
+    is_train = shape.kind == "train"
+    cfg = dataclasses.replace(
+        cfg, pad_heads_to=16, remat=is_train,
+        param_dtype="float32" if is_train else "bfloat16")
+    model = build_model(cfg)
+    return cfg, shape, mesh, model, n_dp
+
+
+FSDP_PARAM_THRESHOLD = 10e9   # >10B params: 2D (FSDP+TP) weight sharding
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               redundancy: int = 1, coded: bool = True,
+               fsdp: bool | None = None, zero1: bool = True,
+               seq_parallel: bool = False, int8_cache: bool = False):
+    cfg, shape, mesh, model, n_dp = make_cell(arch, shape_name, multi_pod)
+    if seq_parallel:
+        cfg = dataclasses.replace(cfg, seq_shard_activations=True)
+        model = build_model(cfg)
+    if int8_cache:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(model.init, key)
+    p_specs = model.param_specs()
+    if fsdp is None:
+        fsdp = cfg.param_count() > FSDP_PARAM_THRESHOLD
+    fsdp = fsdp and shape.kind == "train" and not cfg.encoder_decoder
+    if fsdp:
+        from ..dist.sharding import tree_add_data_axis
+        cfg = dataclasses.replace(cfg, fsdp_in_scan=True)
+        model = build_model(cfg)
+        p_shapes = jax.eval_shape(model.init, key)
+        p_specs = dict(model.param_specs())
+        # FSDP only on the scanned layer stacks (unsharded per-group inside
+        # the scan); embeddings/norms stay TP-only — a data-sharded embedding
+        # feature dim would poison the whole forward's block sharding.
+        for sub, skip in (("groups", (0,)), ("prelude", ())):
+            if p_specs.get(sub):
+                p_specs[sub] = tree_add_data_axis(p_specs[sub], p_shapes[sub],
+                                                  skip_dims=skip)
+    p_shard = tree_shardings(p_specs, mesh, p_shapes)
+    p_structs = jax.tree.map(lambda sd, sh: jax.ShapeDtypeStruct(
+        sd.shape, sd.dtype, sharding=sh), p_shapes, p_shard)
+
+    batch_structs = input_specs(cfg, shape)
+    dp = ("pod", "data") if multi_pod else "data"
+
+    from ..dist.sharding import prune_spec
+
+    def bspec(name, sds):
+        if name == "mrope_positions":
+            spec = P(None, dp, *([None] * (len(sds.shape) - 2)))
+        else:
+            spec = P(dp, *([None] * (len(sds.shape) - 1)))
+        return NamedSharding(mesh, prune_spec(spec, sds.shape, mesh))
+
+    batch_structs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                             sharding=bspec(k, v))
+                     for k, v in batch_structs.items()}
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            opt = adamw(1e-4)
+            o_shapes = jax.eval_shape(opt.init, p_structs)
+            mv_specs = p_specs
+            if zero1 and not fsdp:
+                from ..dist.sharding import tree_add_data_axis
+                mv_specs = tree_add_data_axis(p_specs, p_shapes)
+            mv_shard = tree_shardings(mv_specs, mesh, p_shapes)
+            o_shard = OptState(NamedSharding(mesh, P()), mv_shard, mv_shard)
+            o_structs = jax.tree.map(
+                lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh),
+                o_shapes, o_shard)
+            accum = _accum_for(shape, n_dp)
+            gcode = BerrutGradientCode(n_shards=n_dp, n_blocks=n_dp,
+                                       redundancy=redundancy) if coded else None
+            dp_axes = ("pod", "data") if multi_pod else "data"
+            step = build_train_step(model, opt, accum=accum, gcode=gcode,
+                                    dp_axes=dp_axes)
+            mask = jax.ShapeDtypeStruct((n_dp,), jnp.float32,
+                                        sharding=NamedSharding(mesh, P()))
+            jitted = jax.jit(step, donate_argnums=(0, 1))
+            lowered = jitted.lower(p_structs, o_structs, batch_structs, mask)
+        elif shape.kind == "prefill":
+            def prefill_step(params, batch):
+                if cfg.encoder_decoder:
+                    logits, _ = model.forward(params, batch["frames"], batch["tokens"])
+                else:
+                    logits, _ = model.forward(
+                        params, batch["tokens"],
+                        mrope_positions=batch.get("mrope_positions"))
+                return logits[:, -1:]          # next-token logits only
+            jitted = jax.jit(prefill_step)
+            lowered = jitted.lower(p_structs, batch_structs)
+        else:  # decode
+            c_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            c_shard = tree_shardings(model.cache_specs(), mesh, c_shapes)
+            c_structs = jax.tree.map(
+                lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh),
+                c_shapes, c_shard)
+            serve = build_serve_step(model)
+            pos = jax.ShapeDtypeStruct((), jnp.int32,
+                                       sharding=NamedSharding(mesh, P()))
+            args = [p_structs, c_structs, batch_structs["tokens"], pos]
+            if "mrope_positions" in batch_structs:
+                args.append(batch_structs["mrope_positions"])
+            jitted = jax.jit(serve, donate_argnums=(1,))
+            lowered = jitted.lower(*args)
+    return lowered, cfg, shape, mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             redundancy: int = 1, coded: bool = True, tag: str = "",
+             seq_parallel: bool = False, int8_cache: bool = False):
+    t0 = time.time()
+    lowered, cfg, shape, mesh = lower_cell(arch, shape_name, multi_pod,
+                                           redundancy, coded,
+                                           seq_parallel=seq_parallel,
+                                           int8_cache=int8_cache)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    metrics = analyze(hlo)        # recursive, trip-count-weighted, per device
+    n_chips = 512 if multi_pod else 256
+    mf = model_flops(*( (dataclasses.replace(get_config(arch), pad_heads_to=16),
+                         SHAPES[shape_name]) ))
+
+    flops_dev = metrics.flops
+    hbm_dev = metrics.hbm_bytes
+    coll_dev = metrics.total_collective_bytes
+    compute_term = flops_dev / PEAK_FLOPS
+    memory_term = hbm_dev / HBM_BW
+    collective_term = coll_dev / ICI_BW
+    dominant = max((compute_term, "compute"), (memory_term, "memory"),
+                   (collective_term, "collective"))[1]
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips, "coded": coded, "redundancy": redundancy,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "hlo_flops_per_device": flops_dev,
+        "hlo_hbm_bytes_per_device": hbm_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collectives": {"bytes": metrics.collective_bytes,
+                        "counts": metrics.collective_counts},
+        "xla_cost_analysis_flops_unscaled": float(cost.get("flops", 0.0)),
+        "model_flops": mf,
+        "useful_ratio": (mf["model_flops_global"] / n_chips) / max(flops_dev, 1.0),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        },
+        # roofline terms (seconds per step, per chip)
+        "compute_term_s": compute_term,
+        "memory_term_s": memory_term,
+        "collective_term_s": collective_term,
+        "dominant_term": dominant,
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fn = os.path.join(RESULTS_DIR,
+                      f"{arch}__{shape_name}__{result['mesh']}{suffix}.json")
+    with open(fn, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def cells(multi_pod: bool):
+    for arch in ARCHS:
+        for shape_name in SHAPES:
+            ok, why = shape_applicable(arch, shape_name)
+            yield arch, shape_name, ok, why
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--uncoded", action="store_true",
+                    help="baseline (paper-external) plain-DP aggregation")
+    ap.add_argument("--redundancy", type=int, default=1)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--int8-cache", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for arch, shape_name, ok, why in cells(args.multi_pod):
+            print(f"{arch:24s} {shape_name:12s} {'RUN' if ok else 'SKIP: ' + why}")
+        return 0
+
+    todo = []
+    if args.all:
+        for arch, shape_name, ok, why in cells(args.multi_pod):
+            if ok:
+                todo.append((arch, shape_name))
+    else:
+        ok, why = shape_applicable(args.arch, args.shape)
+        if not ok:
+            print(f"SKIP {args.arch} × {args.shape}: {why}")
+            return 0
+        todo.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape_name in todo:
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        suffix = f"__{args.tag}" if args.tag else ""
+        out = os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{mesh_tag}{suffix}.json")
+        if args.skip_existing and os.path.exists(out):
+            print(f"skip (cached) {arch} × {shape_name} × {mesh_tag}")
+            continue
+        try:
+            r = run_cell(arch, shape_name, args.multi_pod,
+                         redundancy=args.redundancy, coded=not args.uncoded,
+                         tag=args.tag, seq_parallel=args.seq_parallel,
+                         int8_cache=args.int8_cache)
+            print(f"OK   {arch} × {shape_name} × {mesh_tag}: "
+                  f"compile={r['compile_s']}s flops/dev={r['hlo_flops_per_device']:.3e} "
+                  f"coll={r['collective_bytes_per_device']:.3e}B "
+                  f"useful={r['useful_ratio']:.2f} dom={r['dominant_term']} "
+                  f"peak_mem={r['memory']['peak_bytes']/2**30:.2f}GiB")
+        except Exception as e:
+            failures += 1
+            print(f"FAIL {arch} × {shape_name} × {mesh_tag}: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

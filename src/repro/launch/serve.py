@@ -1,0 +1,64 @@
+"""Batched serving driver: continuous greedy decode over a request batch
+with a step-level KV cache (tiny configs run on CPU; full configs lower on
+the production mesh via dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --tiny \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, tiny_config
+from ..models import build_model
+from .steps import build_serve_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = tiny_config(args.arch) if args.tiny else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    serve = jax.jit(build_serve_step(model))
+
+    rng = np.random.default_rng(args.seed)
+    max_len = args.prompt_len + args.gen + 1
+    cache = model.init_cache(args.batch, max_len)
+    prompts = rng.integers(1, cfg.vocab_size, (args.batch, args.prompt_len))
+
+    # prefill via the decode path (cache-consistent; fine at demo scale)
+    tok = jnp.asarray(prompts[:, :1], jnp.int32)
+    for t in range(args.prompt_len - 1):
+        _, cache = serve(params, cache, jnp.asarray(prompts[:, t:t+1], jnp.int32), t)
+
+    tok = jnp.asarray(prompts[:, -1:], jnp.int32)
+    out = []
+    t0 = time.time()
+    for t in range(args.gen):
+        tok, cache = serve(params, cache, tok, args.prompt_len - 1 + t)
+        out.append(np.asarray(tok)[:, 0])
+    dt = time.time() - t0
+    gen = np.stack(out, axis=1)
+    print(f"generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    for b in range(min(args.batch, 2)):
+        print(f"  req{b}: {gen[b][:16].tolist()}...")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

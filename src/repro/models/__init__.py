@@ -1,0 +1,5 @@
+"""Model zoo: layers, attention (GQA/MLA), MoE, SSM (RWKV6/Mamba), assemblies."""
+
+from .zoo import build_model, input_specs, input_shardings
+
+__all__ = ["build_model", "input_specs", "input_shardings"]

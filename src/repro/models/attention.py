@@ -1,0 +1,465 @@
+"""Attention: GQA (+qk-norm, biases, M-RoPE, NoPE) and DeepSeek MLA.
+
+Train/prefill use a **blockwise (flash) attention** written with a
+``lax.scan`` over KV chunks and an online softmax — O(S·chunk) memory, any
+backend; the Pallas TPU kernel in ``repro.kernels.flash_attention``
+implements the same contraction for the hot path and is validated against
+``repro.kernels.ref.mha_reference`` (which this path also matches).
+
+Decode uses one-token attention against a KV cache whose **sequence axis is
+sharded over the `model` mesh axis** — the GSPMD partitioner turns the
+softmax/normalization into the flash-decoding all-reduce pattern (verified
+during design; see DESIGN.md §4).  MLA decodes in the *absorbed* form
+(scores in the kv_lora latent space) so the per-step FLOPs stay O(lora·S),
+never re-expanding the cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .layers import (apply_mrope, apply_rope, dense_init, dtype_of,
+                     rms_normalize)
+
+ATTN_CHUNK = 512  # KV chunk for the blockwise scan
+USE_FLASH_VJP = True  # custom backward recomputes probabilities per chunk
+
+
+# --------------------------------------------------------------------------
+# blockwise attention core (shared by GQA and MLA forward)
+# --------------------------------------------------------------------------
+
+def _flash_fwd_core(qg, kc, vc, pc, q_positions, causal, softcap):
+    """qg (B,Sq,KVH,G,hd) f32·scaled; kc/vc (nc,B,ck,KVH,hd); pc (nc,B,ck).
+    Returns (out f32 (B,Sq,KVH,G,hdv), lse (B,Sq,KVH,G))."""
+    b, sq, kvh, g, hd = qg.shape
+    hdv = vc.shape[-1]
+
+    def step(carry, inp):
+        acc, m, l = carry
+        kb, vb, pb = inp
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb.astype(jnp.float32))
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        valid = (pb >= 0)[:, None, None, None, :]
+        if causal:
+            valid = valid & (pb[:, None, :] <= q_positions[:, :, None])[:, :, None, None, :]
+        s = jnp.where(valid, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vb.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    init = (jnp.zeros((b, sq, kvh, g, hdv), jnp.float32),
+            jnp.full((b, sq, kvh, g), -1e30, jnp.float32),
+            jnp.zeros((b, sq, kvh, g), jnp.float32))
+    (acc, m, l), _ = jax.lax.scan(step, init, (kc, vc, pc))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+def _prep(q, k, v, kv_positions, chunk):
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / (hd ** 0.5)
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=-1)
+    n_chunks = k.shape[1] // chunk
+    qg = q.reshape(b, sq, kvh, g, hd).astype(jnp.float32) * scale
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, chunk, kvh, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, chunk, kvh, v.shape[-1]), 1, 0)
+    pc = jnp.moveaxis(kv_positions.reshape(b, n_chunks, chunk), 1, 0)
+    return qg, kc, vc, pc, pad, scale
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _flash(q, k, v, q_positions, kv_positions, causal, softcap, chunk):
+    qg, kc, vc, pc, _, _ = _prep(q, k, v, kv_positions, chunk)
+    out, _ = _flash_fwd_core(qg, kc, vc, pc, q_positions, causal, softcap)
+    b, sq, kvh, g, hdv = out.shape
+    return out.reshape(b, sq, kvh * g, hdv).astype(q.dtype)
+
+
+def _flash_fwd(q, k, v, q_positions, kv_positions, causal, softcap, chunk):
+    qg, kc, vc, pc, _, _ = _prep(q, k, v, kv_positions, chunk)
+    out, lse = _flash_fwd_core(qg, kc, vc, pc, q_positions, causal, softcap)
+    b, sq, kvh, g, hdv = out.shape
+    res = (q, k, v, q_positions, kv_positions, out, lse)
+    return out.reshape(b, sq, kvh * g, hdv).astype(q.dtype), res
+
+
+def _flash_bwd(causal, softcap, chunk, res, dout):
+    """Flash backward: recompute per-chunk probabilities — no stacked S×S
+    residuals (the memory-term killer the dry-run exposed)."""
+    q, k, v, q_positions, kv_positions, out, lse = res
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg, kc, vc, pc, pad, scale = _prep(q, k, v, kv_positions, chunk)
+    do = dout.reshape(b, sq, kvh, g, -1).astype(jnp.float32)
+    delta = jnp.sum(do * out, axis=-1)                      # (b,sq,kvh,g)
+
+    def step(dq_acc, inp):
+        kb, vb, pb = inp
+        s_raw = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb.astype(jnp.float32))
+        if softcap:
+            s = softcap * jnp.tanh(s_raw / softcap)
+        else:
+            s = s_raw
+        valid = (pb >= 0)[:, None, None, None, :]
+        if causal:
+            valid = valid & (pb[:, None, :] <= q_positions[:, :, None])[:, :, None, None, :]
+        s = jnp.where(valid, s, -1e30)
+        p = jnp.exp(s - lse[..., None])                     # (b,sq,kvh,g,c)
+        dv_b = jnp.einsum("bqkgc,bqkgd->bckd", p, do)
+        dp = jnp.einsum("bqkgd,bckd->bqkgc", do, vb.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        if softcap:
+            ds = ds * (1.0 - jnp.square(jnp.tanh(s_raw / softcap)))
+        ds = jnp.where(valid, ds, 0.0)
+        dq_acc = dq_acc + jnp.einsum("bqkgc,bckd->bqkgd", ds,
+                                     kb.astype(jnp.float32))
+        dk_b = jnp.einsum("bqkgc,bqkgd->bckd", ds, qg)
+        return dq_acc, (dk_b, dv_b)
+
+    dq0 = jnp.zeros(qg.shape, jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(step, dq0, (kc, vc, pc))
+    dq = (dq * scale).reshape(b, sq, h, hd).astype(q.dtype)
+    dk = jnp.moveaxis(dk_c, 0, 1).reshape(b, -1, kvh, hd)[:, :skv].astype(k.dtype)
+    dv = jnp.moveaxis(dv_c, 0, 1).reshape(b, -1, kvh, v.shape[-1])[:, :skv].astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, q_positions, kv_positions, causal: bool,
+                    softcap: float = 0.0, chunk: int = ATTN_CHUNK):
+    """q (B,Sq,H,hd) k/v (B,Skv,KV,hd[v]) -> (B,Sq,H,hd_v).
+
+    GQA handled by head grouping; online softmax in f32; KV chunks padded to
+    ``chunk`` and masked via kv_positions (pad rows get position -1).  With
+    USE_FLASH_VJP the backward recomputes chunk probabilities (true flash
+    backward) instead of letting autodiff stack S×S residuals.
+    """
+    if USE_FLASH_VJP:
+        return _flash(q, k, v, q_positions, kv_positions, causal, softcap, chunk)
+    qg, kc, vc, pc, _, _ = _prep(q, k, v, kv_positions, chunk)
+    out, _ = _flash_fwd_core(qg, kc, vc, pc, q_positions, causal, softcap)
+    b, sq, kvh, g, hdv = out.shape
+    return out.reshape(b, sq, kvh * g, hdv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention module
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.head_dim_
+    hq, kv = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    pd = dtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, hq, hd), pd),
+        "wk": dense_init(ks[1], (d, kv, hd), pd),
+        "wv": dense_init(ks[2], (d, kv, hd), pd),
+        "wo": dense_init(ks[3], (hq, hd, d), pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), pd)
+        p["bk"] = jnp.zeros((kv, hd), pd)
+        p["bv"] = jnp.zeros((kv, hd), pd)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), pd)
+        p["k_norm"] = jnp.ones((hd,), pd)
+    return p
+
+
+def attention_specs(cfg: ModelConfig):
+    tp = cfg.pad_heads_to
+    kv_ax = "model" if (tp > 1 and cfg.n_kv_heads_padded % tp == 0) else None
+    p = {
+        "wq": P(None, "model", None),
+        "wk": P(None, kv_ax, None),
+        "wv": P(None, kv_ax, None),
+        "wo": P("model", None, None),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P("model", None)
+        p["bk"] = P(kv_ax, None)
+        p["bv"] = P(kv_ax, None)
+    if cfg.qk_norm:
+        p["q_norm"] = P(None)
+        p["k_norm"] = P(None)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, use_rope: bool,
+                 mrope_positions=None):
+    cd = dtype_of(cfg, "compute")
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if cfg.qk_norm:
+        q = rms_normalize(q) * p["q_norm"].astype(cd)
+        k = rms_normalize(k) * p["k_norm"].astype(cd)
+    if use_rope and cfg.rope_theta > 0:
+        if cfg.mrope_sections and mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(p, x, cfg: ModelConfig, positions, *, causal=True,
+                 use_rope=True, mrope_positions=None, kv=None):
+    """Full-sequence attention (train / prefill).
+
+    ``kv``: optional (k, v, kv_positions) for cross-attention — the queries
+    come from x, keys/values are precomputed (whisper decoder).
+    """
+    cd = dtype_of(cfg, "compute")
+    x = x.astype(cd)
+    if kv is None:
+        q, k, v = _project_qkv(p, x, cfg, positions, use_rope, mrope_positions)
+        kv_pos = positions
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(cd)
+        k, v, kv_pos = kv
+    out = flash_attention(q, k, v, q_positions=positions, kv_positions=kv_pos,
+                          causal=causal, softcap=cfg.attn_logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+
+
+def project_kv(p, x, cfg: ModelConfig, positions, use_rope=False):
+    """Cross-attention KV from encoder output (cached once)."""
+    cd = dtype_of(cfg, "compute")
+    k = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if use_rope and cfg.rope_theta > 0:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+# ---- decode ---------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    hd = cfg.head_dim_
+    kv = cfg.n_kv_heads_padded
+    if cfg.kv_cache_dtype == "int8":
+        # quantized cache: int8 payload + per-(token, kv-head) f16 scales —
+        # halves the decode memory term (the dominant roofline term there)
+        return {"k": jnp.zeros((batch, max_len, kv, hd), jnp.int8),
+                "v": jnp.zeros((batch, max_len, kv, hd), jnp.int8),
+                "k_scale": jnp.zeros((batch, max_len, kv), jnp.float16),
+                "v_scale": jnp.zeros((batch, max_len, kv), jnp.float16)}
+    dtype = dtype or dtype_of(cfg, "compute")
+    return {"k": jnp.zeros((batch, max_len, kv, hd), dtype),
+            "v": jnp.zeros((batch, max_len, kv, hd), dtype)}
+
+
+def kv_cache_specs(cfg: ModelConfig):
+    # batch over data, sequence over model: the flash-decoding layout
+    p = {"k": P("data", "model", None, None), "v": P("data", "model", None, None)}
+    if cfg.kv_cache_dtype == "int8":
+        p["k_scale"] = P("data", "model", None)
+        p["v_scale"] = P("data", "model", None)
+    return p
+
+
+def _quantize_kv(x):
+    """(B, 1, KV, hd) -> (int8 payload, f16 scale (B, 1, KV))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def attn_decode(p, x, cache, pos, cfg: ModelConfig, *, use_rope=True,
+                mrope_positions=None, cross_kv=None):
+    """One-token decode.  x (B,1,d); pos scalar int32 (current length).
+
+    Returns (y (B,1,d), new_cache).  Cache seq axis may be sharded: the DUS
+    write and the softmax over the seq axis both partition (see DESIGN.md).
+    """
+    cd = dtype_of(cfg, "compute")
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wq"].astype(cd))
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(cd)
+        k, v = cross_kv["k"], cross_kv["v"]
+        kv_len = k.shape[1]
+        valid = jnp.ones((b, kv_len), bool)
+        new_cache = cache
+    else:
+        q, k_new, v_new = _project_qkv(p, x, cfg, positions, use_rope, mrope_positions)
+        if cfg.kv_cache_dtype == "int8":
+            k8, ks = _quantize_kv(k_new)
+            v8, vs = _quantize_kv(v_new)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(cache["k"], k8, (0, pos, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(cache["v"], v8, (0, pos, 0, 0)),
+                "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                                        (0, pos, 0)),
+                "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                                        (0, pos, 0)),
+            }
+            k = (new_cache["k"].astype(jnp.float32)
+                 * new_cache["k_scale"].astype(jnp.float32)[..., None])
+            v = (new_cache["v"].astype(jnp.float32)
+                 * new_cache["v_scale"].astype(jnp.float32)[..., None])
+        else:
+            k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                             (0, pos, 0, 0))
+            v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                             (0, pos, 0, 0))
+            new_cache = {"k": k, "v": v}
+        kv_len = k.shape[1]
+        valid = (jnp.arange(kv_len)[None, :] <= pos)
+
+    kvh = k.shape[2]
+    g = q.shape[2] // kvh
+    qg = q.reshape(b, kvh, g, q.shape[-1]).astype(jnp.float32) / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    if cfg.attn_logit_softcap:
+        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    out = out.reshape(b, 1, -1).astype(cd)
+    y = jnp.einsum("bsf,fd->bsd", out,
+                   p["wo"].reshape(-1, cfg.d_model).astype(cd))
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — multi-head latent attention
+# --------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads_padded
+    nope, rope_d, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lora = cfg.kv_lora_rank
+    pd = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, h, nope + rope_d), pd),
+        "w_dkv": dense_init(ks[1], (d, lora + rope_d), pd),
+        "kv_norm": jnp.ones((lora,), pd),
+        "w_uk": dense_init(ks[2], (lora, h, nope), pd),
+        "w_uv": dense_init(ks[3], (lora, h, vh), pd),
+        "wo": dense_init(ks[4], (h, vh, d), pd),
+    }
+
+
+def mla_specs(cfg: ModelConfig):
+    return {
+        "wq": P(None, "model", None),
+        "w_dkv": P(None, None),
+        "kv_norm": P(None),
+        "w_uk": P(None, "model", None),
+        "w_uv": P(None, "model", None),
+        "wo": P("model", None, None),
+    }
+
+
+def _mla_qc(p, x, cfg: ModelConfig, positions):
+    """Shared q / compressed-kv projections.  Returns (q_nope, q_rope, ckv, k_rope)."""
+    cd = dtype_of(cfg, "compute")
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    dkv = x @ p["w_dkv"].astype(cd)                      # (B,S,lora+rope)
+    ckv = rms_normalize(dkv[..., : cfg.kv_lora_rank]) * p["kv_norm"].astype(cd)
+    k_rope = apply_rope(dkv[..., cfg.kv_lora_rank:][:, :, None, :], positions,
+                        cfg.rope_theta)                  # (B,S,1,rope)
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_forward(p, x, cfg: ModelConfig, positions, *, causal=True, **_):
+    cd = dtype_of(cfg, "compute")
+    x = x.astype(cd)
+    h = cfg.n_heads_padded
+    q_nope, q_rope, ckv, k_rope = _mla_qc(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsl,lhk->bshk", ckv, p["w_uk"].astype(cd))
+    v = jnp.einsum("bsl,lhk->bshk", ckv, p["w_uv"].astype(cd))
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, k_rope.shape[:2] + (h, k_rope.shape[-1]))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = flash_attention(q, k, v, q_positions=positions, kv_positions=positions,
+                          causal=causal)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or dtype_of(cfg, "compute")
+    return {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype)}
+
+
+def mla_cache_specs(cfg: ModelConfig):
+    return {"ckv": P("data", "model", None), "kpe": P("data", "model", None)}
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig, **_):
+    """Absorbed-form MLA decode: scores/values in the lora latent space.
+
+    q_eff[b,h,l] = Σ_k q_nope[b,h,k]·w_uk[l,h,k];  s = q_eff·ckv + q_rope·k_pe;
+    o_latent = Σ_s w·ckv[s];  out = o_latent·w_uv.  Per-step FLOPs O(H·lora·S)
+    with no cache re-expansion.
+    """
+    cd = dtype_of(cfg, "compute")
+    b = x.shape[0]
+    x = x.astype(cd)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope, ckv_new, k_rope_new = _mla_qc(p, x, cfg, positions)
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_new[:, :1].astype(cache["ckv"].dtype), (0, pos, 0))
+    kpe = jax.lax.dynamic_update_slice(
+        cache["kpe"], k_rope_new[:, 0].astype(cache["kpe"].dtype), (0, pos, 0))
+    new_cache = {"ckv": ckv, "kpe": kpe}
+
+    scale = 1.0 / (cfg.head_dim_ ** 0.5)
+    q_eff = jnp.einsum("bshk,lhk->bhl", q_nope, p["w_uk"].astype(cd))   # (B,H,lora)
+    s = (jnp.einsum("bhl,bsl->bhs", q_eff.astype(jnp.float32), ckv.astype(jnp.float32))
+         + jnp.einsum("bshr,btr->bht", q_rope.astype(jnp.float32),
+                      kpe.astype(jnp.float32))) * scale
+    valid = jnp.arange(ckv.shape[1])[None, None, :] <= pos
+    s = jnp.where(valid, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsl->bhl", w, ckv.astype(jnp.float32)).astype(cd)
+    o = jnp.einsum("bhl,lhk->bhk", o_lat, p["w_uv"].astype(cd))
+    y = jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(cd))
+    return y[:, None, :], new_cache

@@ -1,0 +1,186 @@
+"""Encoder-decoder backbone (whisper-small).
+
+Encoder: precomputed frame embeddings (conv frontend stubbed per the
+assignment) + sinusoidal positions, bidirectional self-attention layers.
+Decoder: token embeddings + sinusoidal positions, causal self-attention +
+cross-attention to the encoder output.  LayerNorm/GELU per whisper.
+
+Decode path: self-attn KV cache (seq-sharded) + cross-attn KV computed once
+from the encoder output and carried in the cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from .layers import (apply_ffn, apply_norm, dtype_of, embed, embedding_specs,
+                     ffn_specs, init_embedding, init_ffn, init_norm,
+                     norm_specs, sinusoidal_positions, unembed)
+from .transformer import softmax_xent
+
+CROSS_LEN = 4096  # encoder context carried into decode cells (stub constant)
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 4)
+    return {"norm1": init_norm(ks[0], cfg), "attn": attn.init_attention(ks[1], cfg),
+            "norm2": init_norm(ks[2], cfg), "ffn": init_ffn(ks[3], cfg)}
+
+
+def _enc_layer_specs(cfg):
+    return {"norm1": norm_specs(cfg), "attn": attn.attention_specs(cfg),
+            "norm2": norm_specs(cfg), "ffn": ffn_specs(cfg)}
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 6)
+    return {"norm1": init_norm(ks[0], cfg), "self_attn": attn.init_attention(ks[1], cfg),
+            "norm2": init_norm(ks[2], cfg), "cross_attn": attn.init_attention(ks[3], cfg),
+            "norm3": init_norm(ks[4], cfg), "ffn": init_ffn(ks[5], cfg)}
+
+
+def _dec_layer_specs(cfg):
+    return {"norm1": norm_specs(cfg), "self_attn": attn.attention_specs(cfg),
+            "norm2": norm_specs(cfg), "cross_attn": attn.attention_specs(cfg),
+            "norm3": norm_specs(cfg), "ffn": ffn_specs(cfg)}
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+
+        def stack(init_fn, k, n):
+            return jax.vmap(lambda kk: init_fn(kk, cfg))(jax.random.split(k, n))
+
+        return {
+            "embedding": init_embedding(ks[0], cfg),
+            "encoder": stack(_init_enc_layer, ks[1], cfg.n_encoder_layers),
+            "decoder": stack(_init_dec_layer, ks[2], cfg.n_layers),
+            "enc_norm": init_norm(ks[3], cfg),
+            "final_norm": init_norm(ks[4], cfg),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        lift = lambda tree: jax.tree.map(lambda s: P(*((None,) + tuple(s))), tree,
+                                         is_leaf=lambda s: isinstance(s, P))
+        return {
+            "embedding": embedding_specs(cfg),
+            "encoder": lift(_enc_layer_specs(cfg)),
+            "decoder": lift(_dec_layer_specs(cfg)),
+            "enc_norm": norm_specs(cfg),
+            "final_norm": norm_specs(cfg),
+        }
+
+    # ---- encoder ------------------------------------------------------
+    def encode(self, params, frames):
+        """frames (B, S_enc, d_model) — precomputed frontend embeddings."""
+        cfg = self.cfg
+        cd = dtype_of(cfg, "compute")
+        b, s, _ = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        x = frames.astype(cd) + sinusoidal_positions(s, cfg.d_model, cd)[None]
+
+        def body(x, lp):
+            h = apply_norm(lp["norm1"], x, cfg)
+            x = x + attn.attn_forward(lp["attn"], h, cfg, pos, causal=False,
+                                      use_rope=False)
+            h2 = apply_norm(lp["norm2"], x, cfg)
+            return x + apply_ffn(lp["ffn"], h2, cfg), None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return apply_norm(params["enc_norm"], x, cfg)
+
+    # ---- decoder (teacher-forced) ---------------------------------------
+    def forward(self, params, frames, tokens):
+        cfg = self.cfg
+        cd = dtype_of(cfg, "compute")
+        enc = self.encode(params, frames)
+        b, sd = tokens.shape
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc.shape[1], dtype=jnp.int32)[None], (b, enc.shape[1]))
+        dec_pos = jnp.broadcast_to(jnp.arange(sd, dtype=jnp.int32)[None], (b, sd))
+        x = embed(params["embedding"], tokens, cfg) + \
+            sinusoidal_positions(sd, cfg.d_model, cd)[None]
+
+        def body(x, lp):
+            h = apply_norm(lp["norm1"], x, cfg)
+            x = x + attn.attn_forward(lp["self_attn"], h, cfg, dec_pos,
+                                      causal=True, use_rope=False)
+            h2 = apply_norm(lp["norm2"], x, cfg)
+            ck, cv = attn.project_kv(lp["cross_attn"], enc, cfg, enc_pos)
+            x = x + attn.attn_forward(lp["cross_attn"], h2, cfg, dec_pos,
+                                      causal=False, use_rope=False,
+                                      kv=(ck, cv, enc_pos))
+            h3 = apply_norm(lp["norm3"], x, cfg)
+            return x + apply_ffn(lp["ffn"], h3, cfg), None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["decoder"])
+        x = apply_norm(params["final_norm"], x, cfg)
+        return unembed(params["embedding"], x, cfg), {}
+
+    def loss_fn(self, params, batch):
+        logits, _ = self.forward(params, batch["frames"], batch["tokens"])
+        ce = softmax_xent(logits, batch["targets"])
+        return ce, {"ce": ce}
+
+    # ---- decode ---------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        one = {
+            "self": attn.init_kv_cache(cfg, batch, max_len),
+            "cross": {"k": jnp.zeros((batch, CROSS_LEN, cfg.n_kv_heads_padded, hd),
+                                     dtype_of(cfg, "compute")),
+                      "v": jnp.zeros((batch, CROSS_LEN, cfg.n_kv_heads_padded, hd),
+                                     dtype_of(cfg, "compute"))},
+        }
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(), one)
+
+    def cache_specs(self):
+        cfg = self.cfg
+        one = {"self": attn.kv_cache_specs(cfg),
+               "cross": {"k": P("data", "model", None, None),
+                         "v": P("data", "model", None, None)}}
+        return jax.tree.map(lambda s: P(*((None,) + tuple(s))), one,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        cd = dtype_of(cfg, "compute")
+        x = embed(params["embedding"], tokens, cfg)
+        # sinusoidal embedding of the single current position
+        dim = jnp.arange(cfg.d_model // 2, dtype=jnp.float32)
+        ang = jnp.asarray(pos, jnp.float32) / jnp.power(10000.0, 2.0 * dim / cfg.d_model)
+        x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]).astype(cd)[None, None, :]
+
+        def body(x, xs):
+            lp, lc = xs
+            h = apply_norm(lp["norm1"], x, cfg)
+            y, new_self = attn.attn_decode(lp["self_attn"], h, lc["self"], pos,
+                                           cfg, use_rope=False)
+            x = x + y
+            h2 = apply_norm(lp["norm2"], x, cfg)
+            y2, _ = attn.attn_decode(lp["cross_attn"], h2, None, pos, cfg,
+                                     use_rope=False, cross_kv=lc["cross"])
+            x = x + y2
+            h3 = apply_norm(lp["norm3"], x, cfg)
+            x = x + apply_ffn(lp["ffn"], h3, cfg)
+            return x, {"self": new_self, "cross": lc["cross"]}
+
+        x, new_cache = jax.lax.scan(body, x, (params["decoder"], cache))
+        x = apply_norm(params["final_norm"], x, cfg)
+        return unembed(params["embedding"], x, cfg), new_cache

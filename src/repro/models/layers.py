@@ -1,0 +1,226 @@
+"""Shared model building blocks (pure-functional: params are nested dicts).
+
+Conventions
+-----------
+* Every ``init_*`` has a sibling ``*_specs`` returning an identically
+  structured pytree of ``jax.sharding.PartitionSpec`` (tested for treedef
+  equality across all archs).
+* Activations flow in ``cfg.compute_dtype`` (bf16 by default); params and
+  norm math in f32; matmul accumulation left to XLA (HIGHEST for norms).
+* "model" is the tensor-parallel mesh axis; batch axes are sharded by the
+  in_shardings of the step functions, not by per-op constraints.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def dtype_of(cfg: ModelConfig, kind: str = "param"):
+    return jnp.dtype(cfg.param_dtype if kind == "param" else cfg.compute_dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_norm(key, cfg: ModelConfig, dim: Optional[int] = None):
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), dtype_of(cfg))}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype_of(cfg))
+    return p
+
+
+def norm_specs(cfg: ModelConfig):
+    p = {"scale": P(None)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = P(None)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_normalize(x, eps=1e-6):
+    """Scale-free rmsnorm (qk-norm without learned scale fallback)."""
+    xf = x.astype(jnp.float32)
+    out = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# feed-forward
+# --------------------------------------------------------------------------
+
+def init_ffn(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    pd = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "swiglu":
+        return {"w_gate": dense_init(ks[0], (d, ff), pd),
+                "w_up": dense_init(ks[1], (d, ff), pd),
+                "w_down": dense_init(ks[2], (ff, d), pd)}
+    return {"w_up": dense_init(ks[0], (d, ff), pd),
+            "w_down": dense_init(ks[1], (ff, d), pd)}
+
+
+def ffn_specs(cfg: ModelConfig):
+    if cfg.activation == "swiglu":
+        return {"w_gate": P(None, "model"), "w_up": P(None, "model"),
+                "w_down": P("model", None)}
+    return {"w_up": P(None, "model"), "w_down": P("model", None)}
+
+
+def apply_ffn(p, x, cfg: ModelConfig):
+    cd = dtype_of(cfg, "compute")
+    x = x.astype(cd)
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(cd)) * (x @ p["w_up"].astype(cd))
+    elif cfg.activation == "relu_sq":
+        h = jnp.square(jax.nn.relu(x @ p["w_up"].astype(cd)))
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["w_up"].astype(cd))
+    return h @ p["w_down"].astype(cd)
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig):
+    pd = dtype_of(cfg)
+    ks = jax.random.split(key, 2)
+    p = {"table": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), pd, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size), pd)
+    return p
+
+
+def embedding_specs(cfg: ModelConfig):
+    p = {"table": P("model", None)}          # vocab-sharded; gather partitions
+    if not cfg.tie_embeddings:
+        p["unembed"] = P(None, "model")      # logits sharded over vocab
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    cd = dtype_of(cfg, "compute")
+    return jnp.take(p["table"], tokens, axis=0).astype(cd)
+
+
+def unembed(p, x, cfg: ModelConfig):
+    cd = dtype_of(cfg, "compute")
+    w = p["table"].T if cfg.tie_embeddings else p["unembed"]
+    logits = x.astype(cd) @ w.astype(cd)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+# --------------------------------------------------------------------------
+# positions: RoPE, M-RoPE, sinusoidal
+# --------------------------------------------------------------------------
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., S) -> angles (..., S, head_dim//2) in f32."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return positions[..., None].astype(jnp.float32) * inv_freq
+
+
+def _rotate(x, angles):
+    """x (..., hd) with angles (..., hd/2): GPT-NeoX half rotation, f32 math."""
+    xf = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = xf[..., :half], xf[..., half:]
+    c, s = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def apply_rope(x, positions, theta: float):
+    """x (B, S, H, hd), positions (B, S)."""
+    angles = _rope_angles(positions, x.shape[-1], theta)      # (B, S, hd/2)
+    return _rotate(x, angles[..., None, :])                   # broadcast heads
+
+
+def apply_mrope(x, positions3, sections: Sequence[int], theta: float):
+    """Qwen2-VL M-RoPE.  x (B, S, H, hd); positions3 (3, B, S); sections sum
+    to hd/2 — each frequency band takes its angle from its own position
+    stream (temporal / height / width)."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    angles_streams = _rope_angles(positions3, x.shape[-1], theta)  # (3, B, S, half)
+    pieces, start = [], 0
+    for i, sec in enumerate(sections):
+        pieces.append(angles_streams[i, ..., start:start + sec])
+        start += sec
+    angles = jnp.concatenate(pieces, axis=-1)                 # (B, S, half)
+    return _rotate(x, angles[..., None, :])
+
+
+def sinusoidal_positions(n: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# chunked scan with checkpointed inner chunks (SSM memory workhorse)
+# --------------------------------------------------------------------------
+
+def chunked_scan(step_fn, init_state, xs, chunk_size: int, remat: bool = True):
+    """scan(step_fn) over time with O(S/chunk) stored states.
+
+    step_fn(state, x_t) -> (state, y_t); xs: pytree with leading time axis S
+    (S divisible by chunk_size — callers pad).  Backward recomputes inside
+    each chunk (jax.checkpoint), storing only chunk-boundary states: the
+    standard remat-chunked recurrence used in lieu of a fused TPU scan kernel.
+    """
+    s = jax.tree.leaves(xs)[0].shape[0]
+    if s % chunk_size:
+        raise ValueError(f"time axis {s} not divisible by chunk {chunk_size}")
+    n_chunks = s // chunk_size
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((n_chunks, chunk_size) + a.shape[1:]), xs)
+
+    def run_chunk(state, chunk_xs):
+        return jax.lax.scan(step_fn, state, chunk_xs)
+
+    if remat:
+        run_chunk = jax.checkpoint(run_chunk)
+
+    final, ys = jax.lax.scan(run_chunk, init_state, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((s,) + a.shape[2:]), ys)
+    return final, ys

@@ -1,0 +1,189 @@
+"""Mixture-of-Experts: GShard-style capacity routing, expert-parallel layout.
+
+Train/prefill path (``moe_ffn``): per-sequence token-choice routing —
+softmax router, top-k, positions-in-expert via cumulative counts (no sort,
+no (S,E,C) dispatch tensor), scatter into (B, E, C, d) expert buckets,
+batched expert matmuls, gather+weighted-combine back.  Expert axis E is
+sharded over the `model` mesh axis (expert parallelism): the scatter/gather
+over the sharded E dim partitions into masked ops + an all-reduce — the
+GSPMD analogue of the MoE all-to-all (flagged in EXPERIMENTS.md §Perf as a
+hillclimb target).
+
+Decode path (``moe_ffn_decode``): with B·top_k ≥ E every expert is hit
+anyway, so decode computes all experts densely and combines with router
+weights — memory-bound like the rest of decode, no routing scatter.
+
+Shared experts (DeepSeek/Llama4) are a plain FFN added to the routed output.
+Router z-loss and load-balance aux loss are returned for the train loop.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, pad_to
+from ..dist.sharding import shard_hint
+from .layers import dense_init, dtype_of
+
+__all__ = ["init_moe", "moe_specs", "moe_ffn", "moe_ffn_decode"]
+
+
+def _expert_mats(cfg: ModelConfig):
+    return 3 if cfg.activation == "swiglu" else 2
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, ff, e = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts
+    pd = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    p = {"router": dense_init(ks[0], (d, e), pd, scale=0.02)}
+    if cfg.activation == "swiglu":
+        p["w_gate"] = dense_init(ks[1], (e, d, ff), pd)
+        p["w_up"] = dense_init(ks[2], (e, d, ff), pd)
+    else:
+        p["w_up"] = dense_init(ks[2], (e, d, ff), pd)
+    p["w_down"] = dense_init(ks[3], (e, ff, d), pd)
+    if cfg.n_shared_experts:
+        sf = ff * cfg.n_shared_experts
+        sks = jax.random.split(ks[4], 3)
+        p["shared"] = {"w_gate": dense_init(sks[0], (d, sf), pd),
+                       "w_up": dense_init(sks[1], (d, sf), pd),
+                       "w_down": dense_init(sks[2], (sf, d), pd)}
+    return p
+
+
+def moe_specs(cfg: ModelConfig):
+    p = {"router": P(None, None)}
+    if cfg.activation == "swiglu":
+        p["w_gate"] = P("model", None, None)
+        p["w_up"] = P("model", None, None)
+    else:
+        p["w_up"] = P("model", None, None)
+    p["w_down"] = P("model", None, None)
+    if cfg.n_shared_experts:
+        p["shared"] = {"w_gate": P(None, "model"), "w_up": P(None, "model"),
+                       "w_down": P("model", None)}
+    return p
+
+
+def _router(p, x, cfg: ModelConfig):
+    """x (..., d) -> (weights (..., k), idx (..., k), aux losses)."""
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # aux: load-balance (Switch) + router z-loss
+    me = jnp.mean(probs.reshape(-1, cfg.n_experts), axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(idx.reshape(-1, cfg.top_k), cfg.n_experts).sum(1), axis=0)
+    lb_loss = cfg.n_experts * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return w, idx, lb_loss, z_loss
+
+
+def _shared_ffn(p, x, cfg: ModelConfig):
+    cd = dtype_of(cfg, "compute")
+    sp = p["shared"]
+    h = jax.nn.silu(x @ sp["w_gate"].astype(cd)) * (x @ sp["w_up"].astype(cd))
+    return h @ sp["w_down"].astype(cd)
+
+
+def _expert_apply(p, buckets, cfg: ModelConfig):
+    """buckets (B, E, C, d) -> (B, E, C, d) through per-expert FFN."""
+    cd = dtype_of(cfg, "compute")
+    if cfg.activation == "swiglu":
+        h = (jax.nn.silu(jnp.einsum("becd,edf->becf", buckets, p["w_gate"].astype(cd)))
+             * jnp.einsum("becd,edf->becf", buckets, p["w_up"].astype(cd)))
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", buckets, p["w_up"].astype(cd)))
+    return jnp.einsum("becf,efd->becd", h, p["w_down"].astype(cd))
+
+
+def moe_ffn(p, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x (B, S, d) -> (out, lb_loss, z_loss).  Per-sequence capacity routing."""
+    cd = dtype_of(cfg, "compute")
+    x = x.astype(cd)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = pad_to(max(int(s * k / e * cfg.capacity_factor), 4), 4)
+
+    w, idx, lb_loss, z_loss = _router(p, x, cfg)         # (B,S,k)
+
+    # position of each (token, choice) within its expert, per sequence
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)     # (B,S,k,E)
+    flat = onehot.reshape(b, s * k, e)
+    pos_all = jnp.cumsum(flat, axis=1) - 1               # (B,S*k,E) exclusive count
+    pos = jnp.take_along_axis(
+        pos_all.reshape(b, s, k, e), idx[..., None], axis=-1)[..., 0]  # (B,S,k)
+    keep = pos < cap
+
+    # scatter tokens into (B, E, C, d) buckets (dropped -> clamped, zeroed)
+    bi = jnp.broadcast_to(jnp.arange(b)[:, None, None], (b, s, k))
+    pos_c = jnp.clip(pos, 0, cap - 1)
+    vals = jnp.broadcast_to(x[:, :, None, :], (b, s, k, d)) * keep[..., None].astype(cd)
+    # batched scatter (vmap over the sequence row) — lowers to a scatter with
+    # batching dims, which the partitioner splits along batch cleanly (an
+    # explicit leading batch index array would not).  Dropped (over-capacity)
+    # tokens route to a dedicated dump slot so they can never collide with a
+    # live slot.
+    slot = jnp.where(keep, idx * cap + pos_c, e * cap)   # (B,S,k) in [0, E*cap]
+
+    def dispatch_one(vals_b, slot_b):
+        return jnp.zeros((e * cap + 1, d), cd).at[slot_b.reshape(-1)].add(
+            vals_b.reshape(-1, d))[: e * cap]
+
+    buckets = jax.vmap(dispatch_one)(vals, slot).reshape(b, e, cap, d)
+    # The scatter defeats GSPMD propagation: re-pin the expert buckets
+    # (E over model).  Batch shards over data when it divides (the prefill
+    # path); under the train vmap b==1 and spmd_axis_name re-inserts the
+    # block axis instead.
+    b_ax = "data" if (b % 16 == 0) else None
+    buckets = shard_hint(buckets, P(b_ax, "model", None, None))
+
+    out_b = _expert_apply(p, buckets, cfg)               # (B,E,C,d)
+    out_b = shard_hint(out_b, P(b_ax, "model", None, None))
+
+    # Combine on the bucket side: scale each slot by its router weight and
+    # scatter-add slots back to tokens.  Each model shard only touches its
+    # local experts' slots, so the cross-shard reduction is an all-reduce of
+    # (S, d) — k× smaller than gathering (S, k, d) first (measured 6× drop
+    # in the dominant MoE collective for deepseek; EXPERIMENTS.md §Perf).
+    w_cd = (w * keep).astype(cd)                         # (B,S,k)
+
+    def combine_one(ob_flat, slot_b, w_b):
+        # slot -> (router weight, destination token); dump slot e*cap inert
+        w_slot = jnp.zeros((e * cap + 1,), cd).at[slot_b.reshape(-1)].add(
+            w_b.reshape(-1))
+        tok = jnp.full((e * cap + 1,), s, jnp.int32).at[slot_b.reshape(-1)].set(
+            jnp.repeat(jnp.arange(s, dtype=jnp.int32), k))
+        ob_pad = jnp.concatenate([ob_flat, jnp.zeros((1, d), cd)], axis=0)
+        scaled = ob_pad * w_slot[:, None]
+        return jnp.zeros((s + 1, d), cd).at[tok].add(scaled)[:s]
+
+    combined = jax.vmap(combine_one)(out_b.reshape(b, e * cap, d), slot, w_cd)
+    if cfg.n_shared_experts:
+        combined = combined + _shared_ffn(p, x, cfg)
+    return combined, lb_loss, z_loss
+
+
+def moe_ffn_decode(p, x, cfg: ModelConfig) -> jnp.ndarray:
+    """x (B, 1, d) -> (B, 1, d): dense all-expert compute, top-k combine."""
+    cd = dtype_of(cfg, "compute")
+    x2 = x[:, 0].astype(cd)                              # (B, d)
+    w, idx, _, _ = _router(p, x2, cfg)                   # (B,k)
+    if cfg.activation == "swiglu":
+        h = (jax.nn.silu(jnp.einsum("bd,edf->ebf", x2, p["w_gate"].astype(cd)))
+             * jnp.einsum("bd,edf->ebf", x2, p["w_up"].astype(cd)))
+    else:
+        h = jax.nn.gelu(jnp.einsum("bd,edf->ebf", x2, p["w_up"].astype(cd)))
+    all_out = jnp.einsum("ebf,efd->ebd", h, p["w_down"].astype(cd))  # (E,B,d)
+    gates = jnp.zeros((x2.shape[0], cfg.n_experts), cd)
+    gates = gates.at[jnp.arange(x2.shape[0])[:, None], idx].add(w.astype(cd))
+    out = jnp.einsum("ebd,be->bd", all_out, gates)
+    if cfg.n_shared_experts:
+        out = out + _shared_ffn(p, x2, cfg)
+    return out[:, None, :]

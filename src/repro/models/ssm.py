@@ -1,0 +1,321 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) time/channel-mix and
+Mamba (S6) selective SSM — train path via the remat-chunked scan in
+``layers.chunked_scan`` (O(S/chunk) stored states), decode via single-step
+recurrence (O(1) state; these archs run the ``long_500k`` cell).
+
+Sharding: the channel/head dimension is sharded over `model`; the recurrent
+states ((B,H,hd,hd) wkv / (B,din,n) ssm) shard the head/channel axis so the
+per-device state stays flat as TP grows.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .layers import chunked_scan, dense_init, dtype_of
+
+SCAN_CHUNK = 128
+RWKV_LORA = 64
+
+
+# ==========================================================================
+# RWKV6
+# ==========================================================================
+
+def init_rwkv_block(key, cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    h, hd = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    pd = dtype_of(cfg)
+    ks = jax.random.split(key, 12)
+    return {
+        # time mix
+        "mu": jax.random.uniform(ks[0], (5, d), pd),            # r,k,v,w,g static lerp
+        "w0": jnp.zeros((d,), pd),
+        "w_lora_a": dense_init(ks[1], (d, RWKV_LORA), pd),
+        "w_lora_b": jnp.zeros((RWKV_LORA, d), pd),
+        "wr": dense_init(ks[2], (d, d), pd),
+        "wk": dense_init(ks[3], (d, d), pd),
+        "wv": dense_init(ks[4], (d, d), pd),
+        "wg": dense_init(ks[5], (d, d), pd),
+        "wo": dense_init(ks[6], (d, d), pd),
+        "u": dense_init(ks[7], (h, hd), pd, scale=0.5),          # per-head bonus
+        "ln_x_scale": jnp.ones((d,), pd),
+        "ln_x_bias": jnp.zeros((d,), pd),
+        # channel mix
+        "cm_mu": jax.random.uniform(ks[8], (2, d), pd),          # k, r
+        "cm_wk": dense_init(ks[9], (d, ff), pd),
+        "cm_wv": dense_init(ks[10], (ff, d), pd),
+        "cm_wr": dense_init(ks[11], (d, d), pd),
+    }
+
+
+def rwkv_block_specs(cfg: ModelConfig):
+    return {
+        "mu": P(None, None), "w0": P("model"),
+        "w_lora_a": P(None, None), "w_lora_b": P(None, "model"),
+        "wr": P(None, "model"), "wk": P(None, "model"),
+        "wv": P(None, "model"), "wg": P(None, "model"),
+        "wo": P("model", None),
+        "u": P("model", None),
+        "ln_x_scale": P("model"), "ln_x_bias": P("model"),
+        "cm_mu": P(None, None),
+        "cm_wk": P(None, "model"), "cm_wv": P("model", None),
+        "cm_wr": P(None, "model"),
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    h, hd = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    return {"tm_x": jnp.zeros((batch, cfg.d_model), dtype),
+            "cm_x": jnp.zeros((batch, cfg.d_model), dtype),
+            "wkv": jnp.zeros((batch, h, hd, hd), dtype)}
+
+
+def rwkv_state_specs(cfg: ModelConfig):
+    return {"tm_x": P("data", "model"), "cm_x": P("data", "model"),
+            "wkv": P("data", "model", None, None)}
+
+
+def _rwkv_projections(p, x, x_prev, cfg: ModelConfig):
+    """Token-shift lerp + projections.  x, x_prev: (..., d)."""
+    cd = dtype_of(cfg, "compute")
+    mu = p["mu"].astype(cd)
+    xm = [x + (x_prev - x) * mu[i] for i in range(5)]            # r,k,v,w,g
+    r = xm[0] @ p["wr"].astype(cd)
+    k = xm[1] @ p["wk"].astype(cd)
+    v = xm[2] @ p["wv"].astype(cd)
+    # data-dependent per-channel decay (Finch): w = exp(-exp(w0 + lora(xw)))
+    lora = jnp.tanh(xm[3] @ p["w_lora_a"].astype(cd)) @ p["w_lora_b"].astype(cd)
+    w = jnp.exp(-jnp.exp((p["w0"].astype(jnp.float32)
+                          + lora.astype(jnp.float32)).clip(-10, 10)))
+    g = jax.nn.silu(xm[4] @ p["wg"].astype(cd))
+    return r, k, v, w.astype(jnp.float32), g
+
+
+def _wkv_step(state, inp):
+    """state (B,H,hd,hd) f32; inp: r,k,v (B,H,hd), w (B,H,hd), u (H,hd)."""
+    r, k, v, w, u = inp
+    kv = jnp.einsum("bhi,bhj->bhij", k, v)                       # outer product
+    out = jnp.einsum("bhi,bhij->bhj", r, state + u[None, :, :, None] * kv)
+    new_state = w[..., None] * state + kv
+    return new_state, out
+
+
+def _group_norm(x, scale, bias, n_heads, eps=1e-5):
+    """Per-head groupnorm over (..., H*hd) flattened heads."""
+    shp = x.shape
+    xh = x.reshape(shp[:-1] + (n_heads, shp[-1] // n_heads)).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(shp) * scale + bias).astype(x.dtype)
+
+
+def rwkv_time_mix(p, x, state, cfg: ModelConfig):
+    """x (B,S,d), state dict -> (out (B,S,d), new_state)."""
+    cd = dtype_of(cfg, "compute")
+    b, s, d = x.shape
+    h, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    x_prev = jnp.concatenate([state["tm_x"][:, None].astype(cd), x[:, :-1]], axis=1)
+    r, k, v, w, g = _rwkv_projections(p, x, x_prev, cfg)
+    rh = r.reshape(b, s, h, hd).astype(jnp.float32)
+    kh = k.reshape(b, s, h, hd).astype(jnp.float32)
+    vh = v.reshape(b, s, h, hd).astype(jnp.float32)
+    wh = w.reshape(b, s, h, hd)
+    u = p["u"].astype(jnp.float32)
+
+    def step(st, inp):
+        return _wkv_step(st, inp + (u,))
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rh, kh, vh, wh))   # time-first
+    new_wkv, ys = chunked_scan(step, state["wkv"].astype(jnp.float32), xs,
+                               min(SCAN_CHUNK, s), remat=cfg.remat)
+    out = jnp.moveaxis(ys, 0, 1).reshape(b, s, d).astype(cd)
+    out = _group_norm(out, p["ln_x_scale"].astype(cd), p["ln_x_bias"].astype(cd), h)
+    out = (out * g) @ p["wo"].astype(cd)
+    new_state = dict(state, tm_x=x[:, -1].astype(state["tm_x"].dtype),
+                     wkv=new_wkv.astype(state["wkv"].dtype))
+    return out, new_state
+
+
+def rwkv_channel_mix(p, x, state, cfg: ModelConfig):
+    cd = dtype_of(cfg, "compute")
+    x_prev = jnp.concatenate([state["cm_x"][:, None].astype(cd), x[:, :-1]], axis=1)
+    mu = p["cm_mu"].astype(cd)
+    xk = x + (x_prev - x) * mu[0]
+    xr = x + (x_prev - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(cd)))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"].astype(cd)) * (k @ p["cm_wv"].astype(cd))
+    return out, dict(state, cm_x=x[:, -1].astype(state["cm_x"].dtype))
+
+
+def rwkv_decode_step(p, x, state, cfg: ModelConfig):
+    """Single-token recurrence. x (B,1,d)."""
+    cd = dtype_of(cfg, "compute")
+    b, _, d = x.shape
+    h, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    xt = x[:, 0]
+    r, k, v, w, g = _rwkv_projections(p, xt, state["tm_x"].astype(cd), cfg)
+    u = p["u"].astype(jnp.float32)
+    new_wkv, out = _wkv_step(state["wkv"].astype(jnp.float32),
+                             (r.reshape(b, h, hd).astype(jnp.float32),
+                              k.reshape(b, h, hd).astype(jnp.float32),
+                              v.reshape(b, h, hd).astype(jnp.float32),
+                              w.reshape(b, h, hd), u))
+    out = out.reshape(b, d).astype(cd)
+    out = _group_norm(out, p["ln_x_scale"].astype(cd), p["ln_x_bias"].astype(cd), h)
+    out = (out * g) @ p["wo"].astype(cd)
+    return out[:, None], dict(state, tm_x=xt.astype(state["tm_x"].dtype),
+                              wkv=new_wkv.astype(state["wkv"].dtype))
+
+
+def rwkv_channel_mix_decode(p, x, state, cfg: ModelConfig):
+    cd = dtype_of(cfg, "compute")
+    xt = x[:, 0]
+    x_prev = state["cm_x"].astype(cd)
+    mu = p["cm_mu"].astype(cd)
+    xk = xt + (x_prev - xt) * mu[0]
+    xr = xt + (x_prev - xt) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(cd)))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"].astype(cd)) * (k @ p["cm_wv"].astype(cd))
+    return out[:, None], dict(state, cm_x=xt.astype(state["cm_x"].dtype))
+
+
+# ==========================================================================
+# Mamba (S6, Jamba flavour with dt/B/C norms)
+# ==========================================================================
+
+def _mamba_dims(cfg: ModelConfig):
+    din = cfg.expand * cfg.d_model
+    dt_rank = max(cfg.d_model // 16, 1)
+    return din, dt_rank
+
+
+def init_mamba_block(key, cfg: ModelConfig):
+    d, n, cw = cfg.d_model, cfg.d_state, cfg.conv_width
+    din, dtr = _mamba_dims(cfg)
+    pd = dtype_of(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (d, 2, din), pd),
+        "conv_w": dense_init(ks[1], (cw, 1, din), pd, scale=0.5),
+        "conv_b": jnp.zeros((din,), pd),
+        "x_proj": dense_init(ks[2], (din, dtr + 2 * n), pd),
+        "dt_w": dense_init(ks[3], (dtr, din), pd),
+        "dt_b": jnp.full((din,), -4.6, pd),         # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (din, n)).copy()).astype(pd),
+        "D": jnp.ones((din,), pd),
+        "dt_norm": jnp.ones((dtr,), pd),
+        "b_norm": jnp.ones((n,), pd),
+        "c_norm": jnp.ones((n,), pd),
+        "w_out": dense_init(ks[4], (din, d), pd),
+    }
+
+
+def mamba_block_specs(cfg: ModelConfig):
+    return {
+        "w_in": P(None, None, "model"),
+        "conv_w": P(None, None, "model"), "conv_b": P("model"),
+        "x_proj": P("model", None),
+        "dt_w": P(None, "model"), "dt_b": P("model"),
+        "A_log": P("model", None), "D": P("model"),
+        "dt_norm": P(None), "b_norm": P(None), "c_norm": P(None),
+        "w_out": P("model", None),
+    }
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    din, _ = _mamba_dims(cfg)
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, din), dtype),
+            "ssm": jnp.zeros((batch, din, cfg.d_state), dtype)}
+
+
+def mamba_state_specs(cfg: ModelConfig):
+    return {"conv": P("data", None, "model"), "ssm": P("data", "model", None)}
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mamba_bcdt(p, x1, cfg: ModelConfig):
+    """x1 (..., din) -> dt (..., din) f32, B (..., n) f32, C (..., n) f32."""
+    cd = dtype_of(cfg, "compute")
+    _, dtr = _mamba_dims(cfg)
+    n = cfg.d_state
+    bcdt = x1 @ p["x_proj"].astype(cd)
+    dt_in = _rms(bcdt[..., :dtr], p["dt_norm"])
+    bb = _rms(bcdt[..., dtr:dtr + n], p["b_norm"]).astype(jnp.float32)
+    cc = _rms(bcdt[..., dtr + n:], p["c_norm"]).astype(jnp.float32)
+    dt = jax.nn.softplus((dt_in @ p["dt_w"].astype(cd)).astype(jnp.float32)
+                         + p["dt_b"].astype(jnp.float32))
+    return dt, bb, cc
+
+
+def _ssm_step(p_A, p_D, state, inp):
+    """state (B,din,n) f32; inp: x1 (B,din), dt (B,din), B (B,n), C (B,n)."""
+    x1, dt, bb, cc = inp
+    decay = jnp.exp(dt[..., None] * p_A[None])            # (B,din,n)
+    new = decay * state + (dt * x1)[..., None] * bb[:, None, :]
+    y = jnp.einsum("bcn,bn->bc", new, cc) + p_D[None] * x1
+    return new, y
+
+
+def mamba_forward(p, x, state, cfg: ModelConfig):
+    """x (B,S,d) -> (out (B,S,d), new_state)."""
+    cd = dtype_of(cfg, "compute")
+    b, s, d = x.shape
+    din, _ = _mamba_dims(cfg)
+    cw = cfg.conv_width
+    xz = jnp.einsum("bsd,dtc->bstc", x.astype(cd), p["w_in"].astype(cd))
+    x1, z = xz[:, :, 0], xz[:, :, 1]
+
+    # causal depthwise conv, seeded with the conv state
+    x_pad = jnp.concatenate([state["conv"].astype(cd), x1], axis=1)
+    x1c = jax.lax.conv_general_dilated(
+        x_pad, p["conv_w"].astype(cd), window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=din)
+    x1c = jax.nn.silu(x1c + p["conv_b"].astype(cd))
+
+    dt, bb, cc = _mamba_bcdt(p, x1c, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    step = lambda st, inp: _ssm_step(A, p["D"].astype(jnp.float32), st, inp)
+    xs = (jnp.moveaxis(x1c.astype(jnp.float32), 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(bb, 1, 0), jnp.moveaxis(cc, 1, 0))
+    new_ssm, ys = chunked_scan(step, state["ssm"].astype(jnp.float32), xs,
+                               min(SCAN_CHUNK, s), remat=cfg.remat)
+    y = jnp.moveaxis(ys, 0, 1).astype(cd) * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(cd)
+    new_state = {"conv": x_pad[:, -(cw - 1):].astype(state["conv"].dtype),
+                 "ssm": new_ssm.astype(state["ssm"].dtype)}
+    return out, new_state
+
+
+def mamba_decode_step(p, x, state, cfg: ModelConfig):
+    """Single-token Mamba step.  x (B,1,d)."""
+    cd = dtype_of(cfg, "compute")
+    b = x.shape[0]
+    din, _ = _mamba_dims(cfg)
+    xz = jnp.einsum("bd,dtc->btc", x[:, 0].astype(cd), p["w_in"].astype(cd))
+    x1, z = xz[:, 0], xz[:, 1]
+    window = jnp.concatenate([state["conv"].astype(cd), x1[:, None]], axis=1)  # (B,cw,din)
+    x1c = jnp.einsum("bwc,wc->bc", window, p["conv_w"][:, 0].astype(cd))
+    x1c = jax.nn.silu(x1c + p["conv_b"].astype(cd))
+    dt, bb, cc = _mamba_bcdt(p, x1c, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    new_ssm, y = _ssm_step(A, p["D"].astype(jnp.float32),
+                           state["ssm"].astype(jnp.float32),
+                           (x1c.astype(jnp.float32), dt, bb, cc))
+    out = (y.astype(cd) * jax.nn.silu(z)) @ p["w_out"].astype(cd)
+    new_state = {"conv": window[:, 1:].astype(state["conv"].dtype),
+                 "ssm": new_ssm.astype(state["ssm"].dtype)}
+    return out[:, None], new_state

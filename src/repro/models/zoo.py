@@ -1,0 +1,63 @@
+"""Model zoo: build any assigned architecture + its dry-run input specs."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from .encdec import EncDecLM
+from .transformer import TransformerLM
+
+__all__ = ["build_model", "input_specs", "input_shardings"]
+
+
+def build_model(cfg: ModelConfig):
+    return EncDecLM(cfg) if cfg.encoder_decoder else TransformerLM(cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a given shape cell
+    (weak-type-correct, no device allocation).  Modality frontends are stubs:
+    whisper gets precomputed frame embeddings, qwen2-vl gets M-RoPE position
+    streams alongside text tokens."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.encoder_decoder:
+            sd = max(s // cfg.dec_len_ratio, 16)
+            batch = {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((b, sd), i32),
+                "targets": jax.ShapeDtypeStruct((b, sd), i32),
+            }
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                     "targets": jax.ShapeDtypeStruct((b, s), i32)}
+            if cfg.mrope_sections:
+                batch["mrope_positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        return batch
+
+    # decode: one new token against a seq_len cache
+    batch = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.mrope_sections:
+        batch["mrope_positions"] = jax.ShapeDtypeStruct((3, b, 1), i32)
+    return batch
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh, data_axes):
+    """NamedShardings matching input_specs: batch over the data axes."""
+    from jax.sharding import NamedSharding
+    d = P(data_axes)
+
+    def shard(name, sds):
+        if name == "mrope_positions":
+            return NamedSharding(mesh, P(None, data_axes, None))
+        return NamedSharding(mesh, P(*( (data_axes,) + (None,) * (len(sds.shape) - 1) )))
+
+    specs = input_specs(cfg, shape)
+    return {k: shard(k, v) for k, v in specs.items()}

@@ -1,0 +1,4 @@
+from .optimizers import (OptState, adamw, clip_by_global_norm, sgdm,
+                         warmup_cosine)
+
+__all__ = ["OptState", "adamw", "sgdm", "clip_by_global_norm", "warmup_cosine"]

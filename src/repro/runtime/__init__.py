@@ -1,0 +1,4 @@
+from .straggler import StragglerModel
+from .master_worker import CodedMaster, WorkerPool
+
+__all__ = ["StragglerModel", "CodedMaster", "WorkerPool"]

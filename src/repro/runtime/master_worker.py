@@ -1,0 +1,241 @@
+"""Simulated master/worker runtime for the paper-scale experiments (§VII-B).
+
+The paper runs mpi4py on 31 instances with sleep()-injected stragglers.  We
+reproduce the same semantics with a *virtual clock*: each worker's round
+latency = (measured per-task compute time) + (injected straggler delay),
+and the master's round time = encode + wait-policy quantile of worker
+latencies + decode (+ MEA-ECC encrypt/decrypt when enabled).  A real-thread
+mode exists to validate the virtual clock (tests), but benchmarks default
+to the virtual clock so Fig-3/4 sweeps run in seconds, not hours.
+
+``DistributedMatmul`` adapts each coding scheme (CONV / MDS / MatDot /
+SPACDC / BACC / LCC) to the backprop job A@B the SPACDC-DL algorithm
+distributes (Eq. 23): A = (Θ^l)^T row-blocks, B = δ^{l+1}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core import SPACDCCode, SPACDCConfig
+from ..core.baselines import MDSCode, MatDotCode, UncodedScheme
+from .straggler import StragglerModel
+
+
+@dataclasses.dataclass
+class RoundStats:
+    encode_s: float
+    compute_wait_s: float
+    decode_s: float
+    crypto_s: float = 0.0
+    n_waited: int = 0
+
+    @property
+    def total_s(self):
+        return self.encode_s + self.compute_wait_s + self.decode_s + self.crypto_s
+
+
+class WorkerPool:
+    """N simulated workers.  run_round returns (results, elapsed virtual s)."""
+
+    def __init__(self, n_workers: int, straggler: StragglerModel,
+                 real_threads: bool = False):
+        self.n = n_workers
+        self.straggler = straggler
+        self.real_threads = real_threads
+
+    def run_round(self, shards, f: Callable, round_idx: int, wait_for: int):
+        """shards: list of per-worker inputs (or (a,b) tuples).  Returns
+        (responder_indices, results_in_responder_order, wait_seconds)."""
+        delays = self.straggler.delays(round_idx)
+        if self.real_threads:
+            t0 = time.perf_counter()
+            done = {}
+
+            def work(i):
+                time.sleep(delays[i])
+                done[i] = f(shards[i])
+                return i
+
+            with ThreadPoolExecutor(max_workers=self.n) as ex:
+                futs = [ex.submit(work, i) for i in range(self.n)]
+                got = []
+                for fu in futs:
+                    got.append(fu.result())
+            order = np.argsort(delays)
+            resp = np.sort(order[:wait_for])
+            return resp, [done[i] for i in resp], time.perf_counter() - t0
+
+        # virtual clock: warm up (compile), then median-of-3 representative
+        # compute time — dispatch noise otherwise skews scheme comparisons
+        sample = f(shards[0])
+        times = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            f(shards[0])
+            times.append(time.perf_counter() - t0)
+        t_compute = float(np.median(times))
+        results = [sample] + [f(s) for s in shards[1:]]
+        lat = delays + t_compute
+        order = np.argsort(lat)
+        resp = np.sort(order[:wait_for])
+        wait_s = float(lat[order[wait_for - 1]])
+        return resp, [results[i] for i in resp], wait_s
+
+
+class DistributedMatmul:
+    """Coded A@B on the pool under a named scheme."""
+
+    def __init__(self, scheme_name: str, n_workers: int, k_blocks: int,
+                 t_colluding: int = 0, straggler: Optional[StragglerModel] = None,
+                 n_stragglers: int = 0, encrypt: bool = False, seed: int = 0):
+        self.name = scheme_name
+        self.n = n_workers
+        self.k = k_blocks
+        self.t = t_colluding
+        self.encrypt = encrypt
+        self.straggler = straggler or StragglerModel(n_workers, n_stragglers, seed=seed)
+        self.pool = WorkerPool(n_workers, self.straggler)
+        if scheme_name == "conv":
+            self.scheme = UncodedScheme(n_workers)
+            self.wait_for = n_workers
+        elif scheme_name == "mds":
+            self.scheme = MDSCode(n_workers, k_blocks)
+            self.wait_for = self.scheme.recovery_threshold
+        elif scheme_name == "matdot":
+            self.scheme = MatDotCode(n_workers, p=k_blocks)
+            self.wait_for = self.scheme.recovery_threshold
+        elif scheme_name == "spacdc":
+            self.scheme = SPACDCCode(SPACDCConfig(n_workers, k_blocks, t_colluding,
+                                                  noise_scale=1.0, seed=seed))
+            # rateless: wait for everyone who isn't a straggler
+            self.wait_for = max(n_workers - self.straggler.n_stragglers, 1)
+        else:
+            raise ValueError(f"unknown scheme {scheme_name}")
+        self._crypto = None
+        if encrypt:
+            from ..crypto import MEAECC, generate_keypair
+            self._crypto = (MEAECC(mode="paper"), generate_keypair())
+
+    def _crypto_overhead(self, shards) -> float:
+        """Measured MEA-ECC cost: master encrypts one shard + worker
+        decrypt/encrypt/decrypt cycle, scaled by shard count (vectorized
+        single-scalar mask — paper mode)."""
+        if not self._crypto:
+            return 0.0
+        mea, kp = self._crypto
+        a = shards[0][0] if isinstance(shards[0], tuple) else shards[0]
+        m = np.asarray(a, np.float32)
+        t0 = time.perf_counter()
+        ct = mea.encrypt(m[:4, :4], kp.pk)       # sample a small block,
+        mea.decrypt(ct, kp)                      # scale by elements
+        per_elem = (time.perf_counter() - t0) / 32
+        total_elems = sum(int(np.prod(np.shape(s[0] if isinstance(s, tuple) else s)))
+                          for s in shards)
+        return per_elem * total_elems * 3        # enc + worker dec + result enc
+
+    def matmul(self, a: np.ndarray, b: np.ndarray, round_idx: int = 0):
+        """Returns (result (m, n), RoundStats).  Result stacked over K blocks
+        for block schemes, reshaped to a's row layout."""
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        t0 = time.perf_counter()
+        if self.name == "matdot":
+            ea, eb = self.scheme.encode_pair(a, b)
+            shards = [(ea[i], eb[i]) for i in range(self.n)]
+            f = lambda ab: np.asarray(ab[0] @ ab[1])
+        else:
+            enc = self.scheme.encode(a)
+            jax.block_until_ready(enc)
+            shards = [np.asarray(enc[i]) for i in range(self.n)]
+            f = lambda s: np.asarray(jnp.asarray(s) @ b)
+        t_enc = time.perf_counter() - t0
+
+        resp, results, wait_s = self.pool.run_round(shards, f, round_idx,
+                                                    self.wait_for)
+        t0 = time.perf_counter()
+        dec = self.scheme.decode(jnp.asarray(np.stack(results)), list(resp))
+        if self.name == "matdot":
+            out = np.asarray(dec)
+        else:
+            out = np.asarray(dec).reshape(-1, b.shape[-1])[: a.shape[0]]
+        t_dec = time.perf_counter() - t0
+        stats = RoundStats(t_enc, wait_s, t_dec,
+                           self._crypto_overhead(shards), len(resp))
+        return out, stats
+
+
+class CodedMaster:
+    """SPACDC-DL master (Algorithm 2): trains an MLP, distributing the
+    backward products through a DistributedMatmul scheme."""
+
+    def __init__(self, layer_sizes, dist: DistributedMatmul, lr=0.05, seed=0):
+        rng = np.random.default_rng(seed)
+        self.dist = dist
+        self.lr = lr
+        self.weights = [rng.standard_normal((m, n)).astype(np.float32) *
+                        np.sqrt(2.0 / m)
+                        for m, n in zip(layer_sizes[:-1], layer_sizes[1:])]
+        self.biases = [np.zeros(n, np.float32) for n in layer_sizes[1:]]
+        self.round = 0
+
+    @staticmethod
+    def _act(x):
+        return np.maximum(x, 0.0)
+
+    @staticmethod
+    def _act_grad(x):
+        return (x > 0).astype(np.float32)
+
+    def forward(self, x):
+        acts, pre = [x], []
+        h = x
+        for i, (w, b) in enumerate(zip(self.weights, self.biases)):
+            z = h @ w + b
+            pre.append(z)
+            h = self._act(z) if i < len(self.weights) - 1 else z
+            acts.append(h)
+        return acts, pre
+
+    def train_batch(self, x, y, n_classes=10):
+        """One SGD step; backward layer products distributed.  Returns
+        (loss, virtual_seconds)."""
+        bsz = x.shape[0]
+        acts, pre = self.forward(x)
+        logits = acts[-1]
+        z = logits - logits.max(1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(1, keepdims=True)
+        loss = -np.mean(np.log(p[np.arange(bsz), y] + 1e-12))
+        onehot = np.zeros_like(p)
+        onehot[np.arange(bsz), y] = 1.0
+        delta = (p - onehot) / bsz                      # (B, n_out)
+
+        elapsed = 0.0
+        grads_w, grads_b = [], []
+        for l in reversed(range(len(self.weights))):
+            grads_w.append(acts[l].T @ delta)
+            grads_b.append(delta.sum(0))
+            if l > 0:
+                # the distributed job (Eq. 23): delta @ W^T, coded over W rows
+                prod, stats = self.dist.matmul(self.weights[l], delta.T,
+                                               round_idx=self.round)
+                delta = prod.T * self._act_grad(pre[l - 1])
+                elapsed += stats.total_s
+                self.round += 1
+        grads_w, grads_b = grads_w[::-1], grads_b[::-1]
+        for i in range(len(self.weights)):
+            self.weights[i] -= self.lr * grads_w[i]
+            self.biases[i] -= self.lr * grads_b[i]
+        return float(loss), elapsed
+
+    def accuracy(self, x, y):
+        acts, _ = self.forward(x)
+        return float((acts[-1].argmax(1) == y).mean())

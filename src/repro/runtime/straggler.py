@@ -1,0 +1,35 @@
+"""Straggler models for the simulated master/worker runtime (paper §VII-B:
+artificial delays via sleep()) and for SPMD responder-mask schedules."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerModel:
+    """Per-epoch straggler assignment: S of N workers get `delay_s` extra
+    latency (the paper's setup); optionally exponential background jitter."""
+    n_workers: int
+    n_stragglers: int
+    delay_s: float = 0.02
+    jitter_scale: float = 0.002
+    seed: int = 0
+
+    def delays(self, round_idx: int) -> np.ndarray:
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, round_idx]))
+        d = rng.exponential(self.jitter_scale, self.n_workers)
+        if self.n_stragglers:
+            idx = rng.choice(self.n_workers, self.n_stragglers, replace=False)
+            d[idx] += self.delay_s * (1.0 + rng.random(self.n_stragglers))
+        return d
+
+    def responder_mask(self, round_idx: int, wait_for: int) -> np.ndarray:
+        """Boolean mask of the `wait_for` fastest workers this round."""
+        d = self.delays(round_idx)
+        order = np.argsort(d)
+        mask = np.zeros(self.n_workers, bool)
+        mask[order[:wait_for]] = True
+        return mask

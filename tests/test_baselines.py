@@ -1,0 +1,88 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.baselines import (BACCScheme, LCCScheme, MatDotCode, MDSCode,
+                                  PolynomialCode, SecPolyCode, UncodedScheme)
+
+rng = np.random.default_rng(0)
+A = jnp.asarray(rng.standard_normal((24, 12)), jnp.float32)
+B = jnp.asarray(rng.standard_normal((12, 10)), jnp.float32)
+W = jnp.asarray(rng.standard_normal((12, 8)), jnp.float32)
+
+
+def test_mds_exact_any_k_subset():
+    mds = MDSCode(n_workers=9, k_blocks=4)
+    sh = mds.encode(A)
+    res = jax.vmap(lambda s: s @ W)(sh)
+    for resp in ([0, 1, 2, 3], [5, 6, 7, 8], [0, 2, 4, 8]):
+        out = mds.decode(res[np.asarray(resp)], resp)
+        np.testing.assert_allclose(np.asarray(out).reshape(-1, 8),
+                                   np.asarray(A @ W), atol=1e-3)
+
+
+def test_mds_threshold_enforced():
+    mds = MDSCode(n_workers=9, k_blocks=4)
+    with pytest.raises(ValueError):
+        mds.decode(jnp.zeros((3, 6, 8)), [0, 1, 2])
+
+
+def test_polynomial_codes_exact():
+    pc = PolynomialCode(n_workers=6, p=2, q=2)
+    ea, eb = pc.encode_pair(A, B)
+    prods = jnp.einsum("nij,njk->nik", ea, eb)
+    resp = [1, 2, 4, 5]
+    out = pc.decode(prods[np.asarray(resp)], resp)
+    recon = jnp.concatenate(
+        [jnp.concatenate([out[i, j] for j in range(2)], axis=1)
+         for i in range(2)], axis=0)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(A @ B), atol=1e-2)
+
+
+def test_matdot_exact():
+    md = MatDotCode(n_workers=7, p=3)
+    ea, eb = md.encode_pair(A, B)
+    prods = jnp.einsum("nij,njk->nik", ea, eb)
+    resp = [0, 2, 3, 5, 6]
+    out = md.decode(prods[np.asarray(resp)], resp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(A @ B), atol=1e-2)
+
+
+def test_lcc_exact_for_quadratic():
+    lcc = LCCScheme(n_workers=12, k_blocks=3, t_colluding=1, deg_f=2)
+    x = A[:24]
+    sh = lcc.encode(x)
+    res = jax.vmap(lambda s: s @ s.T)(sh)
+    out = lcc.decode(res, list(range(12)))
+    exact = jax.vmap(lambda s: s @ s.T)(x.reshape(3, 8, 12))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exact), atol=5e-2)
+
+
+def test_secpoly_masks_and_recovers():
+    sp = SecPolyCode(n_workers=8, p=2, q=2)
+    ea, eb = sp.encode_pair(A, B)
+    prods = jnp.einsum("nij,njk->nik", ea, eb)
+    out = sp.decode(prods, list(range(sp.recovery_threshold)))
+    recon = jnp.concatenate(
+        [jnp.concatenate([out[i, j] for j in range(2)], axis=1)
+         for i in range(2)], axis=0)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(A @ B), atol=5e-2)
+
+
+def test_bacc_rateless():
+    bacc = BACCScheme(n_workers=10, k_blocks=2)
+    sh = bacc.encode(A)
+    res = jax.vmap(lambda s: s @ W)(sh)
+    out = bacc.decode(res[:6], list(range(6)))
+    exact = jax.vmap(lambda s: s @ W)(A.reshape(2, 12, 12))
+    rel = np.abs(np.asarray(out - exact)).max() / np.abs(np.asarray(exact)).max()
+    assert rel < 0.2
+
+
+def test_uncoded_requires_all():
+    cv = UncodedScheme(n_workers=4)
+    sh = cv.encode(A)
+    assert sh.shape[0] == 4
+    with pytest.raises(ValueError):
+        cv.decode(jnp.zeros((3, 6, 12)), [0, 1, 2])

@@ -1,0 +1,104 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import berrut
+
+
+def test_partition_of_unity():
+    nodes = jnp.asarray(np.linspace(-1, 1, 9))
+    x = jnp.asarray([-0.73, 0.11, 0.99, 3.0])
+    w = berrut.berrut_weights(x, nodes)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_interpolates_at_nodes():
+    nodes = jnp.asarray(berrut.chebyshev_points(8, kind=2))
+    w = berrut.berrut_weight_matrix(nodes, nodes)
+    np.testing.assert_allclose(np.asarray(w), np.eye(8), atol=1e-5)
+
+
+def test_smooth_function_convergence():
+    """Berrut error decreases as node count grows (smooth f)."""
+    f = lambda x: np.sin(3 * x) + x ** 2
+    xq = np.linspace(-0.9, 0.9, 50)
+    errs = []
+    for n in (8, 16, 32, 64):
+        nodes = berrut.chebyshev_points(n, kind=2)
+        vals = jnp.asarray(f(nodes))[:, None]
+        approx = berrut.interpolate(jnp.asarray(xq), jnp.asarray(nodes), vals)
+        errs.append(float(np.max(np.abs(np.asarray(approx)[:, 0] - f(xq)))))
+    assert errs[-1] < errs[0] / 4, errs
+
+
+def test_combine_matches_dot():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((5, 7)), jnp.float32)
+    blocks = jnp.asarray(rng.standard_normal((7, 4, 3)), jnp.float32)
+    out = berrut.combine(w, blocks)
+    want = np.einsum("qj,jab->qab", np.asarray(w), np.asarray(blocks))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5)
+
+
+def test_alpha_beta_disjoint():
+    alphas, betas = berrut.default_alpha_beta(16, 4, 2)
+    assert len(np.unique(alphas)) == 16
+    assert len(np.unique(betas)) == 6
+    for a in alphas:
+        assert np.min(np.abs(a - betas)) > 1e-9
+
+
+def test_exact_node_query_returns_value():
+    nodes = jnp.asarray([0.0, 1.0, 2.0])
+    vals = jnp.asarray([[1.0], [5.0], [9.0]])
+    out = berrut.interpolate(jnp.asarray(1.0), nodes, vals)
+    np.testing.assert_allclose(np.asarray(out), [5.0], atol=1e-5)
+
+
+def test_fh_weights_reduce_to_berrut_at_d0():
+    nodes = berrut.chebyshev_points(9, kind=2)
+    w = berrut.fh_weights(nodes, 0)
+    # d=0 weights alternate sign over sorted nodes with equal magnitude
+    order = np.argsort(nodes)
+    ws = w[order]
+    assert np.allclose(np.abs(ws), 1.0)
+    assert np.all(ws[:-1] * ws[1:] < 0)
+
+
+def test_fh_interpolates_at_nodes():
+    nodes = berrut.chebyshev_points(8, kind=2)
+    w = berrut.fh_weights(nodes, 2)
+    m = berrut.bary_weight_matrix(jnp.asarray(nodes), jnp.asarray(nodes), w)
+    np.testing.assert_allclose(np.asarray(m), np.eye(8), atol=1e-5)
+
+
+def test_fh_higher_degree_more_accurate():
+    f = lambda x: np.sin(3 * x)
+    nodes = berrut.chebyshev_points(16, kind=2)
+    xq = jnp.asarray(np.linspace(-0.9, 0.9, 40))
+    vals = jnp.asarray(f(nodes))[:, None]
+    errs = []
+    for d in (0, 2):
+        w = berrut.fh_weights(nodes, d)
+        m = berrut.bary_weight_matrix(xq, jnp.asarray(nodes), w)
+        approx = berrut.combine(m, vals)
+        errs.append(float(np.max(np.abs(np.asarray(approx)[:, 0] - f(np.asarray(xq))))))
+    assert errs[1] < errs[0] / 2, errs
+
+
+def test_fh_spacdc_decode_improves():
+    from repro.core import SPACDCCode, SPACDCConfig
+    import jax
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((48, 16)), jnp.float32)
+    f = lambda a: a @ a.T
+    errs = {}
+    for d in (0, 1):
+        code = SPACDCCode(SPACDCConfig(24, 4, fh_degree=d))
+        exact = jax.vmap(f)(code.split_blocks(x))
+        res = jax.vmap(f)(code.encode(x))
+        resp = np.sort(np.random.default_rng(1).choice(24, 18, replace=False))
+        out = code.decode(res[resp], resp)
+        errs[d] = float(jnp.sqrt(jnp.mean((out - exact) ** 2)))
+    assert errs[1] < errs[0]

@@ -1,0 +1,98 @@
+import numpy as np
+import pytest
+
+from repro.crypto import (CURVE_SECP256K1, MEAECC, generate_keypair,
+                          shared_secret)
+from repro.crypto.ecc import CURVE_TOY, INFINITY, keystream
+
+
+class TestCurveGroupLaw:
+    def test_points_on_curve(self):
+        c = CURVE_TOY
+        pts = [c.multiply(k, c.generator) for k in range(1, c.order)]
+        assert all(c.contains(p) for p in pts)
+
+    def test_commutativity(self):
+        c = CURVE_TOY
+        pts = [c.multiply(k, c.generator) for k in range(1, c.order)]
+        for p in pts[:6]:
+            for q in pts[:6]:
+                assert c.add(p, q) == c.add(q, p)
+
+    def test_associativity(self):
+        c = CURVE_TOY
+        pts = [c.multiply(k, c.generator) for k in range(1, 8)]
+        for p in pts[:4]:
+            for q in pts[:4]:
+                for r in pts[:4]:
+                    assert c.add(c.add(p, q), r) == c.add(p, c.add(q, r))
+
+    def test_identity_and_inverse(self):
+        c = CURVE_TOY
+        p = c.multiply(3, c.generator)
+        assert c.add(p, INFINITY) == p
+        assert c.add(p, c.neg(p)).is_infinity
+
+    def test_order(self):
+        c = CURVE_TOY
+        assert c.multiply(c.order, c.generator).is_infinity
+
+    def test_scalar_mult_matches_repeated_add(self):
+        c = CURVE_TOY
+        acc = INFINITY
+        for k in range(1, 10):
+            acc = c.add(acc, c.generator)
+            assert acc == c.multiply(k, c.generator)
+
+    def test_singular_curve_rejected(self):
+        from repro.crypto.ecc import EllipticCurve
+        with pytest.raises(ValueError):
+            EllipticCurve(q=17, a=0, b=0, gx=1, gy=1, order=1)
+
+
+class TestECDH:
+    def test_shared_key_agreement(self):
+        a = generate_keypair()
+        b = generate_keypair()
+        assert shared_secret(CURVE_SECP256K1, a, b.pk) == \
+            shared_secret(CURVE_SECP256K1, b, a.pk)
+
+    def test_distinct_keys(self):
+        assert generate_keypair().sk != generate_keypair().sk
+
+
+class TestMEAECC:
+    @pytest.mark.parametrize("mode", ["paper", "stream"])
+    def test_roundtrip_exact(self, mode):
+        rng = np.random.default_rng(0)
+        m = (rng.standard_normal((6, 5)) * 100).astype(np.float32)
+        mea = MEAECC(mode=mode)
+        out = mea.secure_channel_roundtrip(m)
+        np.testing.assert_allclose(out, np.round(m * 2**16) / 2**16, atol=0)
+
+    def test_ciphertext_hides_plaintext(self):
+        rng = np.random.default_rng(1)
+        m = rng.standard_normal((4, 4)).astype(np.float32)
+        mea = MEAECC(mode="stream")
+        w = generate_keypair()
+        c1 = mea.encrypt(m, w.pk, k=12345)
+        c2 = mea.encrypt(np.zeros_like(m), w.pk, k=12345)
+        # same key/nonce, different plaintext -> payload differs elementwise
+        assert all(int(a) != int(b) for a, b in
+                   zip(c1.payload.reshape(-1)[:4], c2.payload.reshape(-1)[:4]))
+
+    def test_wrong_key_fails_to_decrypt(self):
+        rng = np.random.default_rng(2)
+        m = rng.standard_normal((3, 3)).astype(np.float32)
+        mea = MEAECC(mode="paper")
+        w1, w2 = generate_keypair(), generate_keypair()
+        ct = mea.encrypt(m, w1.pk)
+        wrong = mea.decrypt(ct, w2)
+        assert not np.allclose(wrong, m, atol=1e-3)
+
+    def test_keystream_deterministic(self):
+        a = generate_keypair(sk=123456789)
+        ks1 = keystream(a.pk, 7, 16, CURVE_SECP256K1.q)
+        ks2 = keystream(a.pk, 7, 16, CURVE_SECP256K1.q)
+        ks3 = keystream(a.pk, 8, 16, CURVE_SECP256K1.q)
+        assert ks1 == ks2 and ks1 != ks3

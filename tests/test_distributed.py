@@ -1,0 +1,124 @@
+"""Multi-device integration tests: the sharded coded train step and the
+seq-sharded decode cache EXECUTE correctly on a real (forced-host) mesh.
+
+jax locks the device count at first init, so these run in subprocesses with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (2×4 data×model mesh).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(script: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+TRAIN_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import tiny_config
+from repro.core import BerrutGradientCode
+from repro.data.pipeline import TokenPipeline
+from repro.dist.sharding import tree_shardings
+from repro.launch.mesh import make_test_mesh
+from repro.launch.steps import build_train_step
+from repro.models import build_model
+from repro.optim import adamw
+
+mesh = make_test_mesh((2, 4), ("data", "model"))
+cfg = tiny_config("qwen2-7b")
+import dataclasses
+cfg = dataclasses.replace(cfg, pad_heads_to=4)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+opt = adamw(3e-3, weight_decay=0.0)
+state = opt.init(params)
+nb = 2
+gcode = BerrutGradientCode(nb, nb)
+step = build_train_step(model, opt, accum=2, gcode=gcode, dp_axes="data")
+
+p_shard = tree_shardings(model.param_specs(), mesh, jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+params = jax.device_put(params, p_shard)
+state = jax.device_put(state, jax.tree.map(lambda s: s, __import__("repro.optim.optimizers", fromlist=["OptState"]).OptState(
+    NamedSharding(mesh, P()), p_shard, p_shard)))
+pipe = TokenPipeline(cfg.vocab_size, 32, nb * 2 * 2)
+with jax.set_mesh(mesh):
+    jstep = jax.jit(step)
+    losses = []
+    for i in range(8):
+        mask = np.ones(nb, np.float32)
+        if i % 3 == 2:
+            mask[i % nb] = 0.0          # straggler
+        batch = jax.device_put(pipe.batch_at(i),
+                               {k: NamedSharding(mesh, P("data", None))
+                                for k in ("tokens", "targets")})
+        params, state, m = jstep(params, state, batch, jnp.asarray(mask))
+        losses.append(float(m["loss"]))
+assert all(np.isfinite(losses)), losses
+assert losses[-1] < losses[0], losses
+print("SHARDED_TRAIN_OK", round(losses[0], 3), "->", round(losses[-1], 3))
+"""
+
+
+DECODE_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import tiny_config
+from repro.dist.sharding import tree_shardings
+from repro.launch.mesh import make_test_mesh
+from repro.models import build_model
+import dataclasses
+
+mesh = make_test_mesh((2, 4), ("data", "model"))
+cfg = dataclasses.replace(tiny_config("qwen3-14b"), pad_heads_to=4)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 6)), jnp.int32)
+
+# single-device reference
+ref_cache = model.init_cache(2, 8)
+ref = []
+for t in range(6):
+    logits, ref_cache = model.decode_step(params, ref_cache, toks[:, t:t+1], t)
+    ref.append(np.asarray(logits[:, 0], np.float32))
+
+# sharded: cache seq dim over model, batch over data
+with jax.set_mesh(mesh):
+    c_shapes = jax.eval_shape(lambda: model.init_cache(2, 8))
+    c_shard = tree_shardings(model.cache_specs(), mesh, c_shapes)
+    cache = jax.device_put(model.init_cache(2, 8), c_shard)
+    p_shard = tree_shardings(model.param_specs(), mesh,
+                             jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+    sparams = jax.device_put(params, p_shard)
+    step = jax.jit(lambda p, c, t, i: model.decode_step(p, c, t, i))
+    for t in range(6):
+        logits, cache = step(sparams, cache, toks[:, t:t+1], t)
+        got = np.asarray(logits[:, 0], np.float32)
+        err = np.abs(got - ref[t]).max()
+        assert err < 0.25, (t, err)
+print("SHARDED_DECODE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_coded_train_executes():
+    out = _run(TRAIN_SCRIPT)
+    assert "SHARDED_TRAIN_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_decode_matches_single_device():
+    out = _run(DECODE_SCRIPT)
+    assert "SHARDED_DECODE_OK" in out

@@ -1,0 +1,54 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw, sgdm, clip_by_global_norm, warmup_cosine
+from repro.optim.optimizers import apply_updates
+
+
+def _train_quadratic(opt, steps=120):
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(1.5)}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    state = opt.init(params)
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    return float(loss(params))
+
+
+def test_adamw_converges():
+    assert _train_quadratic(adamw(0.1, weight_decay=0.0)) < 5e-2
+
+
+def test_sgdm_converges():
+    assert _train_quadratic(sgdm(0.05)) < 5e-2
+
+
+def test_clipping():
+    tree = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-5
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.6, 0.8], rtol=1e-5)
+
+
+def test_warmup_cosine_shape():
+    sched = warmup_cosine(1.0, 10, 100)
+    v5 = float(sched(jnp.asarray(5)))
+    v10 = float(sched(jnp.asarray(10)))
+    v100 = float(sched(jnp.asarray(100)))
+    assert 0 < v5 < v10 <= 1.0
+    assert v100 < v10 and abs(v100 - 0.1) < 1e-2
+
+
+def test_weight_decay_pulls_to_zero():
+    opt = adamw(0.05, weight_decay=1.0, max_grad_norm=0.0)
+    params = {"w": jnp.asarray(5.0)}
+    state = opt.init(params)
+    for _ in range(50):
+        upd, state = opt.update({"w": jnp.asarray(0.0)}, state, params)
+        params = apply_updates(params, upd)
+    assert abs(float(params["w"])) < 1.0

@@ -1,0 +1,41 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import SPACDCCode, SPACDCConfig
+from repro.core.privacy import (empirical_leakage, gaussian_mi_bound,
+                                min_noise_scale_for)
+
+
+def test_mi_bound_decreases_with_noise():
+    prev = None
+    for scale in (0.5, 2.0, 8.0):
+        code = SPACDCCode(SPACDCConfig(10, 3, t_colluding=2, noise_scale=scale))
+        b = gaussian_mi_bound(code).max()
+        if prev is not None:
+            assert b < prev
+        prev = b
+
+
+def test_no_noise_means_no_privacy():
+    code = SPACDCCode(SPACDCConfig(10, 3, t_colluding=0))
+    assert np.isinf(gaussian_mi_bound(code)).all()
+
+
+def test_min_noise_scale_achieves_target():
+    cfg = SPACDCConfig(12, 4, t_colluding=2, noise_scale=1.0)
+    code = SPACDCCode(cfg)
+    target_bits = 0.01
+    scale = min_noise_scale_for(code, target_bits)
+    code2 = SPACDCCode(SPACDCConfig(12, 4, 2, noise_scale=scale))
+    assert gaussian_mi_bound(code2).max() <= target_bits * 1.01
+
+
+def test_empirical_leakage_shrinks():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((24, 8)), jnp.float32)
+    weak = SPACDCCode(SPACDCConfig(8, 2, 1, noise_scale=0.3))
+    strong = SPACDCCode(SPACDCConfig(8, 2, 1, noise_scale=30.0))
+    lw = empirical_leakage(weak, x, jax.random.PRNGKey(0), n_trials=48)
+    ls = empirical_leakage(strong, x, jax.random.PRNGKey(0), n_trials=48)
+    assert ls < lw

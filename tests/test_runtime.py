@@ -1,0 +1,78 @@
+"""Master/worker runtime + straggler model behaviour (the paper's §VII-B
+experimental apparatus)."""
+
+import numpy as np
+import pytest
+
+from repro.data.mnist import synthetic_mnist
+from repro.runtime import StragglerModel
+from repro.runtime.master_worker import CodedMaster, DistributedMatmul
+
+rng = np.random.default_rng(0)
+A = rng.standard_normal((256, 64)).astype(np.float32)
+B = rng.standard_normal((64, 32)).astype(np.float32)
+
+
+def test_straggler_model_deterministic():
+    s = StragglerModel(10, 3, seed=1)
+    np.testing.assert_array_equal(s.delays(5), s.delays(5))
+    assert (s.delays(5) != s.delays(6)).any()
+
+
+def test_straggler_count():
+    s = StragglerModel(20, 5, delay_s=1.0)
+    d = s.delays(0)
+    assert (d > 0.5).sum() == 5
+
+
+@pytest.mark.parametrize("scheme,kwargs", [
+    ("conv", {}),
+    ("mds", {}),
+    ("matdot", {}),
+    ("spacdc", {"t_colluding": 1}),
+])
+def test_distributed_matmul_accuracy(scheme, kwargs):
+    dist = DistributedMatmul(scheme, n_workers=10, k_blocks=4,
+                             n_stragglers=2, **kwargs)
+    out, stats = dist.matmul(A, B)
+    rel = np.abs(out - A @ B).max() / np.abs(A @ B).max()
+    tol = 0.25 if scheme == "spacdc" else 1e-2
+    assert rel < tol, (scheme, rel)
+    assert stats.total_s > 0
+
+
+def test_conv_waits_for_stragglers():
+    """The uncoded baseline pays the straggler delay; coded schemes don't."""
+    conv = DistributedMatmul("conv", 10, 4, n_stragglers=2, seed=3)
+    mds = DistributedMatmul("mds", 10, 4, n_stragglers=2, seed=3)
+    _, s_conv = conv.matmul(A, B, round_idx=1)
+    _, s_mds = mds.matmul(A, B, round_idx=1)
+    assert s_conv.compute_wait_s > s_mds.compute_wait_s
+
+
+def test_spacdc_rateless_vs_threshold_collision():
+    """Paper's key scenario: when stragglers push survivors below the MDS
+    recovery threshold, MDS must wait for a straggler — SPACDC proceeds."""
+    n, k, s = 12, 10, 4   # threshold 10 > 12-4=8 survivors
+    mds = DistributedMatmul("mds", n, k, n_stragglers=s, seed=7)
+    spa = DistributedMatmul("spacdc", n, k, t_colluding=1, n_stragglers=s, seed=7)
+    _, st_mds = mds.matmul(A, B, round_idx=2)
+    _, st_spa = spa.matmul(A, B, round_idx=2)
+    assert st_spa.compute_wait_s < st_mds.compute_wait_s
+
+
+def test_coded_master_trains():
+    xtr, ytr, xte, yte = synthetic_mnist(n_train=1024, n_test=256)
+    dist = DistributedMatmul("spacdc", n_workers=8, k_blocks=4,
+                             t_colluding=1, n_stragglers=1)
+    m = CodedMaster((784, 64, 10), dist, lr=0.1)
+    for ep in range(2):
+        for i in range(0, 1024, 256):
+            loss, el = m.train_batch(xtr[i:i + 256], ytr[i:i + 256])
+    assert m.accuracy(xte, yte) > 0.8
+
+
+def test_crypto_overhead_accounted():
+    dist = DistributedMatmul("spacdc", 6, 3, t_colluding=1, encrypt=True)
+    _, stats = dist.matmul(A[:64], B)
+    assert stats.crypto_s > 0

@@ -1,0 +1,95 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SPACDCCode, SPACDCConfig
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.standard_normal((40, 16)), jnp.float32)
+
+
+def _exact(code, x, f):
+    return jax.vmap(f)(code.split_blocks(x))
+
+
+def test_paper_illustrating_example(data):
+    """§V-A: N=8 workers, K=2, S=T=1, f(X)=X Xᵀ."""
+    code = SPACDCCode(SPACDCConfig(n_workers=8, k_blocks=2, t_colluding=1,
+                                   noise_scale=1.0))
+    f = lambda a: a @ a.T
+    exact = _exact(code, data, f)
+    # one straggler: drop worker 5
+    resp = [0, 1, 2, 3, 4, 6, 7]
+    approx = code.run(data, f, responders=resp)
+    scale = float(jnp.max(jnp.abs(exact)))
+    assert float(jnp.max(jnp.abs(approx - exact))) / scale < 0.25
+
+
+def test_no_recovery_threshold(data):
+    """Decoding succeeds for ANY responder count — the paper's key claim."""
+    code = SPACDCCode(SPACDCConfig(n_workers=12, k_blocks=3))
+    f = lambda a: a @ a.T
+    shards = code.encode(data)
+    results = jax.vmap(f)(shards)
+    prev = None
+    for n_resp in (3, 6, 9, 12):
+        out = code.decode(results[:n_resp], list(range(n_resp)))
+        assert out.shape[0] == 3
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_accuracy_degrades_gracefully(data):
+    code = SPACDCCode(SPACDCConfig(n_workers=24, k_blocks=4))
+    f = lambda a: a @ a.T
+    exact = _exact(code, data, f)
+    shards = code.encode(data)
+    results = jax.vmap(f)(shards)
+    scale = float(jnp.sqrt(jnp.mean(exact ** 2)))
+    errs = []
+    for n_resp in (24, 18, 12):
+        out = code.decode(results[:n_resp], list(range(n_resp)))
+        errs.append(float(jnp.sqrt(jnp.mean((out - exact) ** 2))) / scale)
+    assert errs[0] < 0.05, errs
+    assert errs[0] <= errs[1] * 1.5 and errs[1] <= errs[2] * 1.5, errs
+
+
+def test_masked_decode_matches_indexed(data):
+    code = SPACDCCode(SPACDCConfig(n_workers=10, k_blocks=3, t_colluding=1))
+    f = lambda a: jnp.tanh(a) @ jnp.tanh(a).T
+    shards = code.encode(data)
+    results = jax.vmap(f)(shards)
+    resp = np.asarray([0, 2, 3, 5, 6, 9])
+    mask = np.zeros(10, np.float32)
+    mask[resp] = 1
+    d1 = code.decode(results[resp], resp)
+    d2 = code.decode_masked(results, jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-4)
+
+
+def test_nonlinear_function_support(data):
+    """Arbitrary (non-polynomial) f — beyond what LCC/Polynomial codes allow."""
+    code = SPACDCCode(SPACDCConfig(n_workers=30, k_blocks=3))
+    f = lambda a: jax.nn.gelu(a @ a.T)
+    exact = _exact(code, data, f)
+    approx = code.run(data, f)
+    scale = float(jnp.max(jnp.abs(exact))) + 1e-9
+    assert float(jnp.max(jnp.abs(approx - exact))) / scale < 0.15
+
+
+def test_zero_padding_roundtrip():
+    code = SPACDCCode(SPACDCConfig(n_workers=8, k_blocks=3))
+    x = jnp.ones((10, 4))  # 10 rows not divisible by 3
+    blocks = code.split_blocks(x)
+    assert blocks.shape == (3, 4, 4)
+    assert float(blocks.sum()) == 40.0  # padding is zeros
+
+
+def test_encode_is_jittable(data):
+    code = SPACDCCode(SPACDCConfig(n_workers=8, k_blocks=2, t_colluding=1))
+    enc = jax.jit(lambda x, k: code.encode(x, key=k))
+    out = enc(data, jax.random.PRNGKey(1))
+    assert out.shape == (8, 20, 16)
