@@ -14,9 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import SPACDCCode, SPACDCConfig
-from repro.core.baselines import (BACCScheme, LCCScheme, MatDotCode, MDSCode,
-                                  PolynomialCode, SecPolyCode)
+from repro.core import registry
 
 
 def _time(fn, reps=5):
@@ -35,20 +33,21 @@ def bench_fig5_decode_vs_k(m=1000, d=64, n=40, rows=None):
     x = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
     out = rows if rows is not None else []
     for k in (2, 4, 8, 16, 32):
-        spacdc = SPACDCCode(SPACDCConfig(n, k))
+        spacdc = registry.build("spacdc", n_workers=n, k_blocks=k)
         res_sp = jax.vmap(lambda s: s @ s.T)(spacdc.encode(x))
         resp = list(range(n - 2))
         t_sp = _time(lambda: spacdc.decode(res_sp[: n - 2], resp))
         out.append((f"fig5_decode_spacdc_K{k}", t_sp, "O(|F|)"))
 
-        lcc = LCCScheme(n, k, deg_f=2) if (k - 1) * 2 + 1 <= n else None
+        lcc = (registry.build("lcc", n_workers=n, k_blocks=k, deg_f=2)
+               if (k - 1) * 2 + 1 <= n else None)
         if lcc:
             res_l = jax.vmap(lambda s: s @ s.T)(lcc.encode(x))
             rth = lcc.recovery_threshold
             t_l = _time(lambda: lcc.decode(res_l[:rth], list(range(rth))))
             out.append((f"fig5_decode_lcc_K{k}", t_l, f"thr={rth}"))
 
-        mds = MDSCode(n, k)
+        mds = registry.build("mds", n_workers=n, k_blocks=k)
         w = jnp.asarray(rng.standard_normal((d, 16)), jnp.float32)
         res_m = jax.vmap(lambda s: s @ w)(mds.encode(x))
         t_m = _time(lambda: mds.decode(res_m[:k], list(range(k))))
@@ -77,11 +76,11 @@ def bench_fig7_compute_vs_k(m=1024, d=128, n=40, rows=None):
     x = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
     out = rows if rows is not None else []
     for k in (2, 4, 8, 16, 32):
-        code = SPACDCCode(SPACDCConfig(n, k))
+        code = registry.build("spacdc", n_workers=n, k_blocks=k)
         shard = code.encode(x)[0]
         t = _time(lambda: shard @ shard.T)
         out.append((f"fig7_worker_compute_spacdc_K{k}", t, f"O(dm^2/K^2)"))
-        md = MatDotCode(n, p=min(k, 16))
+        md = registry.build("matdot", n_workers=n, k_blocks=min(k, 16))
         ea, eb = md.encode_pair(x, x.T)
         t2 = _time(lambda: ea[0] @ eb[0])
         out.append((f"fig7_worker_compute_matdot_K{k}", t2, "O(dm^2) full"))
@@ -93,16 +92,19 @@ def bench_table2_encode(m=2048, d=128, n=30, k=8, rows=None):
     rng = np.random.default_rng(2)
     x = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
     out = rows if rows is not None else []
-    schemes = [
-        ("spacdc", lambda: SPACDCCode(SPACDCConfig(n, k, 3)).encode(x)),
-        ("bacc", lambda: BACCScheme(n, k).encode(x)),
-        ("mds", lambda: MDSCode(n, k).encode(x)),
-        ("lcc", lambda: LCCScheme(n, k, deg_f=2).encode(x)),
-        ("polynomial", lambda: PolynomialCode(n, 4, 2).encode_pair(x, x.T)),
-        ("secpoly", lambda: SecPolyCode(n, 4, 2).encode_pair(x, x.T)),
-        ("matdot", lambda: MatDotCode(n, 8).encode_pair(x, x.T)),
-    ]
-    for name, fn in schemes:
+    cfgs = {
+        "spacdc": dict(t_colluding=3),
+        "bacc": {},
+        "mds": {},
+        "lcc": dict(deg_f=2),
+        "polynomial": dict(p=4, q=2),
+        "secpoly": dict(p=4, q=2),
+        "matdot": {},
+    }
+    for name, extra in cfgs.items():
+        scheme = registry.build(name, n_workers=n, k_blocks=k, **extra)
+        fn = ((lambda s=scheme: s.encode_pair(x, x.T)) if scheme.pair_coded
+              else (lambda s=scheme: s.encode(x)))
         out.append((f"table2_encode_{name}", _time(fn, reps=3), "O(mdN)"))
     return out
 
@@ -120,14 +122,14 @@ def bench_fh_ablation(rows=None, n=24, k=4):
     """Beyond-paper: Floater–Hormann blending degree vs decode accuracy
     (mean rel-RMSE over 8 random straggler draws, f = X Xᵀ)."""
     import jax
-    from repro.core import SPACDCCode, SPACDCConfig
     out = rows if rows is not None else []
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((48, 16)), jnp.float32)
     f = lambda a: a @ a.T
     for resp_n in (24, 16, 12):
         for d in (0, 1, 3):
-            code = SPACDCCode(SPACDCConfig(n, k, fh_degree=d))
+            code = registry.build("spacdc", n_workers=n, k_blocks=k,
+                                  fh_degree=d)
             exact = jax.vmap(f)(code.split_blocks(x))
             res = jax.vmap(f)(code.encode(x))
             errs = []

@@ -1,7 +1,15 @@
-"""SPACDC core: Berrut coded computing, baselines, coded training, privacy."""
+"""SPACDC core: Berrut coded computing, the CodingScheme registry,
+baselines, coded training, privacy.
+
+Importing this package registers every built-in scheme (spacdc + the seven
+Table-II baselines + the berrut_grad gradient code), so
+``repro.core.registry.build(name, **cfg)`` is ready immediately.
+"""
 
 from .berrut import (berrut_weight_matrix, berrut_weights, chebyshev_points,
                      combine, default_alpha_beta, interpolate)
+from . import registry
+from .registry import CodingScheme
 from .spacdc import SPACDCCode, SPACDCConfig, pad_to_blocks
 from .coded_training import (BerrutGradientCode, coded_backprop_decode,
                              coded_backprop_encode, coded_psum)
@@ -10,6 +18,7 @@ from . import baselines, privacy
 __all__ = [
     "berrut_weight_matrix", "berrut_weights", "chebyshev_points", "combine",
     "default_alpha_beta", "interpolate",
+    "registry", "CodingScheme",
     "SPACDCCode", "SPACDCConfig", "pad_to_blocks",
     "BerrutGradientCode", "coded_backprop_decode", "coded_backprop_encode",
     "coded_psum", "baselines", "privacy",

@@ -1,18 +1,26 @@
 """Baseline coded-computing schemes the paper compares against (Table II).
 
-All schemes share a tiny common interface so the complexity benchmarks and
-the SPACDC-DL baselines (MDS-DL / MATDOT-DL / CONV-DL) can swap them in:
+All schemes implement the :class:`repro.core.registry.CodingScheme`
+protocol and register themselves, so the master/worker runtime and the
+complexity benchmarks construct any of them through
+``registry.build(name, **cfg)``:
 
+    scheme   = registry.build("mds", n_workers=10, k_blocks=4)
     shards   = scheme.encode(X)            # (N, ...) one shard per worker
     results  = f applied per shard         # worker compute
     Y        = scheme.decode(results, responders)
+
+Pair-coded schemes (Polynomial / SecPoly / MatDot) code (A, B) jointly for
+the job C = A @ B and expose ``encode_pair`` instead of ``encode``.
 
 Unlike SPACDC/BACC these classical codes have a hard *recovery threshold*:
 ``decode`` raises if ``len(responders) < scheme.recovery_threshold``.
 
 Evaluation points are real (float64 Vandermonde solves); for the block
 sizes used in the experiments (K ≤ ~30) conditioning is acceptable —
-exactly the regime the paper benchmarks.
+exactly the regime the paper benchmarks.  Every encode/decode contraction
+runs through ``repro.kernels.ops.berrut_combine`` (kernel on TPU, XLA twin
+elsewhere; per-scheme ``use_kernel`` overrides).
 """
 
 from __future__ import annotations
@@ -23,7 +31,7 @@ from typing import Sequence
 import numpy as np
 import jax.numpy as jnp
 
-from . import berrut
+from . import berrut, registry
 
 __all__ = [
     "UncodedScheme", "MDSCode", "PolynomialCode", "MatDotCode",
@@ -49,12 +57,15 @@ def _lagrange_matrix(queries: np.ndarray, nodes: np.ndarray) -> np.ndarray:
     return out
 
 
-def _combine(w, blocks):
-    return berrut.combine(jnp.asarray(w, dtype=jnp.float32), jnp.asarray(blocks))
+def _grid_reconstruct(decoded, m: int, n: int):
+    """(p, q, m/p, n/q) block grid -> the (m, n) product (padding trimmed)."""
+    decoded = jnp.asarray(decoded)
+    p, q, mb, nb = decoded.shape
+    out = jnp.swapaxes(decoded, 1, 2).reshape(p * mb, q * nb)
+    return out[:m, :n]
 
 
-class _SchemeBase:
-    name: str = "base"
+class _SchemeBase(registry.SchemeDefaults):
     n_workers: int
     recovery_threshold: int
 
@@ -74,7 +85,7 @@ class UncodedScheme(_SchemeBase):
     def __post_init__(self):
         self.recovery_threshold = self.n_workers
 
-    def encode(self, x: jnp.ndarray) -> jnp.ndarray:
+    def encode(self, x: jnp.ndarray, key=None) -> jnp.ndarray:
         from .spacdc import pad_to_blocks
         x = pad_to_blocks(x, self.n_workers)
         return x.reshape((self.n_workers, -1) + x.shape[1:])
@@ -102,18 +113,18 @@ class MDSCode(_SchemeBase):
         # generator G[i, j] = x_i^j  (N × K)
         self.generator = np.vander(self.points, self.k_blocks, increasing=True)
 
-    def encode(self, x: jnp.ndarray) -> jnp.ndarray:
+    def encode(self, x: jnp.ndarray, key=None) -> jnp.ndarray:
         from .spacdc import pad_to_blocks
         x = pad_to_blocks(x, self.k_blocks)
         blocks = x.reshape((self.k_blocks, -1) + x.shape[1:])
-        return _combine(self.generator, blocks)
+        return self._combine(self.generator, blocks)
 
     def decode(self, results: jnp.ndarray, responders: Sequence[int]):
         self._check(responders)
         resp = np.asarray(responders[: self.recovery_threshold])
         sub = self.generator[resp]                       # (K, K)
         inv = np.linalg.inv(sub)
-        return _combine(inv, jnp.asarray(results)[: self.recovery_threshold])
+        return self._combine(inv, jnp.asarray(results)[: self.recovery_threshold])
 
 
 @dataclasses.dataclass
@@ -127,6 +138,7 @@ class PolynomialCode(_SchemeBase):
     p: int
     q: int
     name: str = "polynomial"
+    pair_coded = True
 
     def __post_init__(self):
         self.recovery_threshold = self.p * self.q
@@ -142,7 +154,8 @@ class PolynomialCode(_SchemeBase):
         b_blocks = bt.reshape((self.q, -1) + bt.shape[1:])
         va = np.vander(self.points, self.p, increasing=True)          # x^i
         vb = np.vander(self.points ** self.p, self.q, increasing=True)  # x^{jp}
-        return _combine(va, a_blocks), jnp.swapaxes(_combine(vb, b_blocks), 1, 2)
+        return (self._combine(va, a_blocks),
+                jnp.swapaxes(self._combine(vb, b_blocks), 1, 2))
 
     def decode(self, results: jnp.ndarray, responders: Sequence[int]):
         """results: (|F|, m/p, n/q) products A(x_i)B(x_i); returns (p, q, m/p, n/q)."""
@@ -150,8 +163,11 @@ class PolynomialCode(_SchemeBase):
         r = self.recovery_threshold
         resp = np.asarray(responders[:r])
         vand = np.vander(self.points[resp], r, increasing=True)  # (r, r)
-        coeffs = _combine(np.linalg.inv(vand), jnp.asarray(results)[:r])  # (pq, ...)
+        coeffs = self._combine(np.linalg.inv(vand), jnp.asarray(results)[:r])
         return coeffs.reshape((self.q, self.p) + coeffs.shape[1:]).swapaxes(0, 1)
+
+    def reconstruct_matmul(self, decoded, m: int, n: int):
+        return _grid_reconstruct(decoded, m, n)
 
 
 @dataclasses.dataclass
@@ -166,6 +182,7 @@ class MatDotCode(_SchemeBase):
     n_workers: int
     p: int
     name: str = "matdot"
+    pair_coded = True
 
     def __post_init__(self):
         self.recovery_threshold = 2 * self.p - 1
@@ -181,14 +198,14 @@ class MatDotCode(_SchemeBase):
         b_blocks = b2.reshape((self.p, -1) + b2.shape[1:])
         va = np.vander(self.points, self.p, increasing=True)
         vb = va[:, ::-1]  # x^{p-1-j}
-        return _combine(va, a_blocks), _combine(vb, b_blocks)
+        return self._combine(va, a_blocks), self._combine(vb, b_blocks)
 
     def decode(self, results: jnp.ndarray, responders: Sequence[int]):
         self._check(responders)
         r = self.recovery_threshold
         resp = np.asarray(responders[:r])
         vand = np.vander(self.points[resp], r, increasing=True)
-        coeffs = _combine(np.linalg.inv(vand), jnp.asarray(results)[:r])
+        coeffs = self._combine(np.linalg.inv(vand), jnp.asarray(results)[:r])
         return coeffs[self.p - 1]  # coefficient of x^{p-1} is A@B
 
 
@@ -218,7 +235,7 @@ class LCCScheme(_SchemeBase):
             while np.any(np.abs(self.alpha[i] - self.beta) < 1e-9):
                 self.alpha[i] += 1e-3
 
-    def encode(self, x: jnp.ndarray) -> jnp.ndarray:
+    def encode(self, x: jnp.ndarray, key=None) -> jnp.ndarray:
         from .spacdc import pad_to_blocks
         x = pad_to_blocks(x, self.k_blocks)
         blocks = x.reshape((self.k_blocks, -1) + x.shape[1:])
@@ -227,7 +244,7 @@ class LCCScheme(_SchemeBase):
             noise = self.noise_scale * rng.standard_normal(
                 (self.t_colluding,) + blocks.shape[1:])
             blocks = jnp.concatenate([blocks, jnp.asarray(noise, blocks.dtype)], 0)
-        return _combine(_lagrange_matrix(self.alpha, self.beta), blocks)
+        return self._combine(_lagrange_matrix(self.alpha, self.beta), blocks)
 
     def decode(self, results: jnp.ndarray, responders: Sequence[int]):
         self._check(responders)
@@ -237,7 +254,7 @@ class LCCScheme(_SchemeBase):
         # then evaluate at beta_0..beta_{K-1}.
         nodes = self.alpha[resp]
         eval_mat = _lagrange_matrix(self.beta[: self.k_blocks], nodes)
-        return _combine(eval_mat, jnp.asarray(results)[:r])
+        return self._combine(eval_mat, jnp.asarray(results)[:r])
 
 
 @dataclasses.dataclass
@@ -250,6 +267,7 @@ class SecPolyCode(_SchemeBase):
     noise_scale: float = 1.0
     seed: int = 0
     name: str = "secpoly"
+    pair_coded = True
 
     def __post_init__(self):
         self.inner = PolynomialCode(self.n_workers, self.p + 1, self.q)
@@ -267,6 +285,9 @@ class SecPolyCode(_SchemeBase):
         out = self.inner.decode(results, responders)   # (p+1, q, ...)
         return out[: self.p]                           # drop the noise row
 
+    def reconstruct_matmul(self, decoded, m: int, n: int):
+        return _grid_reconstruct(decoded, m, n)
+
 
 @dataclasses.dataclass
 class BACCScheme(_SchemeBase):
@@ -278,14 +299,71 @@ class BACCScheme(_SchemeBase):
     n_workers: int
     k_blocks: int
     name: str = "bacc"
+    rateless = True
 
     def __post_init__(self):
         from .spacdc import SPACDCCode, SPACDCConfig
         self.recovery_threshold = 1  # rateless — any subset decodes
         self._code = SPACDCCode(SPACDCConfig(self.n_workers, self.k_blocks, 0))
 
-    def encode(self, x):
-        return self._code.encode(x)
+    @property
+    def use_kernel(self):
+        return self._code.use_kernel
+
+    @use_kernel.setter
+    def use_kernel(self, flag):
+        self._code.use_kernel = flag
+
+    def encode(self, x, key=None):
+        return self._code.encode(x, key)
 
     def decode(self, results, responders):
         return self._code.decode(jnp.asarray(results), np.asarray(responders))
+
+    def decode_masked(self, results, mask):
+        return self._code.decode_masked(results, mask)
+
+
+# --------------------------------------------------------------------------
+# registry entries: every factory takes the subset of the shared runtime
+# config it understands; registry.build drops the rest.
+# --------------------------------------------------------------------------
+
+def _require_blocks(name: str, p, k_blocks):
+    blocks = p or k_blocks
+    if not blocks:
+        raise ValueError(f"{name} needs k_blocks (or p) > 0")
+    return blocks
+
+
+def _polynomial_factory(n_workers, k_blocks=None, p=None, q=None):
+    # k_blocks maps to a row split (p=k_blocks, q=1) so the shared runtime
+    # config means the same block count here as for the data-coded schemes
+    return PolynomialCode(n_workers,
+                          _require_blocks("polynomial", p, k_blocks or 2),
+                          q or 1)
+
+
+def _secpoly_factory(n_workers, k_blocks=None, p=None, q=None,
+                     noise_scale=1.0, seed=0):
+    return SecPolyCode(n_workers,
+                       _require_blocks("secpoly", p, k_blocks or 2),
+                       q or 1, noise_scale, seed)
+
+
+def _matdot_factory(n_workers, k_blocks=None, p=None):
+    return MatDotCode(n_workers, p=_require_blocks("matdot", p, k_blocks))
+
+
+registry.register("conv", lambda n_workers: UncodedScheme(n_workers))
+registry.register("mds", lambda n_workers, k_blocks: MDSCode(n_workers, k_blocks))
+registry.register("polynomial", _polynomial_factory)
+registry.register("matdot", _matdot_factory)
+registry.register(
+    "lcc",
+    lambda n_workers, k_blocks, t_colluding=0, deg_f=2, noise_scale=1.0,
+    seed=0: LCCScheme(n_workers, k_blocks, t_colluding, deg_f, noise_scale,
+                      seed))
+registry.register("secpoly", _secpoly_factory)
+registry.register("bacc", lambda n_workers, k_blocks: BACCScheme(n_workers,
+                                                                 k_blocks))

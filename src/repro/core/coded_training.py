@@ -30,8 +30,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from . import berrut
-from .spacdc import SPACDCCode, SPACDCConfig
+from . import berrut, registry
 
 __all__ = [
     "coded_backprop_encode", "coded_backprop_decode",
@@ -100,10 +99,16 @@ class BerrutGradientCode:
         base = np.arange(self.n_shards)[:, None] * max(1, self.n_blocks // self.n_shards)
         return (base + np.arange(self.redundancy)[None, :]) % self.n_blocks
 
+    def _spacdc(self):
+        """The underlying SPACDC node layout, via the scheme registry."""
+        return registry.build("spacdc", n_workers=self.n_shards,
+                              k_blocks=self.n_blocks,
+                              t_colluding=self.t_noise,
+                              noise_scale=self.noise_scale, seed=self.seed)
+
     def encoder_matrix(self) -> np.ndarray:
         """(n_shards, n_blocks) row-sparse Berrut encoder (support = assignment)."""
-        code = SPACDCCode(SPACDCConfig(self.n_shards, self.n_blocks, self.t_noise,
-                                       self.noise_scale, self.seed))
+        code = self._spacdc()
         full = np.asarray(code.enc_matrix)[:, : self.n_blocks]  # (N, B)
         mask = np.zeros_like(full)
         asn = self.assignment()
@@ -122,8 +127,7 @@ class BerrutGradientCode:
         w^T E ≈ 1/B·1 over survivors.  With the Berrut node layout this is
         the partition-of-unity interpolant averaged over the B block nodes.
         """
-        code = SPACDCCode(SPACDCConfig(self.n_shards, self.n_blocks, self.t_noise,
-                                       self.noise_scale, self.seed))
+        code = self._spacdc()
         mask = mask.astype(jnp.float32)
         # alternate signs over surviving nodes in sorted order (pole-free Berrut)
         order = jnp.argsort(code.alphas)
@@ -165,3 +169,12 @@ def coded_psum(encoded_grad, mask: jnp.ndarray, gcode: BerrutGradientCode,
     scaled = jax.tree.map(lambda g: (g.astype(jnp.float32) * w *
                                      mask[idx].astype(jnp.float32)), encoded_grad)
     return jax.tree.map(lambda g: jax.lax.psum(g, axis_name), scaled)
+
+
+# Gradient codes live in the same registry as the data/pair codes so launch
+# configs can name them ("berrut_grad") instead of importing classes.
+registry.register(
+    "berrut_grad",
+    lambda n_shards, n_blocks=None, redundancy=1, t_noise=0, noise_scale=0.0,
+    seed=0: BerrutGradientCode(n_shards, n_blocks or n_shards, redundancy,
+                               t_noise, noise_scale, seed))

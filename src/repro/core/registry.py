@@ -1,0 +1,178 @@
+"""The CodingScheme protocol + string-keyed registry (Table II unified).
+
+The paper's framing — SPACDC and its baselines are interchangeable codes
+differing only in encode/decode matrices and recovery thresholds — becomes
+the code's architecture: every scheme implements :class:`CodingScheme` and
+registers a factory under a short name, and every consumer (the
+master/worker runtime, the complexity benchmarks, the launch layer)
+constructs schemes exclusively through :func:`build`.  Adding a scheme is
+one ``register(...)`` call; no runtime file changes.
+
+Two shapes of scheme exist, distinguished by ``pair_coded``:
+
+* data-coded (``encode``): X is block-split and coded; each worker applies
+  an arbitrary f to its shard (CONV / MDS / LCC / BACC / SPACDC).
+* pair-coded (``encode_pair``): A and B are jointly coded for the specific
+  job C = A @ B (Polynomial / SecPoly / MatDot).
+
+``rateless`` schemes (SPACDC / BACC) decode from *any* responder subset;
+threshold schemes raise below ``recovery_threshold``.  ``wait_policy``
+turns that property into the number of workers a master should wait for.
+
+Every scheme's encode/decode contraction runs through
+``repro.kernels.ops.berrut_combine`` — the fused Pallas kernel on TPU, the
+pure-XLA twin elsewhere — controlled per-scheme by ``use_kernel``
+(None = auto by backend, True = force the kernel [interpret mode off-TPU],
+False = force the jnp path).
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Dict, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = ["CodingScheme", "SchemeDefaults", "register", "build", "get",
+           "names"]
+
+
+@runtime_checkable
+class CodingScheme(Protocol):
+    """What the runtime/benchmarks rely on.  See module docstring."""
+
+    name: str
+    n_workers: int
+    recovery_threshold: int
+    pair_coded: bool
+    rateless: bool
+    use_kernel: Optional[bool]
+
+    def encode(self, x, key=None):
+        """(m, ...) data -> (N, ...) coded shards, one per worker."""
+
+    def encode_pair(self, a, b):
+        """(A, B) -> ((N, ...), (N, ...)) coded factor shards for A @ B."""
+
+    def decode(self, results, responders):
+        """Worker results (|F|, ...) in responder order -> decoded blocks."""
+
+    def decode_masked(self, results, mask):
+        """results (N, ...) + boolean/float responder mask (N,) -> blocks."""
+
+    def wait_policy(self, n_stragglers: int = 0) -> int:
+        """How many responders a master should wait for per round."""
+
+    def reconstruct_matmul(self, decoded, m: int, n: int):
+        """Decoded blocks -> the (m, n) product (undo block layout/padding)."""
+
+
+class SchemeDefaults:
+    """Mixin supplying the optional half of the protocol.
+
+    Subclasses set ``name`` / ``n_workers`` / ``recovery_threshold`` and
+    implement ``encode`` or ``encode_pair`` + ``decode``; everything else
+    has a sound default here.
+    """
+
+    name: str = "base"
+    pair_coded: bool = False
+    rateless: bool = False
+    use_kernel: Optional[bool] = None   # None = auto (kernel on TPU only)
+
+    # -- coding ----------------------------------------------------------
+    def encode(self, x, key=None):
+        raise NotImplementedError(
+            f"{self.name}: pair-coded scheme — use encode_pair(a, b)")
+
+    def encode_pair(self, a, b):
+        raise NotImplementedError(
+            f"{self.name}: data-coded scheme — use encode(x)")
+
+    def decode_masked(self, results, mask):
+        """Default masked decode for concrete (non-traced) masks: gather the
+        responder subset and defer to :meth:`decode`.  Rateless schemes that
+        support runtime masks inside jit override this (SPACDC)."""
+        resp = np.flatnonzero(np.asarray(mask))
+        return self.decode(jnp.asarray(results)[resp], resp)
+
+    # -- runtime contract ------------------------------------------------
+    def wait_policy(self, n_stragglers: int = 0) -> int:
+        if self.rateless:
+            # no threshold: wait for everyone who isn't straggling
+            return max(self.n_workers - n_stragglers, 1)
+        return self.recovery_threshold
+
+    def reconstruct_matmul(self, decoded, m: int, n: int):
+        """Row-block layout (K, m/K, n) -> (m, n); also covers schemes whose
+        decode already yields a 2-D product."""
+        out = jnp.reshape(jnp.asarray(decoded), (-1, np.shape(decoded)[-1]))
+        return out[:m, :n]
+
+    # -- the one contraction every scheme shares -------------------------
+    def _combine(self, weights, blocks):
+        """out[q] = Σ_j W[q, j]·blocks[j] through the kernel dispatcher."""
+        from ..kernels.ops import berrut_combine
+        return berrut_combine(jnp.asarray(weights, jnp.float32),
+                              jnp.asarray(blocks),
+                              force_kernel=self.use_kernel)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., Any]] = {}
+
+
+def register(name: str, factory: Optional[Callable[..., Any]] = None):
+    """Register ``factory`` under ``name`` (usable as a decorator).
+
+    The factory receives the subset of :func:`build`'s kwargs its signature
+    declares, so schemes with different knobs share one call site.
+    """
+    key = name.lower()
+
+    def _register(f):
+        if key in _REGISTRY:
+            raise ValueError(f"coding scheme {key!r} already registered")
+        _REGISTRY[key] = f
+        return f
+
+    return _register(factory) if factory is not None else _register
+
+
+def names() -> list:
+    """Registered scheme names, sorted."""
+    return sorted(_REGISTRY)
+
+
+def get(name: str) -> Callable[..., Any]:
+    key = str(name).lower()
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown coding scheme {name!r}; registered: "
+                       f"{', '.join(names())}")
+    return _REGISTRY[key]
+
+
+def build(name: str, **cfg):
+    """Construct a registered scheme, dropping kwargs its factory doesn't
+    take — so a runtime can pass its full (n_workers, k_blocks, t_colluding,
+    noise_scale, seed, ...) config to any scheme name.
+
+    ``use_kernel`` is handled uniformly here (set post-construction) so
+    every scheme gains the flag without declaring it.
+    """
+    factory = get(name)
+    use_kernel = cfg.pop("use_kernel", None)
+    params = inspect.signature(factory).parameters
+    if not any(p.kind is p.VAR_KEYWORD for p in params.values()):
+        cfg = {k: v for k, v in cfg.items() if k in params}
+    try:
+        scheme = factory(**cfg)
+    except TypeError as e:
+        raise TypeError(f"building coding scheme {name!r}: {e}") from e
+    if use_kernel is not None:
+        scheme.use_kernel = use_kernel
+    return scheme

@@ -9,8 +9,11 @@ Pipeline (Algorithm 1):
      interpolant over {(alpha_i, Ỹ_i)}_{i∈F} and evaluate at beta_0..beta_{K-1}
      to get Y_i ≈ f(X_i).  No recovery threshold: |F| can be anything ≥ 1.
 
-The encode/decode contraction is the oracle for the Pallas kernel in
-``repro.kernels.berrut_encode`` (set ``use_kernel=True`` to use it).
+The encode/decode contraction runs through ``repro.kernels.ops`` (the
+fused Pallas ``berrut_encode_kernel`` on TPU, the pure-XLA twin elsewhere);
+set ``use_kernel=True`` on :class:`SPACDCConfig` (or pass it to
+``registry.build("spacdc", ...)``) to force the kernel path — interpret
+mode off-TPU — and ``use_kernel=False`` to force the jnp path.
 """
 
 from __future__ import annotations
@@ -22,7 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from . import berrut
+from . import berrut, registry
 
 __all__ = ["SPACDCConfig", "SPACDCCode", "pad_to_blocks"]
 
@@ -46,6 +49,7 @@ class SPACDCConfig:
     fh_degree: int = 0      # Floater–Hormann blending degree (0 = Berrut,
                             # the paper's scheme; >0 = beyond-paper accuracy)
     seed: int = 0
+    use_kernel: Optional[bool] = None  # None=auto (TPU), True=Pallas, False=jnp
 
     def __post_init__(self):
         if self.k_blocks < 1 or self.n_workers < 1:
@@ -54,11 +58,22 @@ class SPACDCConfig:
             raise ValueError("T must be >= 0")
 
 
-class SPACDCCode:
-    """Stateful encoder/decoder holding the node layout for (N, K, T)."""
+class SPACDCCode(registry.SchemeDefaults):
+    """Stateful encoder/decoder holding the node layout for (N, K, T).
 
-    def __init__(self, cfg: SPACDCConfig):
+    Implements the :class:`repro.core.registry.CodingScheme` protocol:
+    rateless (recovery threshold 1 — any responder subset decodes).
+    """
+
+    name = "spacdc"
+    rateless = True
+    recovery_threshold = 1
+
+    def __init__(self, cfg: SPACDCConfig, use_kernel: Optional[bool] = None):
         self.cfg = cfg
+        self.use_kernel = cfg.use_kernel if use_kernel is None else use_kernel
+        self.n_workers = cfg.n_workers
+        self.k_blocks = cfg.k_blocks
         alphas, betas = berrut.default_alpha_beta(cfg.n_workers, cfg.k_blocks, cfg.t_colluding)
         self.alphas = jnp.asarray(alphas, dtype=jnp.float32)
         self.betas = jnp.asarray(betas, dtype=jnp.float32)
@@ -92,7 +107,7 @@ class SPACDCCode:
             raise ValueError(f"expected {k} blocks, got {blocks.shape[0]}")
         noise = self.make_noise(blocks.shape[1:], blocks.dtype, key)
         stacked = jnp.concatenate([blocks, noise], axis=0)  # (K+T, ...)
-        return berrut.combine(self.enc_matrix, stacked)
+        return self._combine(self.enc_matrix, stacked)
 
     def encode(self, x: jnp.ndarray, key: Optional[jax.Array] = None) -> jnp.ndarray:
         """Full data-process phase: (m, d) -> (N, m/K, d)."""
@@ -123,7 +138,7 @@ class SPACDCCode:
 
     def decode(self, results: jnp.ndarray, responders: Sequence[int] | np.ndarray) -> jnp.ndarray:
         """results: (|F|, ...) worker outputs (ordered as `responders`) -> (K, ...) approx f(X_i)."""
-        return berrut.combine(self.decode_matrix(responders), results)
+        return self._combine(self.decode_matrix(responders), results)
 
     def decode_masked(self, results: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
         """Traceable decode: results (N, ...) with a boolean responder mask (N,).
@@ -142,7 +157,7 @@ class SPACDCCode:
         diff = self.betas[: self.cfg.k_blocks, None] - self.alphas[None, :]  # (K, N)
         terms = signs / diff
         w = terms / jnp.sum(terms, axis=-1, keepdims=True)
-        return berrut.combine(w, results)
+        return self._combine(w, results)
 
     # ------------------------------------------------------------ end-to-end
     def run(self, x: jnp.ndarray, f: Callable[[jnp.ndarray], jnp.ndarray],
@@ -158,3 +173,10 @@ class SPACDCCode:
             responders = np.arange(self.cfg.n_workers)
         resp = np.asarray(responders)
         return self.decode(results[resp], resp)
+
+
+registry.register(
+    "spacdc",
+    lambda n_workers, k_blocks, t_colluding=0, noise_scale=1.0, fh_degree=0,
+    seed=0: SPACDCCode(SPACDCConfig(n_workers, k_blocks, t_colluding,
+                                    noise_scale, fh_degree, seed)))

@@ -1,0 +1,21 @@
+"""repro.dist — the distribution layer: sharding-spec utilities and
+gradient compression for the production mesh.
+
+``sharding``     PartitionSpec surgery (pruning non-divisible dims, FSDP
+                 data-axis insertion, tree->NamedSharding resolution) plus
+                 ``shard_hint``, the mesh-aware no-op-on-CPU constraint.
+``compression``  int8 symmetric-quantization of gradient trees for the
+                 compressed all-reduce path in ``launch.steps``.
+"""
+
+from . import compression, sharding
+from .compression import int8_compress, int8_decompress
+from .sharding import (add_data_axis, prune_spec, resolve_spec, shard_hint,
+                       tree_add_data_axis, tree_shardings)
+
+__all__ = [
+    "compression", "sharding",
+    "int8_compress", "int8_decompress",
+    "add_data_axis", "prune_spec", "resolve_spec", "shard_hint",
+    "tree_add_data_axis", "tree_shardings",
+]

@@ -1,0 +1,41 @@
+"""Gradient compression for the coded all-reduce path.
+
+Symmetric per-tensor int8 quantization: one f32 scale per tensor, values
+rounded to the nearest of 255 levels in [-127·s, 127·s].  The round-trip
+error is bounded by s/2 elementwise (asserted by the property tests), which
+is far below the Berrut approximation error of the coded aggregation it
+rides on — so compressing the *encoded* gradients costs no training
+accuracy at 4× less all-reduce traffic than f32.
+
+All ops are jnp and trace-safe: ``int8_compress`` can run inside the jitted
+train step on each gradient leaf.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["int8_compress", "int8_decompress"]
+
+_QMAX = 127.0
+
+
+def int8_compress(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (any float shape) -> (q int8 same shape, scale f32 scalar).
+
+    scale = max|x| / 127 (1.0 for an all-zero tensor, so decompression is
+    exact there); q = round(x / scale) — never clipped beyond ±127 because
+    scale is derived from the max.
+    """
+    x = jnp.asarray(x)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.where(amax > 0, amax / _QMAX, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -_QMAX, _QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`int8_compress` (up to the s/2 rounding error)."""
+    return q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)

@@ -21,10 +21,16 @@ def _on_tpu() -> bool:
 
 
 def berrut_combine(weights, blocks, *, force_kernel: bool | None = None):
-    """SPACDC encode/decode contraction with kernel dispatch.
+    """Coding-scheme encode/decode contraction with kernel dispatch.
+
+    Every registered ``CodingScheme`` (see ``repro.core.registry``) routes
+    its encode/decode matrix products here.  ``force_kernel`` is the
+    schemes' ``use_kernel`` tri-state: None = kernel on TPU only, True =
+    force the Pallas kernel (interpret mode off-TPU), False = pure XLA.
 
     blocks may be any (J, ...) tree-shaped payload; flattened internally.
     """
+    blocks = jnp.asarray(blocks)
     j = blocks.shape[0]
     flat = blocks.reshape(j, -1)
     use_kernel = _on_tpu() if force_kernel is None else force_kernel

@@ -35,7 +35,7 @@ from ..models import build_model, input_specs
 from ..optim import adamw
 from ..optim.optimizers import OptState
 from .hlo_analysis import analyze
-from .mesh import make_production_mesh
+from .mesh import make_production_mesh, use_mesh
 from .roofline_math import model_flops
 from .steps import build_serve_step, build_train_step
 
@@ -120,7 +120,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                                              sharding=bspec(k, v))
                      for k, v in batch_structs.items()}
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if shape.kind == "train":
             opt = adamw(1e-4)
             o_shapes = jax.eval_shape(opt.init, p_structs)

@@ -18,7 +18,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from ..core import BerrutGradientCode
+from ..core import BerrutGradientCode, registry
 from ..optim.optimizers import Optimizer, apply_updates
 
 
@@ -70,10 +70,17 @@ def build_train_step(model, optimizer: Optimizer, *, accum: int = 1,
     gcode=None  -> standard DP mean-gradient (baseline path).
     gcode=...   -> Berrut-coded aggregation over gcode.n_blocks batch blocks
                    with the (n_blocks,) responder ``mask`` applied at decode.
+                   May be a BerrutGradientCode instance or a config mapping
+                   (``{"name": "berrut_grad", "n_shards": 8, ...}``) resolved
+                   through the coding-scheme registry — launch configs can
+                   stay declarative.
     dp_axes     -> mesh axis name(s) the coded block dim shards over; passed
                    as vmap's spmd_axis_name so per-block compute stays
                    sharded instead of being replicated by the partitioner.
     """
+    if isinstance(gcode, dict):
+        spec = dict(gcode)
+        gcode = registry.build(spec.pop("name", "berrut_grad"), **spec)
     if compress:
         from ..dist.compression import int8_compress, int8_decompress
 

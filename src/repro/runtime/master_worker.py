@@ -8,9 +8,13 @@ latencies + decode (+ MEA-ECC encrypt/decrypt when enabled).  A real-thread
 mode exists to validate the virtual clock (tests), but benchmarks default
 to the virtual clock so Fig-3/4 sweeps run in seconds, not hours.
 
-``DistributedMatmul`` adapts each coding scheme (CONV / MDS / MatDot /
-SPACDC / BACC / LCC) to the backprop job A@B the SPACDC-DL algorithm
-distributes (Eq. 23): A = (Θ^l)^T row-blocks, B = δ^{l+1}.
+``DistributedMatmul`` adapts *any* registered coding scheme (CONV / MDS /
+MatDot / Polynomial / SecPoly / LCC / BACC / SPACDC — see
+``repro.core.registry``) to the backprop job A@B the SPACDC-DL algorithm
+distributes (Eq. 23): A = (Θ^l)^T row-blocks, B = δ^{l+1}.  Scheme
+construction, wait policy, pair-vs-data coding and product reassembly all
+come from the scheme object itself, so a new scheme needs zero runtime
+changes.
 """
 
 from __future__ import annotations
@@ -24,8 +28,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core import SPACDCCode, SPACDCConfig
-from ..core.baselines import MDSCode, MatDotCode, UncodedScheme
+from ..core import registry
 from .straggler import StragglerModel
 
 
@@ -95,7 +98,8 @@ class DistributedMatmul:
 
     def __init__(self, scheme_name: str, n_workers: int, k_blocks: int,
                  t_colluding: int = 0, straggler: Optional[StragglerModel] = None,
-                 n_stragglers: int = 0, encrypt: bool = False, seed: int = 0):
+                 n_stragglers: int = 0, encrypt: bool = False, seed: int = 0,
+                 **scheme_kwargs):
         self.name = scheme_name
         self.n = n_workers
         self.k = k_blocks
@@ -103,22 +107,15 @@ class DistributedMatmul:
         self.encrypt = encrypt
         self.straggler = straggler or StragglerModel(n_workers, n_stragglers, seed=seed)
         self.pool = WorkerPool(n_workers, self.straggler)
-        if scheme_name == "conv":
-            self.scheme = UncodedScheme(n_workers)
-            self.wait_for = n_workers
-        elif scheme_name == "mds":
-            self.scheme = MDSCode(n_workers, k_blocks)
-            self.wait_for = self.scheme.recovery_threshold
-        elif scheme_name == "matdot":
-            self.scheme = MatDotCode(n_workers, p=k_blocks)
-            self.wait_for = self.scheme.recovery_threshold
-        elif scheme_name == "spacdc":
-            self.scheme = SPACDCCode(SPACDCConfig(n_workers, k_blocks, t_colluding,
-                                                  noise_scale=1.0, seed=seed))
-            # rateless: wait for everyone who isn't a straggler
-            self.wait_for = max(n_workers - self.straggler.n_stragglers, 1)
-        else:
-            raise ValueError(f"unknown scheme {scheme_name}")
+        # one construction path for every scheme; extra kwargs (p, q, deg_f,
+        # noise_scale, use_kernel, ...) flow through to the factory that
+        # understands them
+        scheme_kwargs.setdefault("noise_scale", 1.0)
+        self.scheme = registry.build(scheme_name, n_workers=n_workers,
+                                     k_blocks=k_blocks,
+                                     t_colluding=t_colluding,
+                                     seed=seed, **scheme_kwargs)
+        self.wait_for = self.scheme.wait_policy(self.straggler.n_stragglers)
         self._crypto = None
         if encrypt:
             from ..crypto import MEAECC, generate_keypair
@@ -136,7 +133,7 @@ class DistributedMatmul:
         t0 = time.perf_counter()
         ct = mea.encrypt(m[:4, :4], kp.pk)       # sample a small block,
         mea.decrypt(ct, kp)                      # scale by elements
-        per_elem = (time.perf_counter() - t0) / 32
+        per_elem = (time.perf_counter() - t0) / 16   # 4×4 block = 16 elements
         total_elems = sum(int(np.prod(np.shape(s[0] if isinstance(s, tuple) else s)))
                           for s in shards)
         return per_elem * total_elems * 3        # enc + worker dec + result enc
@@ -147,8 +144,9 @@ class DistributedMatmul:
         a = jnp.asarray(a, jnp.float32)
         b = jnp.asarray(b, jnp.float32)
         t0 = time.perf_counter()
-        if self.name == "matdot":
+        if self.scheme.pair_coded:
             ea, eb = self.scheme.encode_pair(a, b)
+            jax.block_until_ready((ea, eb))
             shards = [(ea[i], eb[i]) for i in range(self.n)]
             f = lambda ab: np.asarray(ab[0] @ ab[1])
         else:
@@ -162,10 +160,8 @@ class DistributedMatmul:
                                                     self.wait_for)
         t0 = time.perf_counter()
         dec = self.scheme.decode(jnp.asarray(np.stack(results)), list(resp))
-        if self.name == "matdot":
-            out = np.asarray(dec)
-        else:
-            out = np.asarray(dec).reshape(-1, b.shape[-1])[: a.shape[0]]
+        out = np.asarray(self.scheme.reconstruct_matmul(dec, a.shape[0],
+                                                        b.shape[-1]))
         t_dec = time.perf_counter() - t0
         stats = RoundStats(t_enc, wait_s, t_dec,
                            self._crypto_overhead(shards), len(resp))

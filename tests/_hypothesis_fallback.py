@@ -1,0 +1,63 @@
+"""Deterministic mini property-test harness used when `hypothesis` is not
+installed (the pinned container lacks it; installing deps is not an option).
+
+Implements just the surface tests/test_property.py uses: ``given`` with
+keyword strategies, ``settings(max_examples=..., deadline=...)`` and the
+``integers`` / ``floats`` / ``lists`` strategies.  Each strategy draws from
+one seeded numpy Generator, so failures reproduce exactly.  With real
+hypothesis available the tests import it instead and gain shrinking — this
+fallback only preserves coverage, not ergonomics.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class strategies:  # namespace mirroring `hypothesis.strategies`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+def settings(max_examples=20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", 20))
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                fn(**{k: s.draw(rng) for k, s in strats.items()})
+        # pytest must see a zero-arg test, not the wrapped strategy params
+        # (functools.wraps copies __wrapped__, which inspect follows)
+        wrapper.__signature__ = inspect.Signature([])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

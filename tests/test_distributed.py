@@ -31,7 +31,7 @@ from repro.configs import tiny_config
 from repro.core import BerrutGradientCode
 from repro.data.pipeline import TokenPipeline
 from repro.dist.sharding import tree_shardings
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_test_mesh, use_mesh
 from repro.launch.steps import build_train_step
 from repro.models import build_model
 from repro.optim import adamw
@@ -53,7 +53,7 @@ params = jax.device_put(params, p_shard)
 state = jax.device_put(state, jax.tree.map(lambda s: s, __import__("repro.optim.optimizers", fromlist=["OptState"]).OptState(
     NamedSharding(mesh, P()), p_shard, p_shard)))
 pipe = TokenPipeline(cfg.vocab_size, 32, nb * 2 * 2)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     jstep = jax.jit(step)
     losses = []
     for i in range(8):
@@ -76,7 +76,7 @@ import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import tiny_config
 from repro.dist.sharding import tree_shardings
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_test_mesh, use_mesh
 from repro.models import build_model
 import dataclasses
 
@@ -95,7 +95,7 @@ for t in range(6):
     ref.append(np.asarray(logits[:, 0], np.float32))
 
 # sharded: cache seq dim over model, batch over data
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     c_shapes = jax.eval_shape(lambda: model.init_cache(2, 8))
     c_shard = tree_shardings(model.cache_specs(), mesh, c_shapes)
     cache = jax.device_put(model.init_cache(2, 8), c_shard)
