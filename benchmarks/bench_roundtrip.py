@@ -1,0 +1,115 @@
+"""Fused vs unfused coded-round wall clock — the perf trajectory seed.
+
+Times the *master-side* wall time of ``DistributedMatmul.matmul`` rounds
+(encode + dispatch + decode + reassembly; the virtual-clock straggler wait
+is simulated, not slept) on the fused single-dispatch jitted pipeline vs
+the PR-1 per-worker Python loop, at fig-3 scale (N=30, K=24, T=3) plus a
+wider layer, and writes ``BENCH_roundtrip.json`` at the repo root.
+
+  PYTHONPATH=src python benchmarks/bench_roundtrip.py [--smoke] [--out PATH]
+
+``--smoke`` shrinks shapes/reps for CI.  Update the checked-in JSON by
+re-running without ``--smoke`` on a quiet machine; the acceptance bar is
+``speedup >= 3`` for every entry (see README "Performance").
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+from repro.runtime.master_worker import DistributedMatmul
+
+# fig-3 apparatus: N=30 workers, K=24 blocks, T=3 noise blocks, S=3 stragglers
+FIG3 = dict(n_workers=30, k_blocks=24, t_colluding=3, n_stragglers=3, seed=0)
+
+SCALES = [
+    # (name, m, d, n_out) for the coded job A(m,d) @ B(d,n_out)
+    ("fig3_backprop", 512, 10, 256),     # Θ^T(512,10) @ δ(10,256) — Fig 3's MLP
+    ("fig3_wide", 1536, 256, 512),       # a wider layer at the same N/K/T
+]
+SMOKE_SCALES = [("smoke", 96, 16, 32)]
+
+
+def _time_rounds(dist: DistributedMatmul, a, b, reps: int) -> float:
+    """Median wall seconds per round (after a warm-up round)."""
+    dist.matmul(a, b, round_idx=0)                 # warm: compile + caches
+    times = []
+    for r in range(reps):
+        t0 = time.perf_counter()
+        dist.matmul(a, b, round_idx=r + 1)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def measure(smoke: bool = False) -> dict:
+    rng = np.random.default_rng(0)
+    scales = SMOKE_SCALES if smoke else SCALES
+    reps = 3 if smoke else 10
+    cfg = dict(FIG3)
+    if smoke:
+        cfg.update(n_workers=8, k_blocks=4, t_colluding=1, n_stragglers=1)
+    results = []
+    for name, m, d, n_out in scales:
+        a = rng.standard_normal((m, d)).astype(np.float32)
+        b = rng.standard_normal((d, n_out)).astype(np.float32)
+        fused = DistributedMatmul("spacdc", fused=True, **cfg)
+        loop = DistributedMatmul("spacdc", fused=False, **cfg)
+        t_fused = _time_rounds(fused, a, b, reps)
+        t_loop = _time_rounds(loop, a, b, reps)
+        results.append({
+            "name": name,
+            "shape": [m, d, n_out],
+            "fused_ms": round(t_fused * 1e3, 4),
+            "loop_ms": round(t_loop * 1e3, 4),
+            "speedup": round(t_loop / t_fused, 2),
+        })
+    return {
+        "benchmark": "coded_round_trip",
+        "scheme": "spacdc",
+        "config": cfg,
+        "reps": reps,
+        "backend": jax.default_backend(),
+        "platform": platform.machine(),
+        "results": results,
+    }
+
+
+def run(rows, smoke: bool = False):
+    """benchmarks.run entry point: append (name, us, derived) CSV rows."""
+    report = measure(smoke=smoke)
+    for r in report["results"]:
+        rows.append((f"roundtrip_fused_{r['name']}", r["fused_ms"] * 1e3,
+                     f"speedup={r['speedup']}x"))
+        rows.append((f"roundtrip_loop_{r['name']}", r["loop_ms"] * 1e3,
+                     "per-worker python loop"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few reps (CI)")
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent.parent
+                                         / "BENCH_roundtrip.json"))
+    args = ap.parse_args()
+    report = measure(smoke=args.smoke)
+    Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    for r in report["results"]:
+        print(f"{r['name']}: fused {r['fused_ms']:.2f} ms  "
+              f"loop {r['loop_ms']:.2f} ms  speedup {r['speedup']}x")
+    worst = min(r["speedup"] for r in report["results"])
+    print(f"wrote {args.out} (worst speedup {worst}x)")
+    if worst < 3.0 and not args.smoke:
+        raise SystemExit(f"fused round regressed: {worst}x < 3x target")
+
+
+if __name__ == "__main__":
+    main()

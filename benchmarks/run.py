@@ -11,7 +11,8 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: table2,fig3,fig4,fig5,fig6,fig7,roofline")
+                    help="comma list: table2,fig3,fig4,fig5,fig6,fig7,"
+                         "roundtrip,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -20,7 +21,7 @@ def main() -> None:
     def want(*keys):
         return only is None or any(k in only for k in keys)
 
-    from benchmarks import (bench_accuracy, bench_complexity,
+    from benchmarks import (bench_accuracy, bench_complexity, bench_roundtrip,
                             bench_training_time, roofline)
     if want("table2", "fig5", "fig6", "fig7"):
         bench_complexity.run(rows)
@@ -28,6 +29,8 @@ def main() -> None:
         bench_training_time.run(rows)
     if want("fig4"):
         bench_accuracy.run(rows)
+    if want("roundtrip"):
+        bench_roundtrip.run(rows)
     if want("roofline"):
         roofline.run(rows)
 

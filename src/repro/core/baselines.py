@@ -90,6 +90,14 @@ class UncodedScheme(_SchemeBase):
         x = pad_to_blocks(x, self.n_workers)
         return x.reshape((self.n_workers, -1) + x.shape[1:])
 
+    def fused_encoder_matrix(self):
+        # encode is the identity over the N-block split; the fused path is
+        # exact exactly when the mask is full — which wait_policy guarantees
+        return np.eye(self.n_workers, dtype=np.float32)
+
+    def fused_blocks(self, x, key=None):
+        return self.encode(x)
+
     def decode(self, results: jnp.ndarray, responders: Sequence[int]):
         self._check(responders)
         order = np.argsort(np.asarray(responders))
@@ -114,10 +122,15 @@ class MDSCode(_SchemeBase):
         self.generator = np.vander(self.points, self.k_blocks, increasing=True)
 
     def encode(self, x: jnp.ndarray, key=None) -> jnp.ndarray:
+        return self._combine(self.generator, self.fused_blocks(x))
+
+    def fused_encoder_matrix(self):
+        return self.generator
+
+    def fused_blocks(self, x, key=None):
         from .spacdc import pad_to_blocks
         x = pad_to_blocks(x, self.k_blocks)
-        blocks = x.reshape((self.k_blocks, -1) + x.shape[1:])
-        return self._combine(self.generator, blocks)
+        return x.reshape((self.k_blocks, -1) + x.shape[1:])
 
     def decode(self, results: jnp.ndarray, responders: Sequence[int]):
         self._check(responders)
@@ -234,8 +247,15 @@ class LCCScheme(_SchemeBase):
         for i in range(len(self.alpha)):
             while np.any(np.abs(self.alpha[i] - self.beta) < 1e-9):
                 self.alpha[i] += 1e-3
+        self.encoder = _lagrange_matrix(self.alpha, self.beta)   # (N, K+T)
 
     def encode(self, x: jnp.ndarray, key=None) -> jnp.ndarray:
+        return self._combine(self.encoder, self.fused_blocks(x))
+
+    def fused_encoder_matrix(self):
+        return self.encoder
+
+    def fused_blocks(self, x, key=None):
         from .spacdc import pad_to_blocks
         x = pad_to_blocks(x, self.k_blocks)
         blocks = x.reshape((self.k_blocks, -1) + x.shape[1:])
@@ -244,7 +264,7 @@ class LCCScheme(_SchemeBase):
             noise = self.noise_scale * rng.standard_normal(
                 (self.t_colluding,) + blocks.shape[1:])
             blocks = jnp.concatenate([blocks, jnp.asarray(noise, blocks.dtype)], 0)
-        return self._combine(_lagrange_matrix(self.alpha, self.beta), blocks)
+        return blocks
 
     def decode(self, results: jnp.ndarray, responders: Sequence[int]):
         self._check(responders)
@@ -322,6 +342,15 @@ class BACCScheme(_SchemeBase):
 
     def decode_masked(self, results, mask):
         return self._code.decode_masked(results, mask)
+
+    def decode_matrix_masked(self, mask):
+        return self._code.decode_matrix_masked(mask)
+
+    def fused_encoder_matrix(self):
+        return self._code.fused_encoder_matrix()
+
+    def fused_blocks(self, x, key=None):
+        return self._code.fused_blocks(x, key)
 
 
 # --------------------------------------------------------------------------

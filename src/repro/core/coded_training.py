@@ -24,6 +24,7 @@ Both paths share the math in ``repro.core.berrut``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional
 
 import numpy as np
@@ -93,22 +94,30 @@ class BerrutGradientCode:
         if not (1 <= self.redundancy <= self.n_blocks):
             raise ValueError("redundancy must be in [1, n_blocks]")
 
-    # -- static (numpy) coding matrices; embedded as constants in the jitted step
-    def assignment(self) -> np.ndarray:
-        """(n_shards, redundancy) block ids per shard (cyclic)."""
-        base = np.arange(self.n_shards)[:, None] * max(1, self.n_blocks // self.n_shards)
-        return (base + np.arange(self.redundancy)[None, :]) % self.n_blocks
-
-    def _spacdc(self):
+    # -- static (numpy) coding matrices; embedded as constants in the jitted
+    # step.  All three are cached: the frozen dataclass makes cached_property
+    # legal (it writes through __dict__), and the builders otherwise re-ran
+    # the registry + numpy construction on every call — including under trace.
+    @functools.cached_property
+    def _code(self):
         """The underlying SPACDC node layout, via the scheme registry."""
         return registry.build("spacdc", n_workers=self.n_shards,
                               k_blocks=self.n_blocks,
                               t_colluding=self.t_noise,
                               noise_scale=self.noise_scale, seed=self.seed)
 
-    def encoder_matrix(self) -> np.ndarray:
-        """(n_shards, n_blocks) row-sparse Berrut encoder (support = assignment)."""
-        code = self._spacdc()
+    @functools.cached_property
+    def _assignment(self) -> np.ndarray:
+        base = np.arange(self.n_shards)[:, None] * max(1, self.n_blocks // self.n_shards)
+        return (base + np.arange(self.redundancy)[None, :]) % self.n_blocks
+
+    def assignment(self) -> np.ndarray:
+        """(n_shards, redundancy) block ids per shard (cyclic)."""
+        return self._assignment
+
+    @functools.cached_property
+    def _encoder_matrix(self) -> np.ndarray:
+        code = self._code
         full = np.asarray(code.enc_matrix)[:, : self.n_blocks]  # (N, B)
         mask = np.zeros_like(full)
         asn = self.assignment()
@@ -120,24 +129,19 @@ class BerrutGradientCode:
             np.sign(sparse.sum(axis=1, keepdims=True) + 1e-12)
         return sparse
 
+    def encoder_matrix(self) -> np.ndarray:
+        """(n_shards, n_blocks) row-sparse Berrut encoder (support = assignment)."""
+        return self._encoder_matrix
+
     def decoder_weights(self, mask: jnp.ndarray) -> jnp.ndarray:
         """(n_shards,) decode weights for the masked responder set.
 
         w solves (softly) the 'recover the uniform mean' condition
         w^T E ≈ 1/B·1 over survivors.  With the Berrut node layout this is
-        the partition-of-unity interpolant averaged over the B block nodes.
+        the partition-of-unity interpolant averaged over the B block nodes
+        (the mean over block nodes of ``decode_matrix_masked``).
         """
-        code = self._spacdc()
-        mask = mask.astype(jnp.float32)
-        # alternate signs over surviving nodes in sorted order (pole-free Berrut)
-        order = jnp.argsort(code.alphas)
-        rank_sorted = jnp.cumsum(mask[order]) - 1.0
-        rank = jnp.zeros_like(mask).at[order].set(rank_sorted)
-        signs = jnp.where(jnp.mod(rank, 2.0) == 0.0, 1.0, -1.0) * mask
-        betas = code.betas[: self.n_blocks]
-        diff = betas[:, None] - code.alphas[None, :]          # (B, N)
-        terms = signs / diff
-        w_per_block = terms / jnp.sum(terms, axis=-1, keepdims=True)  # (B, N)
+        w_per_block = self._code.decode_matrix_masked(mask)   # (B, N)
         return jnp.mean(w_per_block, axis=0)                  # (N,)
 
     # -- traced pieces -----------------------------------------------------

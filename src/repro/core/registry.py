@@ -19,6 +19,11 @@ Two shapes of scheme exist, distinguished by ``pair_coded``:
 threshold schemes raise below ``recovery_threshold``.  ``wait_policy``
 turns that property into the number of workers a master should wait for.
 
+Schemes whose encode is a data-independent linear contraction additionally
+expose ``supports_fused`` / ``fused_round(a, b, mask)``: the whole round —
+encode, all N worker matmuls, masked decode — as one traceable function
+the runtime jits into a single dispatch (see ``kernels.ops.coded_matmul``).
+
 Every scheme's encode/decode contraction runs through
 ``repro.kernels.ops.berrut_combine`` — the fused Pallas kernel on TPU, the
 pure-XLA twin elsewhere — controlled per-scheme by ``use_kernel``
@@ -61,6 +66,14 @@ class CodingScheme(Protocol):
     def decode_masked(self, results, mask):
         """results (N, ...) + boolean/float responder mask (N,) -> blocks."""
 
+    def decode_matrix_masked(self, mask):
+        """Traceable (K, N) decode weights for a runtime responder mask."""
+
+    def fused_round(self, a, b, mask, key=None):
+        """Traceable encode → batched worker matmul → masked decode for the
+        job A @ B, one jittable dispatch.  Linear data-coded schemes only
+        (``supports_fused``); routed through ``kernels.ops.coded_matmul``."""
+
     def wait_policy(self, n_stragglers: int = 0) -> int:
         """How many responders a master should wait for per round."""
 
@@ -96,6 +109,83 @@ class SchemeDefaults:
         support runtime masks inside jit override this (SPACDC)."""
         resp = np.flatnonzero(np.asarray(mask))
         return self.decode(jnp.asarray(results)[resp], resp)
+
+    # -- fused round (linear data-coded schemes) -------------------------
+    def fused_encoder_matrix(self):
+        """(N, J) data-independent linear encoder over the scheme's J
+        stacked input blocks, or None when encoding is not such a map
+        (pair-coded schemes).  Schemes whose encode is one contraction
+        (SPACDC / BACC / MDS / LCC / CONV) return their coding matrix here
+        and inherit the whole fused round pipeline."""
+        return None
+
+    def fused_blocks(self, a, key=None):
+        """Stack the J input blocks ``fused_encoder_matrix`` contracts:
+        (m, d) -> (J, blk, d), including any appended noise blocks."""
+        raise NotImplementedError(
+            f"{self.name}: scheme has no fused block layout")
+
+    @property
+    def fused_out_blocks(self) -> int:
+        """How many decoded blocks ``decode_matrix_masked`` yields (K)."""
+        return getattr(self, "k_blocks", self.n_workers)
+
+    @property
+    def supports_fused(self) -> bool:
+        return self.fused_encoder_matrix() is not None
+
+    @property
+    def fused_decode_stable(self) -> bool:
+        """Whether the traceable masked decode is trustworthy in f32.
+
+        The generic pinv decode loses the blocks outright once the
+        encoder's condition number nears f32's ~1e7 (real Vandermonde /
+        Lagrange matrices blow up with K — MDS/LCC at paper scale).
+        Runtimes use this to decide whether the fused path may be the
+        *default*; an explicit ``fused=True`` still forces it.  Rateless
+        schemes decode with their own renormalizing interpolant rather
+        than the pinv, so they are always stable.
+        """
+        if self.rateless:
+            return True
+        cached = self.__dict__.get("_fused_decode_stable")
+        if cached is None:
+            enc = self.fused_encoder_matrix()
+            cached = enc is not None and bool(
+                np.linalg.cond(np.asarray(enc, np.float64)) < 1e6)
+            self.__dict__["_fused_decode_stable"] = cached
+        return cached
+
+    def decode_matrix_masked(self, mask):
+        """Traceable (K, N) decode weights for a runtime responder mask.
+
+        Default: least-squares inversion of the mask-zeroed encoder —
+        exact for any exact linear code whose surviving rows still span
+        the block space (MDS / LCC / CONV); the pinv of a matrix with
+        zeroed rows has zeroed columns, so non-responders get weight 0.
+        Rateless schemes override with their own interpolant (SPACDC).
+        """
+        enc = self.fused_encoder_matrix()
+        if enc is None:
+            raise NotImplementedError(
+                f"{self.name}: no traceable masked decode")
+        enc_m = jnp.asarray(enc, jnp.float32) * \
+            jnp.asarray(mask, jnp.float32)[:, None]
+        return jnp.linalg.pinv(enc_m)[: self.fused_out_blocks]
+
+    def fused_round(self, a, b, mask, key=None):
+        """One traceable dispatch for the whole round: encode the input
+        blocks, run all N worker matmuls batched, masked-decode — the coded
+        shards never leave VMEM on the kernel path.  Returns the decoded
+        (K, blk, n_out) blocks (``reconstruct_matmul`` undoes the layout).
+        """
+        from ..kernels.ops import coded_matmul
+        enc = self.fused_encoder_matrix()
+        if enc is None:
+            raise NotImplementedError(f"{self.name}: no fused round path")
+        blocks = self.fused_blocks(a, key)
+        results = coded_matmul(enc, blocks, b, force_kernel=self.use_kernel)
+        return self._combine(self.decode_matrix_masked(mask), results)
 
     # -- runtime contract ------------------------------------------------
     def wait_policy(self, n_stragglers: int = 0) -> int:

@@ -19,6 +19,7 @@ mode off-TPU — and ``use_kernel=False`` to force the jnp path.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -83,6 +84,10 @@ class SPACDCCode(registry.SchemeDefaults):
             self.enc_matrix = berrut.bary_weight_matrix(self.alphas, self.betas, bw)
         else:
             self.enc_matrix = berrut.berrut_weight_matrix(self.alphas, self.betas)  # (N, K+T)
+        # per-responder-set decode matrices recur every round — cache them
+        # (bound per instance so the cache dies with the code object)
+        self._decode_matrix_cached = functools.lru_cache(maxsize=256)(
+            self._decode_matrix)
 
     # ---------------------------------------------------------------- encode
     def make_noise(self, block_shape, dtype=jnp.float32, key: Optional[jax.Array] = None):
@@ -113,6 +118,16 @@ class SPACDCCode(registry.SchemeDefaults):
         """Full data-process phase: (m, d) -> (N, m/K, d)."""
         return self.encode_blocks(self.split_blocks(x), key)
 
+    # ------------------------------------------------------------ fused round
+    def fused_encoder_matrix(self) -> jnp.ndarray:
+        return self.enc_matrix
+
+    def fused_blocks(self, a: jnp.ndarray, key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """(m, d) -> (K+T, blk, d): split into K row-blocks + T noise blocks."""
+        blocks = self.split_blocks(a)
+        noise = self.make_noise(blocks.shape[1:], blocks.dtype, key)
+        return jnp.concatenate([blocks, noise], axis=0)
+
     # ---------------------------------------------------------------- decode
     def decode_matrix(self, responders: Sequence[int] | np.ndarray) -> jnp.ndarray:
         """(K, |F|) decode matrix for a concrete responder index set F.
@@ -122,12 +137,16 @@ class SPACDCCode(registry.SchemeDefaults):
         sorted order* (Berrut's construction) — with the full set this is
         identical to index parity, with stragglers it is the only sound
         reading.  We therefore rank the surviving alphas and alternate.
+        Cached per responder tuple — the same set recurs every round.
         """
         resp = np.asarray(responders, dtype=np.int64)
         if resp.size == 0:
             raise ValueError("decode needs at least one responder")
-        nodes_np = np.asarray(self.alphas)[resp]
-        if self.cfg.fh_degree and resp.size > self.cfg.fh_degree:
+        return self._decode_matrix_cached(tuple(resp.tolist()))
+
+    def _decode_matrix(self, resp: tuple) -> jnp.ndarray:
+        nodes_np = np.asarray(self.alphas)[np.asarray(resp, dtype=np.int64)]
+        if self.cfg.fh_degree and len(resp) > self.cfg.fh_degree:
             bw = berrut.fh_weights(nodes_np, self.cfg.fh_degree)
             return berrut.bary_weight_matrix(self.betas[: self.cfg.k_blocks],
                                              jnp.asarray(nodes_np), bw)
@@ -140,14 +159,12 @@ class SPACDCCode(registry.SchemeDefaults):
         """results: (|F|, ...) worker outputs (ordered as `responders`) -> (K, ...) approx f(X_i)."""
         return self._combine(self.decode_matrix(responders), results)
 
-    def decode_masked(self, results: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
-        """Traceable decode: results (N, ...) with a boolean responder mask (N,).
-
-        Used inside jit/shard_map where the responder set is a runtime value
-        (straggler simulation, elastic scaling).  Non-responders get weight 0
-        and the Berrut weights renormalize over the survivors.
-        """
-        mask = mask.astype(jnp.float32)
+    def decode_matrix_masked(self, mask: jnp.ndarray) -> jnp.ndarray:
+        """Traceable (K, N) Berrut decode weights for a runtime responder
+        mask (N,).  Non-responders get weight 0 and the Berrut weights
+        renormalize over the survivors — used by ``decode_masked`` and the
+        fused round path inside jit/shard_map."""
+        mask = jnp.asarray(mask).astype(jnp.float32)
         # rank of each *surviving* node in sorted(alpha) order -> alternating sign
         order = jnp.argsort(self.alphas)
         mask_sorted = mask[order]
@@ -156,8 +173,15 @@ class SPACDCCode(registry.SchemeDefaults):
         signs = jnp.where(jnp.mod(rank, 2.0) == 0.0, 1.0, -1.0) * mask
         diff = self.betas[: self.cfg.k_blocks, None] - self.alphas[None, :]  # (K, N)
         terms = signs / diff
-        w = terms / jnp.sum(terms, axis=-1, keepdims=True)
-        return self._combine(w, results)
+        return terms / jnp.sum(terms, axis=-1, keepdims=True)
+
+    def decode_masked(self, results: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+        """Traceable decode: results (N, ...) with a boolean responder mask (N,).
+
+        Used inside jit/shard_map where the responder set is a runtime value
+        (straggler simulation, elastic scaling).
+        """
+        return self._combine(self.decode_matrix_masked(mask), results)
 
     # ------------------------------------------------------------ end-to-end
     def run(self, x: jnp.ndarray, f: Callable[[jnp.ndarray], jnp.ndarray],

@@ -1,7 +1,7 @@
 """Pallas TPU kernels (+ pure-jnp oracles) for the perf-critical hot spots:
-the SPACDC Berrut contraction and flash attention."""
+the SPACDC Berrut contraction, the fused coded matmul and flash attention."""
 
-from .ops import berrut_combine, flash_attention
+from .ops import berrut_combine, coded_matmul, flash_attention
 from . import ref
 
-__all__ = ["berrut_combine", "flash_attention", "ref"]
+__all__ = ["berrut_combine", "coded_matmul", "flash_attention", "ref"]

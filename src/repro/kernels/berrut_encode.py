@@ -5,19 +5,23 @@ out[q, m] = Σ_j W[q, j] · B[j, m]
   B: (J, M) stacked block payloads, M = flattened m/K·d (large)
 
 TPU adaptation of the paper's encoder (which the CPU/mpi4py original runs as
-a dense BLAS call): J and Q are tiny (≤ ~64) while M is huge, so the natural
-TPU layout streams M through VMEM in 512-lane tiles with the whole (Q, J)
-coding matrix resident, accumulating on the MXU with a (8-pad Q) × J × 512
-dot per tile.  Block-level tiling:
+a dense BLAS call): Q is tiny (≤ ~64) while M is huge, so the natural TPU
+layout streams M through VMEM in 512-lane tiles.  J is usually tiny too but
+the gradient-coding path can push it into the hundreds, so the grid is 2-D
+with the J axis innermost (sequential) and an f32 accumulator scratch
+carried across J tiles:
 
-  grid = (M // bm,)
-  W tile:  (Qp, J)    — entire coding matrix, replicated per step
-  B tile:  (J, bm)    — one payload stripe per grid step
-  out:     (Qp, bm)
+  grid = (M // bm, Jp // bj)
+  W tile:  (Qp, bj)    — one J-slab of the coding matrix
+  B tile:  (bj, bm)    — one payload stripe per grid step
+  acc:     (Qp, bm)    — f32 scratch, flushed at the last J step
 
-All dims padded to MXU/VREG multiples (Q,J→8·k, bm→128·k).  f32 accumulate
-regardless of payload dtype.  Validated in interpret mode against
-``ref.berrut_combine`` over shape/dtype sweeps (tests/test_kernels.py).
+Short axes (Q, J) are always padded to (8, 128)-multiples (cheap — the
+coding matrix is tiny); the M payload axis is padded *only when misaligned*
+with the tile size, via ``jnp.pad``, so the aligned common case moves no
+payload bytes at all.  f32 accumulate regardless of payload dtype.
+Validated in interpret mode against ``ref.berrut_combine`` over shape/dtype
+sweeps (tests/test_kernels.py).
 """
 
 from __future__ import annotations
@@ -27,25 +31,36 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .tiling import pad_to as _pad_to, tile as _tile
 
 DEFAULT_BM = 512
+DEFAULT_BJ = 512
 
 
-def _kernel(w_ref, b_ref, o_ref):
-    w = w_ref[...].astype(jnp.float32)          # (Qp, Jp)
-    b = b_ref[...].astype(jnp.float32)          # (Jp, bm)
-    o_ref[...] = jax.lax.dot_general(
+def _kernel(w_ref, b_ref, o_ref, acc_ref, *, n_j_steps: int):
+    j_i = pl.program_id(1)
+
+    @pl.when(j_i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(jnp.float32)          # (Qp, bj)
+    b = b_ref[...].astype(jnp.float32)          # (bj, bm)
+    acc_ref[...] += jax.lax.dot_general(
         w, b, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j_i == n_j_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _pad_to(x, m):
-    return ((x + m - 1) // m) * m
-
-
-@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "bj", "interpret"))
 def berrut_encode_kernel(weights: jnp.ndarray, blocks: jnp.ndarray,
-                         *, bm: int = DEFAULT_BM, interpret: bool = True):
+                         *, bm: int = DEFAULT_BM, bj: int = DEFAULT_BJ,
+                         interpret: bool = True):
     """weights (Q, J) f32; blocks (J, M) any float dtype -> (Q, M) blocks.dtype.
 
     ``interpret=True`` executes the kernel body in Python (CPU validation);
@@ -55,21 +70,24 @@ def berrut_encode_kernel(weights: jnp.ndarray, blocks: jnp.ndarray,
     j2, m = blocks.shape
     assert j == j2, (weights.shape, blocks.shape)
     qp = _pad_to(max(q, 8), 8)
-    jp = _pad_to(max(j, 8), 8)
-    mp = _pad_to(m, bm)
-    wp = jnp.zeros((qp, jp), jnp.float32).at[:q, :j].set(
-        weights.astype(jnp.float32))
-    bp = jnp.zeros((jp, mp), blocks.dtype).at[:j, :m].set(blocks)
+    bj, jp = _tile(max(j, 8), 8, bj)
+    bm, mp = _tile(m, 128, bm)
 
+    wp = jnp.pad(weights.astype(jnp.float32), ((0, qp - q), (0, jp - j)))
+    if (jp, mp) != blocks.shape:                # aligned case: zero copies
+        blocks = jnp.pad(blocks, ((0, jp - j), (0, mp - m)))
+
+    n_j = jp // bj
     out = pl.pallas_call(
-        _kernel,
-        grid=(mp // bm,),
+        functools.partial(_kernel, n_j_steps=n_j),
+        grid=(mp // bm, n_j),
         in_specs=[
-            pl.BlockSpec((qp, jp), lambda i: (0, 0)),       # W resident
-            pl.BlockSpec((jp, bm), lambda i: (0, i)),       # payload stripe
+            pl.BlockSpec((qp, bj), lambda i, jk: (0, jk)),   # coding slab
+            pl.BlockSpec((bj, bm), lambda i, jk: (jk, i)),   # payload stripe
         ],
-        out_specs=pl.BlockSpec((qp, bm), lambda i: (0, i)),
+        out_specs=pl.BlockSpec((qp, bm), lambda i, jk: (0, i)),
         out_shape=jax.ShapeDtypeStruct((qp, mp), blocks.dtype),
+        scratch_shapes=[pltpu.VMEM((qp, bm), jnp.float32)],
         interpret=interpret,
-    )(wp, bp)
+    )(wp, blocks)
     return out[:q, :m]

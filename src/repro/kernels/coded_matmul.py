@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: the fused coded matmul — encode and worker compute in
+one pass.
+
+  out[n] = (W @ blocks)[n] @ B
+    W:      (N, J)       coding matrix (J = K data blocks [+ T noise blocks])
+    blocks: (J, blk, d)  stacked input blocks (one round's A, block-split)
+    B:      (d, n_out)   the shared right factor
+    out:    (N, blk, n_out)  per-worker results, ready for masked decode
+
+This is the round hot path of every linear data-coded scheme (SPACDC / BACC
+/ MDS / LCC / CONV): encode is a linear contraction, the worker task is a
+matmul, so the coded shards (N, blk, d) never need to exist in HBM.  Tiling:
+
+  grid = (blk // bi, n_out // bj, d // bd)       (d innermost — sequential)
+  W tile:   (Np, Jp)      entire coding matrix, VMEM-resident every step
+  A stripe: (Jp, bi, bd)  one (row-tile, d-step) stripe of all J blocks
+  B tile:   (bd, bj)
+  acc:      (Np, bi, bj)  f32 scratch, accumulated over the d axis
+
+Per step the kernel forms the coded stripe  W @ A  -> (Np, bi, bd) *in
+VMEM only*, contracts it with the B tile on the MXU and accumulates in f32;
+the output block is flushed once per (i, j) tile at the last d step.  All
+dims are padded to (8, 128) multiples — short axes (N, J) always, payload
+axes only when misaligned.  Validated in interpret mode against
+``ref.coded_matmul`` (tests/test_coded_matmul.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .tiling import pad_to as _pad_to, tile as _tile
+
+DEFAULT_BI = 128    # row tile of each block
+DEFAULT_BD = 256    # contraction (d) tile
+DEFAULT_BJ = 128    # n_out tile
+
+
+def _kernel(w_ref, a_ref, b_ref, o_ref, acc_ref, *, n_d_steps: int):
+    d_i = pl.program_id(2)
+
+    @pl.when(d_i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(jnp.float32)                      # (Np, Jp)
+    a = a_ref[...].astype(jnp.float32)                      # (Jp, bi, bd)
+    b = b_ref[...].astype(jnp.float32)                      # (bd, bj)
+    jp, bi, bd = a.shape
+    # encode: the coded stripe lives only in VMEM/registers, never in HBM
+    coded = jax.lax.dot_general(
+        w, a.reshape(jp, bi * bd), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(w.shape[0], bi, bd)
+    # worker compute: per-worker (bi, bd) @ (bd, bj) batched over N
+    acc_ref[...] += jax.lax.dot_general(
+        coded, b, (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(d_i == n_d_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bi", "bd", "bj", "interpret"))
+def coded_matmul_kernel(weights: jnp.ndarray, blocks: jnp.ndarray,
+                        rhs: jnp.ndarray, *, bi: int = DEFAULT_BI,
+                        bd: int = DEFAULT_BD, bj: int = DEFAULT_BJ,
+                        interpret: bool = True):
+    """weights (N, J) f32; blocks (J, blk, d); rhs (d, n_out)
+    -> (N, blk, n_out) in blocks.dtype.
+
+    ``interpret=True`` executes the kernel body in Python (CPU validation);
+    on a TPU backend pass interpret=False for the compiled kernel.
+    """
+    n, j = weights.shape
+    j2, blk, d = blocks.shape
+    d2, n_out = rhs.shape
+    assert j == j2 and d == d2, (weights.shape, blocks.shape, rhs.shape)
+
+    np_ = _pad_to(max(n, 8), 8)
+    jp = _pad_to(max(j, 8), 8)
+    bi, blkp = _tile(blk, 8, bi)
+    bd, dp = _tile(d, 128, bd)
+    bj, njp = _tile(n_out, 128, bj)
+
+    wp = jnp.pad(weights.astype(jnp.float32), ((0, np_ - n), (0, jp - j)))
+    if (jp, blkp, dp) != blocks.shape:
+        blocks = jnp.pad(blocks, ((0, jp - j), (0, blkp - blk), (0, dp - d)))
+    if (dp, njp) != rhs.shape:
+        rhs = jnp.pad(rhs, ((0, dp - d), (0, njp - n_out)))
+
+    n_d = dp // bd
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_d_steps=n_d),
+        grid=(blkp // bi, njp // bj, n_d),
+        in_specs=[
+            pl.BlockSpec((np_, jp), lambda i, jo, k: (0, 0)),   # W resident
+            pl.BlockSpec((jp, bi, bd), lambda i, jo, k: (0, i, k)),
+            pl.BlockSpec((bd, bj), lambda i, jo, k: (k, jo)),
+        ],
+        out_specs=pl.BlockSpec((np_, bi, bj), lambda i, jo, k: (0, i, jo)),
+        out_shape=jax.ShapeDtypeStruct((np_, blkp, njp), blocks.dtype),
+        scratch_shapes=[pltpu.VMEM((np_, bi, bj), jnp.float32)],
+        interpret=interpret,
+    )(wp, blocks, rhs)
+    return out[:n, :blk, :n_out]

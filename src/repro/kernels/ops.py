@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .berrut_encode import berrut_encode_kernel
+from .coded_matmul import coded_matmul_kernel
 from .flash_attention import flash_attention_kernel
 
 
@@ -39,6 +40,25 @@ def berrut_combine(weights, blocks, *, force_kernel: bool | None = None):
     else:
         out = ref.berrut_combine(weights, flat)
     return out.reshape((weights.shape[0],) + blocks.shape[1:])
+
+
+def coded_matmul(weights, blocks, rhs, *, force_kernel: bool | None = None):
+    """Fused encode + batched worker matmul with kernel dispatch.
+
+    out[n] = (weights @ blocks)[n] @ rhs — the round hot path of every
+    linear data-coded scheme (``CodingScheme.fused_round``).  On the kernel
+    path the coded shards never materialize in HBM; the XLA twin computes
+    the same contraction unfused.  ``force_kernel`` is the schemes'
+    ``use_kernel`` tri-state (None = kernel on TPU only).
+    """
+    blocks = jnp.asarray(blocks)
+    rhs = jnp.asarray(rhs)
+    weights = jnp.asarray(weights, jnp.float32)
+    use_kernel = _on_tpu() if force_kernel is None else force_kernel
+    if use_kernel:
+        return coded_matmul_kernel(weights, blocks, rhs,
+                                   interpret=not _on_tpu())
+    return ref.coded_matmul(weights, blocks, rhs)
 
 
 def flash_attention(q, k, v, *, causal=True, softcap=0.0,

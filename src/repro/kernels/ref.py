@@ -18,6 +18,23 @@ def berrut_combine(weights: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
                    precision=jax.lax.Precision.HIGHEST).astype(blocks.dtype)
 
 
+def coded_matmul(weights: jnp.ndarray, blocks: jnp.ndarray,
+                 rhs: jnp.ndarray) -> jnp.ndarray:
+    """Fused coded-round oracle, computed *unfused*: encode the blocks, then
+    run each worker's matmul.
+
+    weights (N, J); blocks (J, blk, d); rhs (d, n_out) -> (N, blk, n_out).
+    f32 accumulate throughout.
+    """
+    flat = blocks.reshape(blocks.shape[0], -1).astype(jnp.float32)
+    coded = jnp.dot(weights.astype(jnp.float32), flat,
+                    precision=jax.lax.Precision.HIGHEST)
+    coded = coded.reshape((weights.shape[0],) + blocks.shape[1:])
+    out = jnp.einsum("nij,jk->nik", coded, rhs.astype(jnp.float32),
+                     precision=jax.lax.Precision.HIGHEST)
+    return out.astype(blocks.dtype)
+
+
 def mha_reference(q, k, v, *, causal: bool, softcap: float = 0.0):
     """Dense multi-head attention oracle.  q (B,Sq,H,hd) k/v (B,Skv,KV,hd)."""
     b, sq, h, hd = q.shape

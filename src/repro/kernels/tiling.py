@@ -1,0 +1,29 @@
+"""Shared tile-size selection for the Pallas kernels.
+
+TPU tiling wants the short coding axes on (8, 128)-multiples and the
+payload axes cut into VMEM-sized tiles; the invariant both helpers protect
+is that *tiling never forces more padding than the alignment itself* — a
+dim just past a tile cap must shrink the tile to a divisor, not round the
+payload up to ~2×.
+"""
+
+from __future__ import annotations
+
+__all__ = ["pad_to", "tile"]
+
+
+def pad_to(x: int, m: int) -> int:
+    """x rounded up to the next multiple of m."""
+    return ((x + m - 1) // m) * m
+
+
+def tile(dim: int, align: int, cap: int) -> tuple:
+    """(tile, padded_dim): pad ``dim`` to its minimal alignment, then pick
+    the largest tile ≤ cap that divides the padded dim exactly.  ``align``
+    always divides the padded dim, so the worst case is a tile of ``align``
+    — never extra payload padding."""
+    padded = pad_to(dim, align)
+    if padded <= cap:
+        return padded, padded
+    best = max(t for t in range(align, cap + 1, align) if padded % t == 0)
+    return best, padded

@@ -15,6 +15,7 @@ from __future__ import annotations
 import functools
 from typing import Callable, Optional
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -84,12 +85,13 @@ def build_train_step(model, optimizer: Optimizer, *, accum: int = 1,
     if compress:
         from ..dist.compression import int8_compress, int8_decompress
 
-    # static coding matrices (must be built outside the trace)
+    # static coding matrices, embedded as constants in the jitted step
+    # (assignment()/encoder_matrix() are cached on the gcode, so re-building
+    # the step — or re-tracing it — costs no numpy reconstruction)
     if gcode is not None and gcode.redundancy > 1:
-        import numpy as _np
-        _asn = _np.asarray(gcode.assignment())
-        _enc = _np.asarray(gcode.encoder_matrix(), _np.float32)
-        _erow = _np.take_along_axis(_enc, _asn, axis=1)     # (nb, r)
+        _asn = np.asarray(gcode.assignment())
+        _erow = np.take_along_axis(
+            np.asarray(gcode.encoder_matrix(), np.float32), _asn, axis=1)
 
     def loss_of(params, batch):
         loss, metrics = model.loss_fn(params, batch)

@@ -19,6 +19,7 @@ changes.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -54,9 +55,17 @@ class WorkerPool:
         self.straggler = straggler
         self.real_threads = real_threads
 
-    def run_round(self, shards, f: Callable, round_idx: int, wait_for: int):
+    def run_round(self, shards, f: Callable, round_idx: int, wait_for: int,
+                  t_compute: Optional[float] = None):
         """shards: list of per-worker inputs (or (a,b) tuples).  Returns
-        (responder_indices, results_in_responder_order, wait_seconds)."""
+        (responder_indices, results_in_responder_order, wait_seconds).
+
+        ``t_compute`` is the virtual-clock per-task compute time; the
+        caller owns the latency model (``DistributedMatmul`` passes the
+        same once-per-shape timed batched call for fused and loop rounds,
+        so cross-scheme comparisons price workers identically).  Ignored
+        in real-thread mode, required otherwise.
+        """
         delays = self.straggler.delays(round_idx)
         if self.real_threads:
             t0 = time.perf_counter()
@@ -76,16 +85,12 @@ class WorkerPool:
             resp = np.sort(order[:wait_for])
             return resp, [done[i] for i in resp], time.perf_counter() - t0
 
-        # virtual clock: warm up (compile), then median-of-3 representative
-        # compute time — dispatch noise otherwise skews scheme comparisons
-        sample = f(shards[0])
-        times = []
-        for _ in range(3):
-            t0 = time.perf_counter()
-            f(shards[0])
-            times.append(time.perf_counter() - t0)
-        t_compute = float(np.median(times))
-        results = [sample] + [f(s) for s in shards[1:]]
+        # virtual clock: per-worker latency = representative compute time
+        # + injected straggler delay
+        if t_compute is None:
+            raise ValueError("virtual-clock run_round needs t_compute "
+                             "(see DistributedMatmul._worker_compute_time)")
+        results = [f(s) for s in shards]
         lat = delays + t_compute
         order = np.argsort(lat)
         resp = np.sort(order[:wait_for])
@@ -94,12 +99,26 @@ class WorkerPool:
 
 
 class DistributedMatmul:
-    """Coded A@B on the pool under a named scheme."""
+    """Coded A@B on the pool under a named scheme.
+
+    Two execution paths:
+
+    * **fused** (default whenever the scheme ``supports_fused``): the whole
+      round — encode, all N worker matmuls, masked decode, product
+      reassembly — is ONE jitted dispatch (``CodingScheme.fused_round``
+      through ``kernels.ops.coded_matmul``), LRU-cached per
+      (scheme, a.shape, b.shape, dtype) so the straggler mask is a runtime
+      value and shape reuse never recompiles.  The virtual clock derives
+      per-worker latency from a once-per-shape timed batched matmul.
+    * **unfused loop** (pair-coded schemes, or ``fused=False``): the
+      original per-worker Python loop with host round-trips — kept as the
+      semantics oracle and for schemes whose encode depends on both factors.
+    """
 
     def __init__(self, scheme_name: str, n_workers: int, k_blocks: int,
                  t_colluding: int = 0, straggler: Optional[StragglerModel] = None,
                  n_stragglers: int = 0, encrypt: bool = False, seed: int = 0,
-                 **scheme_kwargs):
+                 fused: Optional[bool] = None, **scheme_kwargs):
         self.name = scheme_name
         self.n = n_workers
         self.k = k_blocks
@@ -116,48 +135,155 @@ class DistributedMatmul:
                                      t_colluding=t_colluding,
                                      seed=seed, **scheme_kwargs)
         self.wait_for = self.scheme.wait_policy(self.straggler.n_stragglers)
+        supports = bool(getattr(self.scheme, "supports_fused", False))
+        if fused and not supports:
+            raise ValueError(f"{scheme_name!r} has no fused round path "
+                             "(pair-coded or non-linear encode)")
+        # default to fused only when the masked decode is also numerically
+        # sound in f32 — the pinv of an ill-conditioned (large-K Vandermonde
+        # / Lagrange) encoder silently destroys the result, so those
+        # schemes keep the exact f64 loop decode unless forced
+        stable = bool(getattr(self.scheme, "fused_decode_stable", False))
+        self.use_fused = (supports and stable) if fused is None else bool(fused)
+        self.trace_count = 0                # jit traces of the fused round
+        self._fused_cache = collections.OrderedDict()   # shapes -> jitted fn
+        self._fused_cache_max = 8
+        self._worker_t = {}                 # shapes -> per-worker seconds
         self._crypto = None
+        self._crypto_per_elem = {}          # (dtype, mode) -> seconds/element
         if encrypt:
             from ..crypto import MEAECC, generate_keypair
             self._crypto = (MEAECC(mode="paper"), generate_keypair())
 
-    def _crypto_overhead(self, shards) -> float:
-        """Measured MEA-ECC cost: master encrypts one shard + worker
-        decrypt/encrypt/decrypt cycle, scaled by shard count (vectorized
-        single-scalar mask — paper mode)."""
+    # ------------------------------------------------------------- crypto
+    def _crypto_cost_per_elem(self, dtype) -> float:
+        """MEA-ECC seconds per matrix element, measured once per (dtype,
+        mode) on a 4×4 sample and cached — the cost is per-element linear."""
+        mea, kp = self._crypto
+        key = (str(dtype), mea.mode)
+        if key not in self._crypto_per_elem:
+            m = np.zeros((4, 4), dtype)
+            t0 = time.perf_counter()
+            ct = mea.encrypt(m, kp.pk)
+            mea.decrypt(ct, kp)
+            self._crypto_per_elem[key] = (time.perf_counter() - t0) / 16
+        return self._crypto_per_elem[key]
+
+    def _crypto_overhead_elems(self, total_elems: int, dtype) -> float:
+        """Modeled MEA-ECC cost: master encrypt + worker decrypt + result
+        encrypt (3 passes) over ``total_elems`` shard elements."""
         if not self._crypto:
             return 0.0
-        mea, kp = self._crypto
+        return self._crypto_cost_per_elem(dtype) * total_elems * 3
+
+    def _crypto_overhead(self, shards) -> float:
+        if not self._crypto:
+            return 0.0
         a = shards[0][0] if isinstance(shards[0], tuple) else shards[0]
-        m = np.asarray(a, np.float32)
-        t0 = time.perf_counter()
-        ct = mea.encrypt(m[:4, :4], kp.pk)       # sample a small block,
-        mea.decrypt(ct, kp)                      # scale by elements
-        per_elem = (time.perf_counter() - t0) / 16   # 4×4 block = 16 elements
         total_elems = sum(int(np.prod(np.shape(s[0] if isinstance(s, tuple) else s)))
                           for s in shards)
-        return per_elem * total_elems * 3        # enc + worker dec + result enc
+        # dtype off the attribute — np.asarray would round-trip the whole
+        # device array to host just to read it
+        return self._crypto_overhead_elems(total_elems,
+                                           getattr(a, "dtype", np.float32))
 
+    # ------------------------------------------------------- fused pipeline
+    def _fused_fn(self, a_shape, b_shape, dtype):
+        """The jitted round for one shape class, LRU-cached.  The straggler
+        mask is a traced argument, so responder churn never recompiles."""
+        key = (a_shape, b_shape, dtype)
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            scheme = self.scheme
+            m, n_out = a_shape[0], b_shape[-1]
+
+            def _round(a, b, mask):
+                self.trace_count += 1      # runs at trace time only
+                decoded = scheme.fused_round(a, b, mask)
+                return scheme.reconstruct_matmul(decoded, m, n_out)
+
+            fn = jax.jit(_round)
+            self._fused_cache[key] = fn
+            if len(self._fused_cache) > self._fused_cache_max:
+                self._fused_cache.popitem(last=False)
+        else:
+            self._fused_cache.move_to_end(key)
+        return fn
+
+    def _worker_compute_time(self, lhs_shape, rhs_shape) -> float:
+        """Virtual-clock per-worker latency: time ONE jitted batched matmul
+        of the per-worker operand shapes (once per shape, cached) and
+        divide by N — the N workers of the real system run concurrently.
+        Both the fused and loop paths price workers through this same
+        model, so cross-scheme comparisons measure the codes, not
+        host-dispatch noise."""
+        key = (tuple(lhs_shape), tuple(rhs_shape))
+        if key not in self._worker_t:
+            lhs = jnp.zeros((self.n,) + tuple(lhs_shape), jnp.float32)
+            rhs = jnp.zeros((self.n,) + tuple(rhs_shape), jnp.float32)
+            batched = jax.jit(lambda l, r: jnp.einsum("nij,njk->nik", l, r))
+            jax.block_until_ready(batched(lhs, rhs))         # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(batched(lhs, rhs))
+            self._worker_t[key] = (time.perf_counter() - t0) / self.n
+        return self._worker_t[key]
+
+    def _matmul_fused(self, a: jnp.ndarray, b: jnp.ndarray, round_idx: int):
+        fn = self._fused_fn(a.shape, b.shape, str(a.dtype))
+        split = getattr(self.scheme, "k_blocks", self.n)
+        blk = -(-a.shape[0] // split)
+        # virtual clock: who responds this round?
+        t_comp = self._worker_compute_time((blk, a.shape[1]),
+                                           (a.shape[1], b.shape[-1]))
+        lat = self.straggler.delays(round_idx) + t_comp
+        order = np.argsort(lat)
+        resp = np.sort(order[: self.wait_for])
+        wait_s = float(lat[order[self.wait_for - 1]])
+        mask = np.zeros(self.n, np.float32)
+        mask[resp] = 1.0
+        # master math (encode + decode + reassembly): one dispatch
+        t0 = time.perf_counter()
+        out = fn(a, b, jnp.asarray(mask))
+        jax.block_until_ready(out)
+        t_master = time.perf_counter() - t0
+        crypto_s = self._crypto_overhead_elems(self.n * blk * a.shape[1],
+                                               np.float32)
+        stats = RoundStats(encode_s=t_master, compute_wait_s=wait_s,
+                           decode_s=0.0, crypto_s=crypto_s, n_waited=len(resp))
+        return np.asarray(out), stats
+
+    # --------------------------------------------------------------- rounds
     def matmul(self, a: np.ndarray, b: np.ndarray, round_idx: int = 0):
         """Returns (result (m, n), RoundStats).  Result stacked over K blocks
-        for block schemes, reshaped to a's row layout."""
+        for block schemes, reshaped to a's row layout.
+
+        On the fused path encode/compute/decode are one dispatch, so the
+        whole master-side wall time is reported as ``encode_s`` and
+        ``decode_s`` is 0; ``compute_wait_s`` stays the virtual-clock wait.
+        """
         a = jnp.asarray(a, jnp.float32)
         b = jnp.asarray(b, jnp.float32)
+        if self.use_fused:
+            return self._matmul_fused(a, b, round_idx)
         t0 = time.perf_counter()
         if self.scheme.pair_coded:
             ea, eb = self.scheme.encode_pair(a, b)
             jax.block_until_ready((ea, eb))
             shards = [(ea[i], eb[i]) for i in range(self.n)]
             f = lambda ab: np.asarray(ab[0] @ ab[1])
+            lhs_shape, rhs_shape = ea.shape[1:], eb.shape[1:]
         else:
             enc = self.scheme.encode(a)
             jax.block_until_ready(enc)
             shards = [np.asarray(enc[i]) for i in range(self.n)]
             f = lambda s: np.asarray(jnp.asarray(s) @ b)
+            lhs_shape, rhs_shape = enc.shape[1:], b.shape
         t_enc = time.perf_counter() - t0
 
+        t_comp = self._worker_compute_time(lhs_shape, rhs_shape)
         resp, results, wait_s = self.pool.run_round(shards, f, round_idx,
-                                                    self.wait_for)
+                                                    self.wait_for,
+                                                    t_compute=t_comp)
         t0 = time.perf_counter()
         dec = self.scheme.decode(jnp.asarray(np.stack(results)), list(resp))
         out = np.asarray(self.scheme.reconstruct_matmul(dec, a.shape[0],
