@@ -9,6 +9,11 @@ accept.  ``latest_step`` + ``restore`` give crash-restart; ``keep`` prunes.
 Transmission security (paper §IV): with ``encrypt=True`` the serialized
 arrays are MEA-ECC-encrypted before hitting storage, modeling the paper's
 master↔worker channel protection at the job↔storage boundary (DESIGN.md §2).
+The cipher is the limb-vectorized stream mode over the lossless bits codec
+(``repro.crypto``): payloads land as compact uint32 limb planes in the npz,
+restore is bit-identical for every dtype, and a ≥1M-parameter tree
+round-trips in seconds (the legacy object-dtype path serialized decimal
+strings and was unusable beyond toy sizes).
 """
 
 from __future__ import annotations
@@ -30,7 +35,14 @@ def _flatten(tree):
 
 
 class Checkpointer:
-    def __init__(self, directory: str, keep: int = 3, encrypt: bool = False):
+    def __init__(self, directory: str, keep: int = 3, encrypt: bool = False,
+                 secret: Optional[bytes] = None):
+        """``secret`` (encrypt=True only): key material the decryption keys
+        are derived from deterministically — pass the same secret to a new
+        Checkpointer to restore checkpoints written by a previous process.
+        Without it the keys are random and encrypted checkpoints only
+        decrypt within this instance's lifetime (restore() detects the
+        wrong-key case and raises rather than returning garbage)."""
         self.dir = directory
         self.keep = keep
         self.encrypt = encrypt
@@ -39,8 +51,36 @@ class Checkpointer:
         self._worker = None
         if encrypt:
             from ..crypto import MEAECC, generate_keypair
-            self._mea = MEAECC(mode="stream")
-            self._worker = generate_keypair()
+            # bits codec: restore() is bit-identical for any dtype; static
+            # session keys + a fresh nonce per array keep the EC cost to
+            # one cached shared-point lookup per checkpoint
+            self._mea = MEAECC(mode="stream", codec="bits")
+            self._worker = generate_keypair(sk=self._derive_sk(secret, "worker"))
+            self._session = generate_keypair(sk=self._derive_sk(secret, "session"))
+
+    def _fresh_nonce(self) -> int:
+        """Random per-array nonce (persisted in the manifest): a counter
+        would restart in a restarted job with the same `secret` and reuse
+        the keystream across checkpoints — exactly the two-time pad the
+        static-channel guard in MEAECC exists to prevent."""
+        import secrets
+        return secrets.randbits(128)
+
+    def _derive_sk(self, secret: Optional[bytes], role: str) -> Optional[int]:
+        if secret is None:
+            return None                       # random per-instance keypair
+        curve = self._mea.curve
+        digest = hashlib.sha256(bytes(secret) + b"|ckpt|" + role.encode())
+        return int.from_bytes(digest.digest(), "big") % (curve.order - 1) + 1
+
+    def _decrypt_check(self, ct, plaintext: bytes) -> str:
+        """Keyed integrity tag over the plaintext: restore() recomputes it
+        with its own keys, so decrypting with the wrong secret raises
+        instead of silently resuming from garbage weights."""
+        from ..crypto import shared_secret
+        s = shared_secret(self._mea.curve, self._worker, ct.ephemeral)
+        return hashlib.sha256(f"{s.x}:{ct.nonce}:".encode() +
+                              plaintext).hexdigest()
 
     # ------------------------------------------------------------------
     def save(self, step: int, tree: Any, extra: Optional[dict] = None):
@@ -51,7 +91,9 @@ class Checkpointer:
             "n_arrays": len(arrays),
             "treedef": str(treedef),
             "encrypted": self.encrypt,
-            "extra": extra or {},
+            # copy: the manifest grows _eph_/_nonce_/_check_ keys below and
+            # must not mutate the caller's dict
+            "extra": dict(extra or {}),
             "hashes": {},
             "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
             "shapes": {k: list(v.shape) for k, v in arrays.items()},
@@ -61,13 +103,24 @@ class Checkpointer:
             if self.encrypt:
                 enc = {}
                 for k, v in arrays.items():
-                    ct = self._mea.encrypt(v.astype(np.float32).reshape(-1, 1)
-                                           if v.dtype != np.float32 else
-                                           v.reshape(-1, 1), self._worker.pk)
-                    # store payload as decimal strings (object ints)
-                    enc[k] = np.array([str(x) for x in ct.payload.reshape(-1)])
-                    manifest["extra"][f"_eph_{k}"] = [ct.ephemeral.x, ct.ephemeral.y]
-                    manifest["hashes"][k] = hashlib.sha256(enc[k].tobytes()).hexdigest()
+                    ct = self._mea.encrypt(v, self._worker.pk,
+                                           sender=self._session,
+                                           nonce=self._fresh_nonce())
+                    # the bits-codec stream payload occupies only the low
+                    # limbs (word + 64-bit mask < 2^65, no q reduction) —
+                    # store the nonzero-prefix columns, pad back on restore
+                    payload = ct.payload         # (n_words, L) uint32 limbs
+                    nz = payload.shape[1]
+                    while nz > 1 and not payload[:, nz - 1].any():
+                        nz -= 1
+                    enc[k] = np.ascontiguousarray(payload[:, :nz])
+                    manifest["extra"][f"_eph_{k}"] = [ct.ephemeral.x,
+                                                      ct.ephemeral.y]
+                    manifest["extra"][f"_nonce_{k}"] = ct.nonce
+                    manifest["extra"][f"_check_{k}"] = self._decrypt_check(
+                        ct, np.ascontiguousarray(v).tobytes())
+                    manifest["hashes"][k] = hashlib.sha256(
+                        enc[k].tobytes()).hexdigest()
                 np.savez_compressed(os.path.join(tmp, "arrays.npz"), **enc)
             else:
                 for k, v in arrays.items():
@@ -126,13 +179,24 @@ class Checkpointer:
                 from ..crypto.mea_ecc import Ciphertext
                 from ..crypto.ecc import ECPoint
                 ex, ey = manifest["extra"][f"_eph_{k}"]
-                payload = np.array([int(s) for s in raw], dtype=object)
                 shape = tuple(manifest["shapes"][k])
-                ct = Ciphertext(ECPoint(ex, ey),
-                                payload.reshape(-1, 1), (int(np.prod(shape, initial=1)), 1)
-                                if shape else (1, 1), "stream")
-                dec = self._mea.decrypt(ct, self._worker).reshape(shape)
-                arr = dec.astype(manifest["dtypes"][k])
+                payload = np.asarray(raw, np.uint32)
+                full = self._mea.field.n_limbs
+                if payload.shape[1] < full:      # undo nonzero-prefix trim
+                    payload = np.pad(payload,
+                                     ((0, 0), (0, full - payload.shape[1])))
+                ct = Ciphertext(ECPoint(ex, ey), payload,
+                                shape, "stream", codec="bits",
+                                dtype=manifest["dtypes"][k],
+                                nonce=manifest["extra"].get(f"_nonce_{k}"))
+                arr = self._mea.decrypt(ct, self._worker)
+                want = manifest["extra"].get(f"_check_{k}")
+                if want is not None and self._decrypt_check(
+                        ct, np.ascontiguousarray(arr).tobytes()) != want:
+                    raise IOError(
+                        f"checkpoint {k} failed decryption check — wrong "
+                        "key (pass the Checkpointer the same `secret` that "
+                        "wrote this checkpoint) or corrupted data")
             else:
                 arr = raw
             out.append(np.asarray(arr).astype(np.asarray(ref).dtype).reshape(

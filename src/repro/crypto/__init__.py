@@ -1,10 +1,18 @@
-"""Transmission-security substrate: ECC + MEA-ECC (paper §IV)."""
+"""Transmission-security substrate: ECC + MEA-ECC (paper §IV).
 
-from .ecc import (CURVE_SECP256K1, ECPoint, EllipticCurve, KeyPair,
-                  generate_keypair, shared_secret)
-from .mea_ecc import MEAECC, FixedPointCodec
+``field`` holds the limb-vectorized F_q arithmetic the cipher runs on;
+``ref`` keeps the legacy object-dtype implementation as the bit-exactness
+oracle and benchmark baseline.
+"""
+
+from .ecc import (CURVE_SECP256K1, CURVE_TOY, ECPoint, EllipticCurve, KeyPair,
+                  ephemeral_nonce, generate_keypair, keystream, shared_secret)
+from .field import BitsCodec, LimbField, keystream_u64
+from .mea_ecc import MEAECC, Ciphertext, FixedPointCodec
 
 __all__ = [
-    "CURVE_SECP256K1", "ECPoint", "EllipticCurve", "KeyPair",
-    "generate_keypair", "shared_secret", "MEAECC", "FixedPointCodec",
+    "CURVE_SECP256K1", "CURVE_TOY", "ECPoint", "EllipticCurve", "KeyPair",
+    "ephemeral_nonce", "generate_keypair", "shared_secret", "keystream",
+    "keystream_u64", "LimbField", "BitsCodec", "MEAECC", "Ciphertext",
+    "FixedPointCodec",
 ]

@@ -1,4 +1,4 @@
-"""MEA-ECC — Matrix Encryption Algorithm over ECC (paper §IV-B).
+"""MEA-ECC — Matrix Encryption Algorithm over ECC (paper §IV-B), limb-vectorized.
 
 Paper construction (steps 3–4): the ciphertext of matrix M for worker W is
 
@@ -7,8 +7,13 @@ Paper construction (steps 3–4): the ciphertext of matrix M for worker W is
 and the worker strips the mask with its private key:
     M = C₂ − Ψ(sk_W · (k·G))·1.
 
-Matrices live in F_q via a fixed-point codec (scale 2^16, two's-complement
-embedding) so encrypt→decrypt is **bit-exact** for float32 inputs.
+Matrices live in F_q as **uint32 limb planes** (``repro.crypto.field``):
+encode/decode are vectorized float↔limb codecs and the mask application is
+one carry-chain add/sub over the limb axis — dispatched through
+``kernels.ops.mask_add`` (Pallas kernel on TPU, XLA twin elsewhere,
+``use_kernel`` tri-state like every other kernel in the repo).  The legacy
+per-element big-int implementation survives as ``crypto.ref`` (the
+bit-exactness oracle and benchmark baseline).
 
 Modes
 -----
@@ -16,57 +21,65 @@ Modes
   (all-ones matrix 1_{m,d}).  Weak (one known plaintext element reveals the
   mask) but exactly Eq. in §IV-B; kept for reproduction.
 * ``mode="stream"`` — beyond-paper hardening: per-element mask words drawn
-  from a SHA-256 counter PRF keyed by the ECDH point and the ephemeral
-  nonce k·G.  Same interface, still exact.
+  from a SHA-256 counter PRF keyed by the ECDH point and a nonce (the
+  ephemeral x by default), batched through the vectorized compression
+  function.  Same interface, still exact.
+
+Codecs
+------
+* ``codec="fixed"``  — the paper's fixed-point embedding: exact to the
+  2^-16 grid (float32 in → the quantized float32 out).
+* ``codec="bits"``   — transport embedding of the raw bytes: decrypt is
+  **bit-identical** for any dtype.  This is what the runtime's
+  ``encrypt="real"`` rounds and encrypted checkpoints use.
+
+Key agreement
+-------------
+``encrypt(..., k=...)`` is the paper's per-message ephemeral.  Passing
+``sender=`` instead reuses a static key pair: the ECDH point comes from the
+per-(sk, pk) shared-secret cache, so a session channel (master↔worker)
+pays the Diffie–Hellman multiply once and per-message EC cost vanishes —
+pair it with ``mode="stream"`` and a fresh ``nonce`` per message.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import secrets
-from typing import Literal, Tuple
+from typing import Literal, Optional, Tuple
 
 import numpy as np
 
 from .ecc import (CURVE_SECP256K1, ECPoint, EllipticCurve, KeyPair,
-                  generate_keypair, keystream, shared_secret)
+                  ephemeral_nonce, generate_keypair, shared_secret)
+from .field import (BitsCodec, FixedPointCodec, LimbField, keystream_u64,
+                    seed_words)
+
+_CORE_FLOATS = ("float16", "bfloat16", "float32")
+
+
+def _bucket(n: int, lo: int = 1024) -> int:
+    """Round the element count up to a power of two ≥ ``lo``: the jitted
+    cipher cores compile once per bucket instead of once per array shape
+    (the stream keystream is a prefix-stable counter PRF, so masking a
+    padded batch and slicing is bit-identical to masking the exact size)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
 __all__ = ["FixedPointCodec", "MEAECC", "Ciphertext"]
 
 
 @dataclasses.dataclass(frozen=True)
-class FixedPointCodec:
-    """Embed float matrices into Z_q: round(x * 2^frac_bits) mod q.
-
-    Values must satisfy |x| < q / 2^{frac_bits+1}; with secp256k1's 256-bit
-    q this is never binding for ML tensors.
-    """
-    q: int
-    frac_bits: int = 16
-
-    def encode(self, m: np.ndarray) -> np.ndarray:
-        scaled = np.rint(np.asarray(m, dtype=np.float64) * (1 << self.frac_bits)).astype(object)
-        return np.vectorize(lambda v: int(v) % self.q, otypes=[object])(scaled)
-
-    def decode(self, w: np.ndarray) -> np.ndarray:
-        half = self.q // 2
-
-        def back(v):
-            v = int(v)
-            if v > half:
-                v -= self.q
-            # clamp to float32 range (wrong-key decrypts yield huge ints)
-            return max(min(v / float(1 << self.frac_bits), 3e38), -3e38)
-
-        return np.vectorize(back, otypes=[np.float64])(w).astype(np.float32)
-
-
-@dataclasses.dataclass(frozen=True)
 class Ciphertext:
-    ephemeral: ECPoint          # k·G
-    payload: np.ndarray         # masked field matrix (object dtype, big ints)
+    ephemeral: ECPoint          # k·G (or the sender's static pk)
+    payload: np.ndarray         # masked field elements, (n, L) uint32 limbs
     shape: Tuple[int, ...]
     mode: str
+    codec: str = "fixed"
+    dtype: str = "float32"
+    nonce: Optional[int] = None  # stream-mode nonce when not derived from eph
 
 
 class MEAECC:
@@ -74,43 +87,155 @@ class MEAECC:
 
     def __init__(self, curve: EllipticCurve = CURVE_SECP256K1,
                  frac_bits: int = 16,
-                 mode: Literal["paper", "stream"] = "paper"):
+                 mode: Literal["paper", "stream"] = "paper",
+                 codec: Literal["fixed", "bits"] = "fixed",
+                 use_kernel: Optional[bool] = None):
         self.curve = curve
-        self.codec = FixedPointCodec(curve.q, frac_bits)
+        self.field = LimbField(curve.q)
+        self.frac_bits = frac_bits
+        self.codec_name = codec
+        self.codec = (FixedPointCodec(curve.q, frac_bits) if codec == "fixed"
+                      else BitsCodec(curve.q))
         self.mode = mode
+        self.use_kernel = use_kernel
+
+    # ---- dispatch: fused XLA core vs numpy reference path ------------------
+    def _core_eligible(self, dtype, codec: Optional[str] = None,
+                       mode: Optional[str] = None) -> bool:
+        """The one-dispatch traced core covers the production configuration:
+        a >64-bit modulus (stream words need no reduction) and, for the
+        fixed codec, float inputs that cast to f32 exactly.  Small moduli
+        (a 33..64-bit curve under the bits codec) and float64 fixed-point
+        inputs stay on the (bit-identical) numpy path.  ``codec``/``mode``
+        come from the Ciphertext on decrypt (it is self-describing)."""
+        codec = codec or self.codec_name
+        mode = mode or self.mode
+        if mode == "stream" and self.curve.q.bit_length() <= 64:
+            return False
+        if codec == "bits":
+            return True
+        return str(dtype) in _CORE_FLOATS
+
+    def _codec_for(self, name: str):
+        """The codec object matching a ciphertext's self-described codec —
+        decrypt must honor ``c.codec`` even on an instance configured with
+        the other codec."""
+        if name == self.codec_name:
+            return self.codec
+        return (BitsCodec(self.curve.q) if name == "bits"
+                else FixedPointCodec(self.curve.q, self.frac_bits))
+
+    def _kernel_flags(self):
+        from ..kernels.ops import _on_tpu
+        on_tpu = _on_tpu()
+        use_kernel = on_tpu if self.use_kernel is None else self.use_kernel
+        return bool(use_kernel), not on_tpu
+
+    # ---- mask material -----------------------------------------------------
+    def _mask_material(self, mask_point: ECPoint, nonce: Optional[int],
+                       mode: Optional[str] = None):
+        """(8,) uint32 PRF seed words (stream) or (L,) psi limbs (paper) —
+        the single source of the mask derivation for both the traced core
+        and the numpy fallback."""
+        if mask_point.is_infinity:
+            raise ValueError("degenerate ECDH point (infinity) — invalid key")
+        if (mode or self.mode) == "paper":
+            return self.field.from_int(mask_point.x % self.curve.q)  # Ψ(x,y)=x
+        return seed_words(mask_point.x, mask_point.y, nonce)
+
+    def _mask_limbs(self, mask_point: ECPoint, nonce: Optional[int],
+                    n_elems: int, mode: Optional[str] = None) -> np.ndarray:
+        """Numpy-path mask: (n, L) stream limbs or (L,) paper limbs."""
+        material = self._mask_material(mask_point, nonce, mode)
+        if (mode or self.mode) == "paper":
+            return material
+        words = keystream_u64(mask_point.x, mask_point.y, nonce, n_elems,
+                              self.curve.q)
+        return self.field.from_u64(words)
+
+    def _apply_mask(self, payload: np.ndarray, mask: np.ndarray,
+                    subtract: bool) -> np.ndarray:
+        from ..kernels.ops import mask_add
+        return np.asarray(mask_add(payload, mask, self.curve.q,
+                                   subtract=subtract,
+                                   force_kernel=self.use_kernel))
 
     # ---- §IV-B step 3 ------------------------------------------------------
     def encrypt(self, m: np.ndarray, recipient_pk: ECPoint,
-                k: int | None = None) -> Ciphertext:
-        if k is None:
-            k = secrets.SystemRandom().randrange(2, self.curve.order - 1)
-        eph = self.curve.multiply(k, self.curve.generator)        # k·G
-        mask_point = self.curve.multiply(k, recipient_pk)          # k·pk_W
-        field = self.codec.encode(m)
-        flat = field.reshape(-1)
-        if self.mode == "paper":
-            psi = mask_point.x % self.curve.q                      # Ψ(x,y)=x
-            masked = np.vectorize(lambda v: (int(v) + psi) % self.curve.q,
-                                  otypes=[object])(flat)
+                k: int | None = None, sender: Optional[KeyPair] = None,
+                nonce: Optional[int] = None) -> Ciphertext:
+        m = np.asarray(m)
+        if sender is not None:
+            if self.mode == "stream" and nonce is None:
+                raise ValueError(
+                    "static-channel stream encryption needs an explicit "
+                    "per-message nonce: the ephemeral (= sender's pk) is "
+                    "constant, so a derived nonce would reuse the keystream "
+                    "for every message (two-time pad)")
+            # static-key channel: ephemeral = sender's pk, ECDH point cached
+            eph = sender.pk
+            mask_point = shared_secret(self.curve, sender, recipient_pk)
         else:
-            words = keystream(mask_point, eph.x or 0, flat.size, self.curve.q)
-            masked = np.array([(int(v) + w) % self.curve.q
-                               for v, w in zip(flat, words)], dtype=object)
-        return Ciphertext(eph, masked.reshape(field.shape), tuple(m.shape), self.mode)
+            if k is None:
+                k = secrets.SystemRandom().randrange(2, self.curve.order - 1)
+            eph = self.curve.multiply_base(k)                  # k·G
+            mask_point = self.curve.multiply(k, recipient_pk)  # k·pk_W
+        if nonce is None and self.mode == "stream":
+            nonce = ephemeral_nonce(eph)
+
+        if self._core_eligible(m.dtype):
+            from ..kernels.ops import mea_encrypt_core
+            if self.codec_name == "bits":
+                data = self.codec.encode_words(m)
+            else:
+                data = np.asarray(m, np.float32).reshape(-1)
+            n = data.size
+            data = np.pad(data, (0, _bucket(n) - n))
+            use_kernel, interpret = self._kernel_flags()
+            payload = np.asarray(mea_encrypt_core(
+                data, self._mask_material(mask_point, nonce),
+                q=self.curve.q, frac_bits=self.frac_bits, mode=self.mode,
+                codec=self.codec_name, use_kernel=use_kernel,
+                interpret=interpret, n_limbs=self.field.n_limbs))[:n]
+        else:
+            if self.codec_name == "bits":
+                field = self.codec.encode(m)
+            else:
+                field = self.codec.encode(m).reshape(-1, self.field.n_limbs)
+            mask = self._mask_limbs(mask_point, nonce, field.shape[0])
+            payload = self._apply_mask(field, mask, subtract=False)
+        return Ciphertext(eph, payload, tuple(m.shape), self.mode,
+                          codec=self.codec_name, dtype=str(m.dtype),
+                          nonce=nonce)
 
     # ---- §IV-B step 4 ------------------------------------------------------
     def decrypt(self, c: Ciphertext, recipient: KeyPair) -> np.ndarray:
-        mask_point = self.curve.multiply(recipient.sk, c.ephemeral)  # sk·(k·G)
-        flat = c.payload.reshape(-1)
-        if c.mode == "paper":
-            psi = mask_point.x % self.curve.q
-            unmasked = np.vectorize(lambda v: (int(v) - psi) % self.curve.q,
-                                    otypes=[object])(flat)
-        else:
-            words = keystream(mask_point, c.ephemeral.x or 0, flat.size, self.curve.q)
-            unmasked = np.array([(int(v) - w) % self.curve.q
-                                 for v, w in zip(flat, words)], dtype=object)
-        return self.codec.decode(unmasked.reshape(c.payload.shape)).reshape(c.shape)
+        mask_point = shared_secret(self.curve, recipient, c.ephemeral)
+        nonce = c.nonce
+        if nonce is None and c.mode == "stream":
+            nonce = ephemeral_nonce(c.ephemeral)
+        flat = np.asarray(c.payload, np.uint32).reshape(-1, self.field.n_limbs)
+        codec = self._codec_for(c.codec)
+
+        if self._core_eligible(c.dtype, codec=c.codec, mode=c.mode):
+            from ..kernels.ops import mea_decrypt_core
+            use_kernel, interpret = self._kernel_flags()
+            n = flat.shape[0]
+            padded = np.pad(flat, ((0, _bucket(n) - n), (0, 0)))
+            out = np.asarray(mea_decrypt_core(
+                padded, self._mask_material(mask_point, nonce, c.mode),
+                q=self.curve.q, frac_bits=self.frac_bits, mode=c.mode,
+                codec=c.codec, use_kernel=use_kernel,
+                interpret=interpret))[:n]
+            if c.codec == "bits":
+                return codec.decode_words(out, c.dtype, c.shape)
+            return out.reshape(c.shape).astype(np.float32)
+
+        mask = self._mask_limbs(mask_point, nonce, flat.shape[0], c.mode)
+        unmasked = self._apply_mask(flat, mask, subtract=True)
+        if c.codec == "bits":
+            return codec.decode(unmasked, c.dtype, c.shape)
+        return codec.decode(unmasked).reshape(c.shape)
 
     # ---- convenience: secure round trip master -> worker -> master ---------
     def secure_channel_roundtrip(self, m: np.ndarray) -> np.ndarray:

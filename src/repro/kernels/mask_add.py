@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: the MEA-ECC mask add/sub over F_q limb planes.
+
+out = (payload ± mask) mod q, elementwise over a batch of field elements
+represented as little-endian uint32 limbs.  This is the encrypt/decrypt
+hot loop of the limb-vectorized cipher (``repro.crypto.mea_ecc``): both
+operands are < q, so the sum is < 2q and one conditional subtract (resp.
+conditional add-back after a borrow) completes the reduction — no
+Montgomery machinery, no 64-bit integers (TPU has none): carries are
+recovered from uint32 wraparound compares.
+
+TPU layout: the limb axis is tiny and fixed (8 for a 256-bit modulus) while
+the element axis is huge, so blocks are **limb planes** — limbs on the
+sublane axis (padded to 8), elements streamed along the lanes in ``bm``
+tiles:
+
+  grid = (Mp // bm,)
+  payload/mask tile: (Lp, bm)   — the full limb stack of one element stripe
+  q:                 static per-limb uint32 constants baked into the kernel
+
+The carry/borrow chain runs along the in-block limb axis (an unrolled
+8-step loop of VPU adds and compares); nothing crosses grid steps.  The
+element axis is padded *only when misaligned* with the tile size.  The
+pure-XLA twin is ``ref.mask_add`` (same uint32 algorithm via
+``crypto.field``); parity is asserted over shape/mode sweeps in
+``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import pad_to as _pad_to, tile as _tile
+
+DEFAULT_BM = 512
+
+
+def _kernel(a_ref, b_ref, o_ref, *, q_limbs, n_limbs: int, subtract: bool):
+    a = a_ref[...]                                  # (Lp, bm) uint32
+    b = b_ref[...]
+    rows = []
+    chain = jnp.zeros_like(a[0:1])                  # carry / borrow, (1, bm)
+    for j in range(n_limbs):
+        aj, bj = a[j:j + 1], b[j:j + 1]
+        if subtract:
+            d = aj - bj                             # wraps mod 2^32
+            b1 = (aj < bj).astype(jnp.uint32)
+            d2 = d - chain
+            b2 = (d < chain).astype(jnp.uint32)     # only wraps when d == 0
+            rows.append(d2)
+            chain = b1 | b2
+        else:
+            s = aj + bj                             # wraps mod 2^32
+            c1 = (s < aj).astype(jnp.uint32)
+            s2 = s + chain
+            c2 = (s2 < chain).astype(jnp.uint32)    # only wraps at 2^32-1
+            rows.append(s2)
+            chain = c1 | c2
+
+    if subtract:
+        # borrowed ⇒ result went negative: add q back
+        fix = chain.astype(bool)
+    else:
+        # sum ≥ q (or overflowed 2^32L) ⇒ subtract q once
+        gt = jnp.zeros_like(chain, bool)
+        eq = jnp.ones_like(chain, bool)
+        for j in range(n_limbs - 1, -1, -1):
+            qj = jnp.uint32(q_limbs[j])
+            gt = gt | (eq & (rows[j] > qj))
+            eq = eq & (rows[j] == qj)
+        fix = chain.astype(bool) | gt | eq
+
+    out = []
+    chain2 = jnp.zeros_like(chain)
+    for j in range(n_limbs):
+        qj = jnp.uint32(q_limbs[j])
+        rj = rows[j]
+        if subtract:
+            s = rj + qj
+            c1 = (s < rj).astype(jnp.uint32)
+            s2 = s + chain2
+            c2 = (s2 < chain2).astype(jnp.uint32)
+            out.append(jnp.where(fix, s2, rj))
+            chain2 = c1 | c2
+        else:
+            d = rj - qj
+            b1 = (rj < qj).astype(jnp.uint32)
+            d2 = d - chain2
+            b2 = (d < chain2).astype(jnp.uint32)
+            out.append(jnp.where(fix, d2, rj))
+            chain2 = b1 | b2
+    o_ref[...] = jnp.concatenate(out, axis=0).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("q_limbs", "subtract", "bm",
+                                             "interpret"))
+def mask_add_kernel(payload: jnp.ndarray, mask: jnp.ndarray,
+                    *, q_limbs: tuple, subtract: bool = False,
+                    bm: int = DEFAULT_BM, interpret: bool = True):
+    """payload/mask (M, L) uint32 limb planes (< q) -> (M, L) (payload ± mask) mod q.
+
+    ``q_limbs`` is the static little-endian uint32 decomposition of the
+    modulus.  ``interpret=True`` executes the kernel body in Python (CPU
+    validation); pass interpret=False on a TPU backend.
+    """
+    m, L = payload.shape
+    assert mask.shape == (m, L) and len(q_limbs) == L
+    lp = _pad_to(max(L, 8), 8)
+    bm, mp = _tile(max(m, 128), 128, bm)
+    q_pad = tuple(q_limbs) + (0,) * (lp - L)
+
+    def prep(x):
+        x = jnp.transpose(jnp.asarray(x, jnp.uint32))       # (L, M) planes
+        if (lp, mp) != x.shape:
+            x = jnp.pad(x, ((0, lp - L), (0, mp - m)))
+        return x
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, q_limbs=q_pad, n_limbs=lp,
+                          subtract=subtract),
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((lp, bm), lambda i: (0, i)),
+            pl.BlockSpec((lp, bm), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((lp, bm), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((lp, mp), jnp.uint32),
+        interpret=interpret,
+    )(prep(payload), prep(mask))
+    return jnp.transpose(out[:L, :m])

@@ -8,6 +8,9 @@ force either path.
 
 from __future__ import annotations
 
+import functools
+
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -15,6 +18,7 @@ from . import ref
 from .berrut_encode import berrut_encode_kernel
 from .coded_matmul import coded_matmul_kernel
 from .flash_attention import flash_attention_kernel
+from .mask_add import mask_add_kernel
 
 
 def _on_tpu() -> bool:
@@ -59,6 +63,103 @@ def coded_matmul(weights, blocks, rhs, *, force_kernel: bool | None = None):
         return coded_matmul_kernel(weights, blocks, rhs,
                                    interpret=not _on_tpu())
     return ref.coded_matmul(weights, blocks, rhs)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "use_kernel", "interpret",
+                                             "subtract"))
+def _mask_add_impl(payload, mask, *, q, use_kernel, interpret, subtract):
+    return _limb_ready(payload, mask, q, use_kernel, interpret, subtract)
+
+
+def mask_add(payload, mask, q: int, *, subtract=False,
+             force_kernel: bool | None = None):
+    """MEA-ECC mask add/sub with kernel dispatch.
+
+    (payload ± mask) mod q over uint32 limb planes ``(..., L)`` — the
+    encrypt/decrypt hot loop of the limb-vectorized cipher
+    (``repro.crypto.mea_ecc``), the same tail the one-dispatch cipher
+    cores run (``_limb_ready``).  ``q`` is the modulus as a python int
+    (static: it selects the compiled kernel).  ``mask`` broadcasts against
+    ``payload`` (paper mode passes one scalar mask element).
+    ``force_kernel`` is the usual tri-state: None = kernel on TPU only,
+    True = force the Pallas kernel (interpret mode off-TPU), False = pure
+    XLA.
+    """
+    payload = jnp.asarray(payload, jnp.uint32)
+    lead, L = payload.shape[:-1], payload.shape[-1]
+    mask = jnp.broadcast_to(jnp.asarray(mask, jnp.uint32), payload.shape)
+    use_kernel = _on_tpu() if force_kernel is None else force_kernel
+    out = _mask_add_impl(payload.reshape(-1, L), mask.reshape(-1, L), q=q,
+                         use_kernel=bool(use_kernel),
+                         interpret=not _on_tpu(), subtract=subtract)
+    return out.reshape(lead + (L,))
+
+
+def _limb_ready(limbs, mask, q: int, use_kernel: bool, interpret: bool,
+                subtract: bool):
+    """Shared tail of the cipher cores: (limbs ± mask) mod q, through the
+    Pallas kernel or the xp twin (both traceable — callable under jit)."""
+    from ..crypto import field as _field
+    q_limbs = tuple(int(v) for v in _field.int_to_limbs(q, limbs.shape[-1]))
+    mask = jnp.broadcast_to(mask, limbs.shape)
+    if use_kernel:
+        return mask_add_kernel(limbs, mask, q_limbs=q_limbs,
+                               subtract=subtract, interpret=interpret)
+    op = _field.sub_mod if subtract else _field.add_mod
+    return op(limbs, mask, jnp.asarray(q_limbs, dtype=jnp.uint32), xp=jnp)
+
+
+def _core_mask(mask_material, mode: str, n: int, n_limbs: int):
+    from ..crypto import field as _field
+    if mode == "stream":
+        # mask_material = (8,) uint32 PRF seed words; SHA runs in-trace
+        return _field.stream_mask_traced(mask_material, n, n_limbs)
+    return mask_material                       # paper: (L,) psi limbs
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "q", "frac_bits", "mode", "codec", "use_kernel", "interpret", "n_limbs"))
+def mea_encrypt_core(data, mask_material, *, q: int, frac_bits: int,
+                     mode: str, codec: str, use_kernel: bool,
+                     interpret: bool, n_limbs: int):
+    """One-dispatch MEA-ECC encrypt: codec embed + mask PRF + limb add.
+
+    ``data`` is (n,) float32 (codec="fixed") or (n,) uint32 raw words
+    (codec="bits"); returns the (n, L) uint32 payload limbs.  The whole
+    direction is a single elementwise XLA program (the limb add optionally
+    through the Pallas ``mask_add`` kernel) — this is what makes encrypted
+    rounds wire-speed instead of modeled.
+    """
+    from ..crypto import field as _field
+    if codec == "fixed":
+        limbs = _field.fixed_encode_traced(data, q, frac_bits, n_limbs)
+    else:
+        word = jnp.asarray(data, jnp.uint32)
+        zero = jnp.zeros_like(word)
+        limbs = jnp.stack([word] + [zero] * (n_limbs - 1), axis=-1)
+    mask = _core_mask(mask_material, mode, limbs.shape[0], n_limbs)
+    return _limb_ready(limbs, mask, q, use_kernel, interpret, subtract=False)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "q", "frac_bits", "mode", "codec", "use_kernel", "interpret"))
+def mea_decrypt_core(payload, mask_material, *, q: int, frac_bits: int,
+                     mode: str, codec: str, use_kernel: bool,
+                     interpret: bool):
+    """One-dispatch MEA-ECC decrypt: limb subtract + codec extract.
+
+    Returns (n,) float32 (codec="fixed") or (n,) uint32 raw words
+    (codec="bits").
+    """
+    from ..crypto import field as _field
+    payload = jnp.asarray(payload, jnp.uint32)
+    n, n_limbs = payload.shape
+    mask = _core_mask(mask_material, mode, n, n_limbs)
+    unmasked = _limb_ready(payload, mask, q, use_kernel, interpret,
+                           subtract=True)
+    if codec == "fixed":
+        return _field.fixed_decode_traced(unmasked, q, frac_bits)
+    return unmasked[:, 0]
 
 
 def flash_attention(q, k, v, *, causal=True, softcap=0.0,

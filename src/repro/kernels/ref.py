@@ -35,6 +35,21 @@ def coded_matmul(weights: jnp.ndarray, blocks: jnp.ndarray,
     return out.astype(blocks.dtype)
 
 
+def mask_add(payload: jnp.ndarray, mask: jnp.ndarray, q_limbs,
+             *, subtract: bool = False) -> jnp.ndarray:
+    """MEA-ECC mask add/sub oracle: (payload ± mask) mod q over uint32 limb
+    planes ``(..., L)`` — the carry-chain + single-conditional-subtract
+    reduction from ``repro.crypto.field``, traced with jnp (uint32-only, so
+    it runs identically under XLA and numpy).
+    """
+    from ..crypto import field as _field
+    payload = jnp.asarray(payload, jnp.uint32)
+    mask = jnp.broadcast_to(jnp.asarray(mask, jnp.uint32), payload.shape)
+    q_limbs = jnp.asarray(q_limbs, jnp.uint32)
+    op = _field.sub_mod if subtract else _field.add_mod
+    return op(payload, mask, q_limbs, xp=jnp)
+
+
 def mha_reference(q, k, v, *, causal: bool, softcap: float = 0.0):
     """Dense multi-head attention oracle.  q (B,Sq,H,hd) k/v (B,Skv,KV,hd)."""
     b, sq, h, hd = q.shape

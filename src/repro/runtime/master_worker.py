@@ -40,6 +40,9 @@ class RoundStats:
     decode_s: float
     crypto_s: float = 0.0
     n_waited: int = 0
+    # modeled MEA-ECC estimate kept as a cross-check when ``crypto_s`` is a
+    # real measurement (encrypt="real"); 0 otherwise
+    crypto_modeled_s: float = 0.0
 
     @property
     def total_s(self):
@@ -117,13 +120,22 @@ class DistributedMatmul:
 
     def __init__(self, scheme_name: str, n_workers: int, k_blocks: int,
                  t_colluding: int = 0, straggler: Optional[StragglerModel] = None,
-                 n_stragglers: int = 0, encrypt: bool = False, seed: int = 0,
-                 fused: Optional[bool] = None, **scheme_kwargs):
+                 n_stragglers: int = 0, encrypt: bool | str = False,
+                 seed: int = 0, fused: Optional[bool] = None,
+                 cipher_mode: str = "stream", **scheme_kwargs):
         self.name = scheme_name
         self.n = n_workers
         self.k = k_blocks
         self.t = t_colluding
-        self.encrypt = encrypt
+        # encrypt: False | "modeled" (True) | "real".  "modeled" prices
+        # MEA-ECC from a measured per-element rate (the seed behaviour);
+        # "real" genuinely encrypts every master↔worker transfer with the
+        # limb-vectorized cipher and reports *measured* crypto_s.
+        mode = {False: None, True: "modeled"}.get(encrypt, encrypt)
+        if mode not in (None, "modeled", "real"):
+            raise ValueError(f"encrypt must be False/True/'modeled'/'real', "
+                             f"got {encrypt!r}")
+        self.encrypt = mode
         self.straggler = straggler or StragglerModel(n_workers, n_stragglers, seed=seed)
         self.pool = WorkerPool(n_workers, self.straggler)
         # one construction path for every scheme; extra kwargs (p, q, deg_f,
@@ -151,22 +163,42 @@ class DistributedMatmul:
         self._worker_t = {}                 # shapes -> per-worker seconds
         self._crypto = None
         self._crypto_per_elem = {}          # (dtype, mode) -> seconds/element
-        if encrypt:
+        if mode is not None:
             from ..crypto import MEAECC, generate_keypair
-            self._crypto = (MEAECC(mode="paper"), generate_keypair())
+            # per-element rate sample for the modeled estimate (the seed
+            # behaviour; in "real" mode it survives as a cross-check)
+            self._crypto = (MEAECC(mode=cipher_mode), generate_keypair())
+        if mode == "real":
+            from ..crypto import MEAECC, generate_keypair
+            import itertools
+            # the transport cipher: lossless bits codec + static session
+            # keys, so decrypt(encrypt(x)) is bit-identical to x and the
+            # per-message EC cost is one cached shared-point lookup.
+            # cipher_mode defaults to "stream" — on a static channel the
+            # paper's single-mask mode would reuse one mask for every
+            # message; cipher_mode="paper" stays available for studying
+            # the paper-faithful construction (see README "Security")
+            self._mea = MEAECC(mode=cipher_mode, codec="bits")
+            self._master_kp = generate_keypair()
+            self._worker_kps = [generate_keypair() for _ in range(n_workers)]
+            self._nonce = itertools.count(1)
 
     # ------------------------------------------------------------- crypto
     def _crypto_cost_per_elem(self, dtype) -> float:
         """MEA-ECC seconds per matrix element, measured once per (dtype,
-        mode) on a 4×4 sample and cached — the cost is per-element linear."""
+        mode) on a 64×64 sample and cached — the cost is per-element linear.
+        A warm-up round trip runs first so jit compilation and the one-time
+        EC table builds never leak into the extrapolated rate."""
         mea, kp = self._crypto
         key = (str(dtype), mea.mode)
         if key not in self._crypto_per_elem:
-            m = np.zeros((4, 4), dtype)
+            m = np.zeros((64, 64), dtype)
+            ct = mea.encrypt(m, kp.pk)          # warm: compile + tables
+            mea.decrypt(ct, kp)
             t0 = time.perf_counter()
             ct = mea.encrypt(m, kp.pk)
             mea.decrypt(ct, kp)
-            self._crypto_per_elem[key] = (time.perf_counter() - t0) / 16
+            self._crypto_per_elem[key] = (time.perf_counter() - t0) / m.size
         return self._crypto_per_elem[key]
 
     def _crypto_overhead_elems(self, total_elems: int, dtype) -> float:
@@ -186,6 +218,15 @@ class DistributedMatmul:
         # device array to host just to read it
         return self._crypto_overhead_elems(total_elems,
                                            getattr(a, "dtype", np.float32))
+
+    def _wire(self, arr: np.ndarray, sender_kp, recipient_kp) -> np.ndarray:
+        """One real master↔worker transfer: MEA-ECC encrypt to the
+        recipient's public key, decrypt with its private key at the other
+        end.  The bits codec makes the round trip bit-identical; the static
+        session keys make the per-message EC cost a cache lookup."""
+        ct = self._mea.encrypt(np.asarray(arr), recipient_kp.pk,
+                               sender=sender_kp, nonce=next(self._nonce))
+        return self._mea.decrypt(ct, recipient_kp)
 
     # ------------------------------------------------------- fused pipeline
     def _fused_fn(self, a_shape, b_shape, dtype):
@@ -210,6 +251,44 @@ class DistributedMatmul:
             self._fused_cache.move_to_end(key)
         return fn
 
+    def _staged_fns(self, a_shape, b_shape, dtype):
+        """The real-encryption round, split at the wire boundaries into
+        three jitted stages (encode / batched worker matmul / masked decode)
+        — each LRU-cached per shape class, so the fused path still compiles
+        once per shape class while genuine ciphertexts cross between the
+        stages.  The stages mirror ``kernels.ref.coded_matmul`` op-for-op,
+        so a real round is bit-identical to the single-dispatch round."""
+        key = ("real", a_shape, b_shape, dtype)
+        fns = self._fused_cache.get(key)
+        if fns is None:
+            scheme = self.scheme
+            m, n_out = a_shape[0], b_shape[-1]
+
+            def _encode(a):
+                self.trace_count += 1      # runs at trace time only
+                return scheme.encode(a)
+
+            def _workers(blocks, b):
+                self.trace_count += 1
+                return jnp.einsum(
+                    "nij,jk->nik", blocks.astype(jnp.float32),
+                    b.astype(jnp.float32),
+                    precision=jax.lax.Precision.HIGHEST).astype(jnp.float32)
+
+            def _decode(results, mask):
+                self.trace_count += 1
+                dec = scheme._combine(scheme.decode_matrix_masked(mask),
+                                      results)
+                return scheme.reconstruct_matmul(dec, m, n_out)
+
+            fns = (jax.jit(_encode), jax.jit(_workers), jax.jit(_decode))
+            self._fused_cache[key] = fns
+            if len(self._fused_cache) > self._fused_cache_max:
+                self._fused_cache.popitem(last=False)
+        else:
+            self._fused_cache.move_to_end(key)
+        return fns
+
     def _worker_compute_time(self, lhs_shape, rhs_shape) -> float:
         """Virtual-clock per-worker latency: time ONE jitted batched matmul
         of the per-worker operand shapes (once per shape, cached) and
@@ -228,19 +307,27 @@ class DistributedMatmul:
             self._worker_t[key] = (time.perf_counter() - t0) / self.n
         return self._worker_t[key]
 
-    def _matmul_fused(self, a: jnp.ndarray, b: jnp.ndarray, round_idx: int):
-        fn = self._fused_fn(a.shape, b.shape, str(a.dtype))
+    def _virtual_round_plan(self, a_shape, b_shape, round_idx: int):
+        """Virtual clock: who responds this round and how long the master
+        waits.  Shared by the fused and real-encryption paths so their
+        responder selection can never desynchronize (the real round is
+        asserted bit-identical to the unencrypted one)."""
         split = getattr(self.scheme, "k_blocks", self.n)
-        blk = -(-a.shape[0] // split)
-        # virtual clock: who responds this round?
-        t_comp = self._worker_compute_time((blk, a.shape[1]),
-                                           (a.shape[1], b.shape[-1]))
+        blk = -(-a_shape[0] // split)
+        t_comp = self._worker_compute_time((blk, a_shape[1]),
+                                           (a_shape[1], b_shape[-1]))
         lat = self.straggler.delays(round_idx) + t_comp
         order = np.argsort(lat)
         resp = np.sort(order[: self.wait_for])
         wait_s = float(lat[order[self.wait_for - 1]])
         mask = np.zeros(self.n, np.float32)
         mask[resp] = 1.0
+        return blk, resp, wait_s, mask
+
+    def _matmul_fused(self, a: jnp.ndarray, b: jnp.ndarray, round_idx: int):
+        fn = self._fused_fn(a.shape, b.shape, str(a.dtype))
+        blk, resp, wait_s, mask = self._virtual_round_plan(a.shape, b.shape,
+                                                           round_idx)
         # master math (encode + decode + reassembly): one dispatch
         t0 = time.perf_counter()
         out = fn(a, b, jnp.asarray(mask))
@@ -250,6 +337,50 @@ class DistributedMatmul:
                                                np.float32)
         stats = RoundStats(encode_s=t_master, compute_wait_s=wait_s,
                            decode_s=0.0, crypto_s=crypto_s, n_waited=len(resp))
+        return np.asarray(out), stats
+
+    def _matmul_real(self, a: jnp.ndarray, b: jnp.ndarray, round_idx: int):
+        """The fused round with genuine transmission security: every shard
+        is MEA-ECC-encrypted to its worker and decrypted there, every
+        responder's product is encrypted back to the master — ``crypto_s``
+        is the *measured* wall time of those transfers (the modeled
+        estimate rides along in ``crypto_modeled_s`` as a cross-check).
+        The bits-codec transport is lossless, so the round output is
+        bit-identical to the unencrypted round."""
+        enc_fn, worker_fn, decode_fn = self._staged_fns(a.shape, b.shape,
+                                                        str(a.dtype))
+        blk, resp, wait_s, mask = self._virtual_round_plan(a.shape, b.shape,
+                                                           round_idx)
+        t0 = time.perf_counter()
+        enc = np.asarray(enc_fn(a))                      # (N, blk, d)
+        t_enc = time.perf_counter() - t0
+        # wire out: each worker receives (and decrypts) its coded shard
+        t0 = time.perf_counter()
+        shards = np.stack([self._wire(enc[i], self._master_kp,
+                                      self._worker_kps[i])
+                           for i in range(self.n)])
+        crypto_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        # np.array: a writable copy — responder slots are overwritten with
+        # their (bit-identical) decrypted wire payloads below
+        results = np.array(worker_fn(jnp.asarray(shards), b))
+        t_enc += time.perf_counter() - t0
+        # wire back: the responders' products return encrypted (stragglers
+        # never answer; their slots carry weight 0 in the masked decode)
+        t0 = time.perf_counter()
+        for i in resp:
+            results[i] = self._wire(results[i], self._worker_kps[i],
+                                    self._master_kp)
+        crypto_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out = decode_fn(jnp.asarray(results), jnp.asarray(mask))
+        jax.block_until_ready(out)
+        t_dec = time.perf_counter() - t0
+        modeled = self._crypto_overhead_elems(self.n * blk * a.shape[1],
+                                              np.float32)
+        stats = RoundStats(encode_s=t_enc, compute_wait_s=wait_s,
+                           decode_s=t_dec, crypto_s=crypto_s,
+                           n_waited=len(resp), crypto_modeled_s=modeled)
         return np.asarray(out), stats
 
     # --------------------------------------------------------------- rounds
@@ -263,14 +394,20 @@ class DistributedMatmul:
         """
         a = jnp.asarray(a, jnp.float32)
         b = jnp.asarray(b, jnp.float32)
+        real = self.encrypt == "real"
         if self.use_fused:
+            if real:
+                return self._matmul_real(a, b, round_idx)
             return self._matmul_fused(a, b, round_idx)
         t0 = time.perf_counter()
         if self.scheme.pair_coded:
             ea, eb = self.scheme.encode_pair(a, b)
             jax.block_until_ready((ea, eb))
             shards = [(ea[i], eb[i]) for i in range(self.n)]
-            f = lambda ab: np.asarray(ab[0] @ ab[1])
+            # jnp.asarray: no-op on the plain path's device arrays, converts
+            # the real path's decrypted numpy shards — both modes compute
+            # the worker product with the same jnp matmul on the same bits
+            f = lambda ab: np.asarray(jnp.asarray(ab[0]) @ jnp.asarray(ab[1]))
             lhs_shape, rhs_shape = ea.shape[1:], eb.shape[1:]
         else:
             enc = self.scheme.encode(a)
@@ -280,17 +417,36 @@ class DistributedMatmul:
             lhs_shape, rhs_shape = enc.shape[1:], b.shape
         t_enc = time.perf_counter() - t0
 
+        crypto_s = 0.0
+        if real:
+            # wire out: every worker decrypts bit-identical shard bytes
+            t0 = time.perf_counter()
+            shards = [
+                tuple(self._wire(part, self._master_kp, self._worker_kps[i])
+                      for part in s) if isinstance(s, tuple)
+                else self._wire(s, self._master_kp, self._worker_kps[i])
+                for i, s in enumerate(shards)]
+            crypto_s += time.perf_counter() - t0
+
         t_comp = self._worker_compute_time(lhs_shape, rhs_shape)
         resp, results, wait_s = self.pool.run_round(shards, f, round_idx,
                                                     self.wait_for,
                                                     t_compute=t_comp)
+        if real:
+            # wire back: responders encrypt their products to the master
+            t0 = time.perf_counter()
+            results = [self._wire(r, self._worker_kps[i], self._master_kp)
+                       for i, r in zip(resp, results)]
+            crypto_s += time.perf_counter() - t0
         t0 = time.perf_counter()
         dec = self.scheme.decode(jnp.asarray(np.stack(results)), list(resp))
         out = np.asarray(self.scheme.reconstruct_matmul(dec, a.shape[0],
                                                         b.shape[-1]))
         t_dec = time.perf_counter() - t0
+        modeled = self._crypto_overhead(shards)
         stats = RoundStats(t_enc, wait_s, t_dec,
-                           self._crypto_overhead(shards), len(resp))
+                           crypto_s if real else modeled, len(resp),
+                           crypto_modeled_s=modeled if real else 0.0)
         return out, stats
 
 

@@ -1,9 +1,22 @@
+"""ECC + MEA-ECC (paper §IV): group law, fast scalar multiplication vs the
+double-and-add oracle, limb codec properties, keystream parity, and
+bit-exactness of the limb-vectorized cipher against the legacy object-dtype
+implementation (``crypto/ref.py``)."""
+
+import hashlib
+
 import numpy as np
+import jax.numpy as jnp
 import pytest
 
 from repro.crypto import (CURVE_SECP256K1, MEAECC, generate_keypair,
                           shared_secret)
-from repro.crypto.ecc import CURVE_TOY, INFINITY, keystream
+from repro.crypto.ecc import (CURVE_TOY, ECPoint, INFINITY, ephemeral_nonce,
+                              keystream)
+from repro.crypto import field as F
+from repro.crypto.ref import LegacyFixedPointCodec, LegacyMEAECC
+
+Q = CURVE_SECP256K1.q
 
 
 class TestCurveGroupLaw:
@@ -50,6 +63,38 @@ class TestCurveGroupLaw:
             EllipticCurve(q=17, a=0, b=0, gx=1, gy=1, order=1)
 
 
+class TestFastScalarMultiply:
+    """wNAF / Jacobian / fixed-base comb vs the affine double-and-add oracle."""
+
+    def test_toy_exhaustive(self):
+        c = CURVE_TOY
+        base = c.multiply_naive(7, c.generator)
+        for k in range(0, 2 * c.order + 1):
+            assert c.multiply(k, c.generator) == \
+                c.multiply_naive(k, c.generator), k
+            assert c.multiply(k, base) == c.multiply_naive(k, base), k
+            assert c.multiply_base(k) == c.multiply_naive(k, c.generator), k
+
+    def test_secp256k1_vectors(self):
+        c = CURVE_SECP256K1
+        # known vector: 2·G (secp256k1 test vectors)
+        assert c.multiply_base(2) == ECPoint(
+            0xC6047F9441ED7D6D3045406E95C07CD85C778E4B8CEF3CA7ABAC09B95C709EE5,
+            0x1AE168FEA63DC339A3C58419466CEAEEF7F632653266D0E1236431A950CFE52A)
+        rng = np.random.default_rng(0)
+        p = c.multiply_base(0xDEADBEEF)
+        for k in [1, 2, 3, c.order - 1, c.order // 2,
+                  *(int(rng.integers(1, 2**62)) ** 4 for _ in range(3))]:
+            assert c.multiply_base(k) == c.multiply_naive(k, c.generator), k
+            assert c.multiply(k, p) == c.multiply_naive(k, p), k
+
+    def test_infinity_and_zero(self):
+        c = CURVE_SECP256K1
+        assert c.multiply(0, c.generator).is_infinity
+        assert c.multiply_base(c.order).is_infinity
+        assert c.multiply(5, INFINITY).is_infinity
+
+
 class TestECDH:
     def test_shared_key_agreement(self):
         a = generate_keypair()
@@ -59,6 +104,168 @@ class TestECDH:
 
     def test_distinct_keys(self):
         assert generate_keypair().sk != generate_keypair().sk
+
+    def test_shared_point_cached(self):
+        from repro.crypto.ecc import _cached_shared
+        a, b = generate_keypair(), generate_keypair()
+        before = _cached_shared.cache_info().hits
+        s1 = shared_secret(CURVE_SECP256K1, a, b.pk)
+        s2 = shared_secret(CURVE_SECP256K1, a, b.pk)
+        assert s1 == s2
+        assert _cached_shared.cache_info().hits > before
+
+
+class TestNonceDerivation:
+    def test_x_zero_is_a_legal_nonce(self):
+        # x = 0 is a real affine coordinate on CURVE_TOY: y² = 2 has y = 6
+        p = ECPoint(0, 6)
+        assert CURVE_TOY.contains(p)
+        assert ephemeral_nonce(p) == 0
+
+    def test_infinity_rejected(self):
+        with pytest.raises(ValueError):
+            ephemeral_nonce(INFINITY)
+
+    def test_keystream_returns_ndarray(self):
+        ks = keystream(ECPoint(3, 5), 1, 9, Q)
+        assert isinstance(ks, np.ndarray) and ks.dtype == np.uint64
+
+
+class TestLimbField:
+    def test_add_sub_match_bigint(self):
+        rng = np.random.default_rng(0)
+        fld = F.LimbField(Q)
+        av = [int.from_bytes(rng.bytes(32), "big") % Q for _ in range(100)]
+        bv = [int.from_bytes(rng.bytes(32), "big") % Q for _ in range(100)]
+        a = np.stack([F.int_to_limbs(v, fld.n_limbs) for v in av])
+        b = np.stack([F.int_to_limbs(v, fld.n_limbs) for v in bv])
+        for got, want in zip(F.limbs_to_int(fld.add(a, b)),
+                             [(x + y) % Q for x, y in zip(av, bv)]):
+            assert int(got) == want
+        for got, want in zip(F.limbs_to_int(fld.sub(a, b)),
+                             [(x - y) % Q for x, y in zip(av, bv)]):
+            assert int(got) == want
+
+    def test_u64_view(self):
+        fld = F.LimbField(Q)
+        limbs = fld.from_int((1 << 200) + 12345, shape=(3,))
+        view = F.as_u64(limbs)
+        assert view.shape == (3, fld.n_limbs // 2)
+        assert int(view[0, 0]) == 12345
+
+    def test_roundtrip_int_limbs(self):
+        for v in (0, 1, Q - 1, 1 << 255, 0xFFFFFFFF, 1 << 32):
+            assert int(F.limbs_to_int(F.int_to_limbs(v % Q, 8))) == v % Q
+
+
+# edge floats: zeros, subnormals, the ±3e38 clamp region, f32 extremes,
+# exact halves (round-half-even), powers of two crossing limb boundaries
+EDGE_F32 = np.array(
+    [0.0, -0.0, 1.0, -1.0, 1.5, -1.5, 2.5 / 65536, 3.5 / 65536,
+     -2.5 / 65536, -3.5 / 65536, 1 / 65536, -1 / 65536, 0.5 / 65536,
+     2**-149, -2**-149, 1e-38, -1e-38, 3e38, -3e38, 3.4e38, -3.4e38,
+     2.9e38, 65504.0, -65504.0, 2.0**24, 2.0**24 + 2, 2.0**31, 2.0**32,
+     2.0**63, 2.0**64, -2.0**90, 123.456, -9876.543], np.float32)
+
+
+class TestLimbCodec:
+    def _codec(self):
+        return F.FixedPointCodec(Q, 16)
+
+    def test_embed_matches_legacy_bigint(self):
+        rng = np.random.default_rng(1)
+        xs = np.concatenate([EDGE_F32,
+                             (rng.standard_normal(400) * 100).astype(np.float32),
+                             (rng.standard_normal(100) * 1e37).astype(np.float32)])
+        enc = self._codec().encode(xs)
+        legacy = LegacyFixedPointCodec(Q, 16).encode(xs.astype(np.float64))
+        for got, want in zip(F.limbs_to_int(enc), legacy):
+            assert int(got) == int(want)
+
+    def test_roundtrip_quantizes_exactly(self):
+        codec = self._codec()
+        dec = codec.decode(codec.encode(EDGE_F32))
+        want = np.clip(np.round(EDGE_F32.astype(np.float64) * 2**16) / 2**16,
+                       -3e38, 3e38).astype(np.float32)
+        np.testing.assert_array_equal(dec, want)
+
+    @pytest.mark.parametrize("dtype", ["float16", "bfloat16"])
+    def test_half_precision_inputs(self, dtype):
+        rng = np.random.default_rng(2)
+        xs = np.asarray(jnp.asarray(rng.standard_normal(128) * 8, dtype))
+        codec = self._codec()
+        dec = codec.decode(codec.encode(xs))
+        want = np.round(np.asarray(xs, np.float64) * 2**16) / 2**16
+        np.testing.assert_array_equal(dec, want.astype(np.float32))
+
+    def test_decode_matches_legacy_on_garbage(self):
+        """Wrong-key decrypts see uniform field elements; the clamp path
+        must match the legacy decoder bit-for-bit."""
+        rng = np.random.default_rng(3)
+        vals = [int.from_bytes(rng.bytes(32), "big") % Q for _ in range(256)]
+        limbs = np.stack([F.int_to_limbs(v, 8) for v in vals])
+        got = self._codec().decode(limbs)
+        want = LegacyFixedPointCodec(Q, 16).decode(
+            np.array(vals, dtype=object).reshape(-1))
+        np.testing.assert_array_equal(got, want)
+
+    def test_traced_codec_matches_numpy(self):
+        """The in-jit (XLA) codec twins are bit-identical to the numpy
+        reference across the edge sweep."""
+        rng = np.random.default_rng(4)
+        xs = np.concatenate([EDGE_F32,
+                             (rng.standard_normal(300) * 50).astype(np.float32)])
+        codec = self._codec()
+        enc_np = codec.encode(xs)
+        enc_tr = np.asarray(F.fixed_encode_traced(xs, Q, 16, 8))
+        np.testing.assert_array_equal(enc_np, enc_tr)
+        dec_tr = np.asarray(F.fixed_decode_traced(enc_np, Q, 16))
+        np.testing.assert_array_equal(codec.decode(enc_np), dec_tr)
+
+    def test_bits_codec_lossless_all_dtypes(self):
+        rng = np.random.default_rng(5)
+        bc = F.BitsCodec(Q)
+        for dtype in (np.float32, np.float64, np.float16, np.int32, np.int8):
+            arr = (rng.standard_normal((7, 5)) * 100).astype(dtype)
+            out = bc.decode(bc.encode(arr), dtype, arr.shape)
+            assert out.dtype == arr.dtype
+            np.testing.assert_array_equal(out.view(np.uint8),
+                                          arr.view(np.uint8))
+
+    def test_small_modulus_rejected(self):
+        with pytest.raises(ValueError):
+            F.FixedPointCodec(CURVE_TOY.q, 16)
+        with pytest.raises(ValueError):
+            F.BitsCodec(CURVE_TOY.q)
+
+
+class TestVectorizedKeystream:
+    def test_sha256_blocks_match_hashlib(self):
+        seed = hashlib.sha256(b"spacdc").digest()
+        digests = F.sha256_counter_blocks(seed, np.arange(7, dtype=np.uint64))
+        for c in range(7):
+            want = hashlib.sha256(seed + int(c).to_bytes(8, "big")).digest()
+            got = b"".join(int(x).to_bytes(4, "big") for x in digests[c])
+            assert got == want
+
+    @pytest.mark.parametrize("q", [Q, 17, (1 << 61) - 1])
+    @pytest.mark.parametrize("n", [1, 4, 5, 37])
+    def test_matches_scalar_reference(self, q, n):
+        ks_vec = F.keystream_u64(12345, 67890, 7, n, q)
+        ks_ref = keystream(ECPoint(12345, 67890), 7, n, q)
+        np.testing.assert_array_equal(ks_vec, ks_ref)
+
+    def test_traced_mask_matches_numpy(self):
+        seed8 = F.seed_words(111, 222, 333)
+        got = np.asarray(F.stream_mask_traced(seed8, 37, 8))
+        words = F.keystream_u64(111, 222, 333, 37, Q)
+        want = F.LimbField(Q).from_u64(words)
+        np.testing.assert_array_equal(got, want)
+
+    def test_nonce_changes_stream(self):
+        a = F.keystream_u64(1, 2, 3, 16, Q)
+        b = F.keystream_u64(1, 2, 4, 16, Q)
+        assert (np.asarray(a) != np.asarray(b)).any()
 
 
 class TestMEAECC:
@@ -70,6 +277,24 @@ class TestMEAECC:
         out = mea.secure_channel_roundtrip(m)
         np.testing.assert_allclose(out, np.round(m * 2**16) / 2**16, atol=0)
 
+    @pytest.mark.parametrize("mode", ["paper", "stream"])
+    def test_bit_exact_parity_with_legacy(self, mode):
+        """The tentpole contract: same ciphertext ints, same decrypted
+        floats as the object-dtype oracle, for fixed key and nonce."""
+        rng = np.random.default_rng(1)
+        w = generate_keypair(sk=0xABCDEF123456789)
+        for arr in [(rng.standard_normal((16, 8)) * 100).astype(np.float32),
+                    EDGE_F32]:
+            mea, leg = MEAECC(mode=mode), LegacyMEAECC(mode=mode)
+            c = mea.encrypt(arr, w.pk, k=99991)
+            cl = leg.encrypt(arr, w.pk, k=99991)
+            assert c.ephemeral == cl.ephemeral
+            for got, want in zip(F.limbs_to_int(c.payload),
+                                 cl.payload.reshape(-1)):
+                assert int(got) == int(want)
+            np.testing.assert_array_equal(mea.decrypt(c, w),
+                                          leg.decrypt(cl, w))
+
     def test_ciphertext_hides_plaintext(self):
         rng = np.random.default_rng(1)
         m = rng.standard_normal((4, 4)).astype(np.float32)
@@ -78,8 +303,8 @@ class TestMEAECC:
         c1 = mea.encrypt(m, w.pk, k=12345)
         c2 = mea.encrypt(np.zeros_like(m), w.pk, k=12345)
         # same key/nonce, different plaintext -> payload differs elementwise
-        assert all(int(a) != int(b) for a, b in
-                   zip(c1.payload.reshape(-1)[:4], c2.payload.reshape(-1)[:4]))
+        v1, v2 = F.limbs_to_int(c1.payload), F.limbs_to_int(c2.payload)
+        assert all(int(a) != int(b) for a, b in zip(v1[:4], v2[:4]))
 
     def test_wrong_key_fails_to_decrypt(self):
         rng = np.random.default_rng(2)
@@ -92,7 +317,69 @@ class TestMEAECC:
 
     def test_keystream_deterministic(self):
         a = generate_keypair(sk=123456789)
-        ks1 = keystream(a.pk, 7, 16, CURVE_SECP256K1.q)
-        ks2 = keystream(a.pk, 7, 16, CURVE_SECP256K1.q)
-        ks3 = keystream(a.pk, 8, 16, CURVE_SECP256K1.q)
-        assert ks1 == ks2 and ks1 != ks3
+        ks1 = keystream(a.pk, 7, 16, Q)
+        ks2 = keystream(a.pk, 7, 16, Q)
+        ks3 = keystream(a.pk, 8, 16, Q)
+        assert np.array_equal(ks1, ks2) and not np.array_equal(ks1, ks3)
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.float64, np.int32])
+    def test_bits_codec_transport_bit_identical(self, dtype):
+        rng = np.random.default_rng(3)
+        arr = (rng.standard_normal((13, 7)) * 50).astype(dtype)
+        mea = MEAECC(mode="stream", codec="bits")
+        w = generate_keypair()
+        out = mea.decrypt(mea.encrypt(arr, w.pk, k=777), w)
+        assert out.dtype == arr.dtype
+        np.testing.assert_array_equal(out.view(np.uint8), arr.view(np.uint8))
+
+    def test_static_channel_and_nonces(self):
+        """sender= reuses the cached ECDH point; distinct nonces give
+        distinct ciphertexts that both decrypt exactly."""
+        rng = np.random.default_rng(4)
+        m = rng.standard_normal((8, 4)).astype(np.float32)
+        mea = MEAECC(mode="stream", codec="bits")
+        master, w = generate_keypair(), generate_keypair()
+        c1 = mea.encrypt(m, w.pk, sender=master, nonce=1)
+        c2 = mea.encrypt(m, w.pk, sender=master, nonce=2)
+        assert c1.ephemeral == master.pk
+        v1, v2 = F.limbs_to_int(c1.payload), F.limbs_to_int(c2.payload)
+        assert any(int(a) != int(b) for a, b in zip(v1, v2))
+        np.testing.assert_array_equal(mea.decrypt(c1, w), m)
+        np.testing.assert_array_equal(mea.decrypt(c2, w), m)
+
+    def test_decrypt_honors_ciphertext_codec(self):
+        """Ciphertexts are self-describing: an instance configured with one
+        codec decrypts a ciphertext produced under the other."""
+        rng = np.random.default_rng(6)
+        arr = rng.standard_normal((5, 3)).astype(np.float32)
+        w = generate_keypair(sk=171717)
+        ct_bits = MEAECC(mode="stream", codec="bits").encrypt(arr, w.pk, k=9)
+        out = MEAECC(mode="stream").decrypt(ct_bits, w)     # fixed instance
+        np.testing.assert_array_equal(out, arr)
+        ct_fixed = MEAECC(mode="paper").encrypt(arr, w.pk, k=9)
+        out2 = MEAECC(mode="paper", codec="bits").decrypt(ct_fixed, w)
+        np.testing.assert_array_equal(
+            out2, MEAECC(mode="paper").decrypt(ct_fixed, w))
+
+    def test_static_stream_channel_requires_nonce(self):
+        """nonce=None on a static stream channel would reuse one keystream
+        for every message (two-time pad) — rejected."""
+        mea = MEAECC(mode="stream", codec="bits")
+        master, w = generate_keypair(), generate_keypair()
+        with pytest.raises(ValueError):
+            mea.encrypt(np.ones(4, np.float32), w.pk, sender=master)
+
+    @pytest.mark.parametrize("force", [False, True])
+    def test_use_kernel_tristate_parity(self, force):
+        """Pallas kernel (interpret off-TPU) and XLA twin produce identical
+        ciphertexts and plaintexts."""
+        rng = np.random.default_rng(5)
+        m = rng.standard_normal((6, 4)).astype(np.float32)
+        w = generate_keypair(sk=424242)
+        base = MEAECC(mode="paper")
+        forced = MEAECC(mode="paper", use_kernel=force)
+        c0 = base.encrypt(m, w.pk, k=31337)
+        c1 = forced.encrypt(m, w.pk, k=31337)
+        np.testing.assert_array_equal(c0.payload, c1.payload)
+        np.testing.assert_array_equal(base.decrypt(c0, w),
+                                      forced.decrypt(c1, w))

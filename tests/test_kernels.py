@@ -9,8 +9,72 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.berrut_encode import berrut_encode_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.mask_add import mask_add_kernel
 
 rng = np.random.default_rng(0)
+
+
+def _rand_limbs(n, q, n_limbs, seed):
+    """(n, n_limbs) uint32 planes of uniform field elements < q."""
+    from repro.crypto.field import int_to_limbs
+    r = np.random.default_rng(seed)
+    vals = [int.from_bytes(r.bytes((q.bit_length() + 7) // 8), "big") % q
+            for _ in range(n)]
+    return np.stack([int_to_limbs(v, n_limbs) for v in vals]), vals
+
+
+from repro.crypto import CURVE_SECP256K1
+
+SECP_Q = CURVE_SECP256K1.q
+
+
+@pytest.mark.parametrize("n", [1, 100, 513, 4096])
+@pytest.mark.parametrize("subtract", [False, True])
+def test_mask_add_kernel_matches_oracle(n, subtract):
+    from repro.crypto.field import int_to_limbs
+    a, av = _rand_limbs(n, SECP_Q, 8, seed=n)
+    b, bv = _rand_limbs(n, SECP_Q, 8, seed=n + 1)
+    q_limbs = tuple(int(v) for v in int_to_limbs(SECP_Q, 8))
+    out = mask_add_kernel(jnp.asarray(a), jnp.asarray(b), q_limbs=q_limbs,
+                          subtract=subtract, interpret=True)
+    want = ref.mask_add(a, b, np.asarray(q_limbs, np.uint32),
+                        subtract=subtract)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    # and both match big-int ground truth
+    from repro.crypto.field import limbs_to_int
+    got = limbs_to_int(np.asarray(out))
+    for g, x, y in zip(got, av, bv):
+        assert int(g) == ((x - y) if subtract else (x + y)) % SECP_Q
+
+
+def test_mask_add_kernel_edge_values():
+    """Carry/borrow chains at the field edges: 0, 1, q-1, 2^256-adjacent."""
+    from repro.kernels.ops import mask_add
+    from repro.crypto.field import int_to_limbs, limbs_to_int
+    vals = [0, 1, 2, SECP_Q - 1, SECP_Q - 2, (1 << 255) % SECP_Q,
+            0xFFFFFFFF, 0xFFFFFFFF00000000 % SECP_Q]
+    a = np.stack([int_to_limbs(v, 8) for v in vals])
+    for other in (0, 1, SECP_Q - 1):
+        b = np.broadcast_to(int_to_limbs(other, 8), a.shape)
+        for subtract in (False, True):
+            for force in (False, True):
+                out = mask_add(a, b, SECP_Q, subtract=subtract,
+                               force_kernel=force)
+                got = limbs_to_int(np.asarray(out))
+                for g, x in zip(got, vals):
+                    want = (x - other) if subtract else (x + other)
+                    assert int(g) == want % SECP_Q, (x, other, subtract)
+
+
+def test_mask_add_broadcast_scalar_mask():
+    """Paper mode masks every element with one field scalar."""
+    from repro.kernels.ops import mask_add
+    from repro.crypto.field import int_to_limbs, limbs_to_int
+    a, av = _rand_limbs(37, SECP_Q, 8, seed=3)
+    psi = 0x123456789ABCDEF0FEDCBA9876543210
+    out = mask_add(a, int_to_limbs(psi, 8), SECP_Q, force_kernel=True)
+    for g, x in zip(limbs_to_int(np.asarray(out)), av):
+        assert int(g) == (x + psi) % SECP_Q
 
 
 @pytest.mark.parametrize("q,j,m", [(8, 6, 1000), (20, 8, 4096), (3, 3, 77),
