@@ -1,0 +1,228 @@
+"""Anytime decoding: the error-vs-latency curve (the paper's §V claim).
+
+One shared straggler trace (N workers, S injected stragglers), four
+schemes at their natural operating points, and for each scheme the FULL
+per-prefix curve of one round: after the p-th arrival (virtual time t_p),
+what relative error would decoding now yield?
+
+* SPACDC / BACC are rateless: every prefix decodes, the error falls as
+  arrivals accumulate, and the master may stop anywhere on the curve
+  (Deadline / ErrorTarget wait policies).
+* MDS / LCC have hard recovery thresholds: below them there is NO decode
+  (``ready=False``), and with S stragglers pressing on the threshold the
+  first decodable prefix waits on a straggler — the paper's Fig-3 gap.
+
+The workload is *smooth* (rows drawn from a few low-frequency harmonics
+— the operating regime of approximated coded computing; the paper's own
+DL experiment codes a trained weight matrix, not white noise), so the
+Berrut interpolant genuinely converges along the prefix.  Evaluating a
+whole curve costs TWO jitted dispatches per scheme (stage 1: encode + all
+worker matmuls; stage 2: every prefix decoded in one batched
+``prefix_decode`` contraction) — asserted below via ``trace_count``.
+
+  PYTHONPATH=src python benchmarks/bench_anytime.py [--smoke] [--out PATH]
+
+Writes ``BENCH_anytime.json``.  Gates (full mode):
+  * SPACDC reaches rel-err <= 1e-2 at a strictly earlier virtual time
+    than the first decodable prefix of MDS and of LCC;
+  * every scheme's curve costs exactly 2 traced dispatches.
+Smoke mode shrinks shapes and gates only the qualitative ordering
+(SPACDC's first finite-error decode strictly precedes the LCC threshold).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+from repro.runtime import FixedQuantile, StragglerModel
+from repro.runtime.master_worker import DistributedMatmul
+
+ERR_TARGET = 1e-2
+
+# one shared trace: the paper's Fig-3 apparatus (N=30, S=7 pushes the
+# K=24 threshold schemes past the fast-worker pool)
+FULL = dict(
+    n_workers=30, n_stragglers=7, shape=(576, 64, 48),
+    schemes={
+        "spacdc": dict(k_blocks=6, t_colluding=2, noise_scale=0.05),
+        "bacc": dict(k_blocks=6),
+        "mds": dict(k_blocks=24),
+        "lcc": dict(k_blocks=24, t_colluding=3, deg_f=1),
+    })
+SMOKE = dict(
+    n_workers=10, n_stragglers=3, shape=(96, 32, 16),
+    schemes={
+        "spacdc": dict(k_blocks=3, t_colluding=1, noise_scale=0.05),
+        "bacc": dict(k_blocks=3),
+        "mds": dict(k_blocks=8),
+        "lcc": dict(k_blocks=8, deg_f=1),
+    })
+
+
+def smooth_matrix(m: int, d: int, n_modes: int = 5, decay: float = 2.0,
+                  seed: int = 1) -> np.ndarray:
+    """Rows sampled from a few low-frequency cosine harmonics with
+    decaying amplitudes — a smooth-along-rows operand (trained weight
+    matrices, images, sensor fields), which is where approximated coding's
+    early decodes carry information."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(m)[:, None] / m
+    out = np.zeros((m, d))
+    for c in range(n_modes):
+        out += rng.standard_normal(d)[None, :] * np.cos(np.pi * c * t) \
+            / (1.0 + c) ** decay
+    return out.astype(np.float32)
+
+
+def first_below(points, eps: float):
+    """Earliest curve point whose monotone-envelope error is <= eps."""
+    for p in points:
+        if p.ready and p.best_err <= eps:
+            return p
+    return None
+
+
+def first_ready(points):
+    for p in points:
+        if p.ready:
+            return p
+    return None
+
+
+def measure(smoke: bool = False) -> dict:
+    cfg = SMOKE if smoke else FULL
+    n, s = cfg["n_workers"], cfg["n_stragglers"]
+    m, d, n_out = cfg["shape"]
+    a = smooth_matrix(m, d)
+    b = np.random.default_rng(0).standard_normal((d, n_out)).astype(np.float32)
+    curves, summary = {}, {}
+    for name, kw in cfg["schemes"].items():
+        straggler = StragglerModel(n, s, seed=0)      # the SHARED trace
+        dist = DistributedMatmul(name, n_workers=n, straggler=straggler,
+                                 **kw)
+        points = dist.anytime_curve(a, b, round_idx=0)
+        assert dist.trace_count == 2, \
+            f"{name}: anytime curve took {dist.trace_count} traced " \
+            f"dispatches (contract: 2)"
+        points2 = dist.anytime_curve(a, b, round_idx=1)   # straggler churn
+        assert dist.trace_count == 2, \
+            f"{name}: repeated curve re-traced ({dist.trace_count})"
+        del points2
+        curves[name] = [{
+            "responders": p.n_responders,
+            "t_virtual_s": round(p.t_s, 6),
+            "rel_err": None if not np.isfinite(p.rel_err) else
+            float(f"{p.rel_err:.3e}"),
+            "best_err": None if not np.isfinite(p.best_err) else
+            float(f"{p.best_err:.3e}"),
+            "ready": p.ready,
+        } for p in points]
+        hit = first_below(points, ERR_TARGET)
+        ready = first_ready(points)
+        summary[name] = {
+            "recovery_threshold": int(dist.scheme.recovery_threshold),
+            "rateless": bool(dist.scheme.rateless),
+            "first_decodable_s": None if ready is None else
+            round(ready.t_s, 6),
+            "first_decodable_prefix": None if ready is None else
+            ready.n_responders,
+            f"first_err_le_{ERR_TARGET:g}_s": None if hit is None else
+            round(hit.t_s, 6),
+            f"first_err_le_{ERR_TARGET:g}_prefix": None if hit is None else
+            hit.n_responders,
+        }
+        if name == "mds" and hit is None:
+            # real-field Vandermonde at paper-scale K: the generator's
+            # condition number (~3e8 at K=24) amplifies the f32 shard
+            # representation noise past any useful accuracy — the same
+            # conditioning wall PR 2's fused_decode_stable gates on.  The
+            # comparison gate therefore uses first_decodable_s (the
+            # threshold wall), which conditioning cannot move.
+            summary[name]["note"] = ("rel_err at threshold reflects f32 "
+                                     "Vandermonde conditioning, not the "
+                                     "code's information limit")
+
+    # encode pipelining: how much master encode hides in the wait window
+    pipe = DistributedMatmul("spacdc", n_workers=n,
+                             straggler=StragglerModel(n, s, seed=0),
+                             pipeline_encode=True,
+                             wait_policy=FixedQuantile(),
+                             **cfg["schemes"]["spacdc"])
+    stats = [pipe.matmul(a, b, round_idx=r)[1] for r in range(4)]
+    pipelined = [st.pipelined_s for st in stats[1:]]   # round 0 has no window
+    summary["encode_pipelining"] = {
+        "mean_encode_s": round(float(np.mean([st.encode_s
+                                              for st in stats[1:]])), 6),
+        "mean_pipelined_s": round(float(np.mean(pipelined)), 6),
+    }
+    return {
+        "benchmark": "anytime_decoding",
+        "err_target": ERR_TARGET,
+        "config": {k: v for k, v in cfg.items() if k != "schemes"},
+        "schemes": cfg["schemes"],
+        "backend": jax.default_backend(),
+        "platform": platform.machine(),
+        "summary": summary,
+        "curves": curves,
+    }
+
+
+def check(report: dict, smoke: bool) -> None:
+    s = report["summary"]
+    spa = s["spacdc"][f"first_err_le_{ERR_TARGET:g}_s"]
+    spa_any = s["spacdc"]["first_decodable_s"]
+    for thr in ("mds", "lcc"):
+        t_thr = s[thr]["first_decodable_s"]
+        assert t_thr is not None, f"{thr} never became decodable"
+        # smoke gate: a finite-error SPACDC decode exists strictly before
+        # the threshold scheme can decode at all
+        assert spa_any is not None and spa_any < t_thr, \
+            f"spacdc first decode {spa_any} !< {thr} threshold {t_thr}"
+        if not smoke:
+            assert spa is not None and spa < t_thr, \
+                f"spacdc err<={ERR_TARGET} at {spa} !< {thr} first " \
+                f"decodable {t_thr}"
+
+
+def run(rows, smoke: bool = False):
+    """benchmarks.run entry point: (name, us, derived) CSV rows."""
+    report = measure(smoke=smoke)
+    check(report, smoke)
+    for name, info in report["summary"].items():
+        if name == "encode_pipelining":
+            continue
+        t_any = info["first_decodable_s"]
+        t_hit = info.get(f"first_err_le_{ERR_TARGET:g}_s")
+        rows.append((f"anytime_first_decode_{name}",
+                     (t_any or 0.0) * 1e6,
+                     f"prefix={info['first_decodable_prefix']}"))
+        rows.append((f"anytime_err{ERR_TARGET:g}_{name}",
+                     (t_hit or float('nan')) * 1e6,
+                     f"prefix={info.get(f'first_err_le_{ERR_TARGET:g}_prefix')}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, qualitative gate only (CI)")
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent.parent
+                                         / "BENCH_anytime.json"))
+    args = ap.parse_args()
+    report = measure(smoke=args.smoke)
+    Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    for name, info in report["summary"].items():
+        print(name, json.dumps(info))
+    check(report, args.smoke)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table2,fig3,fig4,fig5,fig6,fig7,"
-                         "roundtrip,crypto,roofline")
+                         "roundtrip,crypto,anytime,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -21,8 +21,9 @@ def main() -> None:
     def want(*keys):
         return only is None or any(k in only for k in keys)
 
-    from benchmarks import (bench_accuracy, bench_complexity, bench_crypto,
-                            bench_roundtrip, bench_training_time, roofline)
+    from benchmarks import (bench_accuracy, bench_anytime, bench_complexity,
+                            bench_crypto, bench_roundtrip,
+                            bench_training_time, roofline)
     if want("table2", "fig5", "fig6", "fig7"):
         bench_complexity.run(rows)
     if want("fig3"):
@@ -33,6 +34,8 @@ def main() -> None:
         bench_roundtrip.run(rows)
     if want("crypto"):
         bench_crypto.run(rows)
+    if want("anytime"):
+        bench_anytime.run(rows)
     if want("roofline"):
         roofline.run(rows)
 

@@ -9,7 +9,7 @@ Table-II baselines + the berrut_grad gradient code), so
 from .berrut import (berrut_weight_matrix, berrut_weights, chebyshev_points,
                      combine, default_alpha_beta, interpolate)
 from . import registry
-from .registry import CodingScheme
+from .registry import AnytimeDecode, CodingScheme
 from .spacdc import SPACDCCode, SPACDCConfig, pad_to_blocks
 from .coded_training import (BerrutGradientCode, coded_backprop_decode,
                              coded_backprop_encode, coded_psum)
@@ -18,7 +18,7 @@ from . import baselines, privacy
 __all__ = [
     "berrut_weight_matrix", "berrut_weights", "chebyshev_points", "combine",
     "default_alpha_beta", "interpolate",
-    "registry", "CodingScheme",
+    "registry", "AnytimeDecode", "CodingScheme",
     "SPACDCCode", "SPACDCConfig", "pad_to_blocks",
     "BerrutGradientCode", "coded_backprop_decode", "coded_backprop_encode",
     "coded_psum", "baselines", "privacy",

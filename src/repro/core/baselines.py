@@ -352,6 +352,12 @@ class BACCScheme(_SchemeBase):
     def fused_blocks(self, x, key=None):
         return self._code.fused_blocks(x, key)
 
+    def prefix_decode_weights(self, arrival_order):
+        return self._code.prefix_decode_weights(arrival_order)
+
+    def anytime_proxy_weights(self, arrival_order):
+        return self._code.anytime_proxy_weights(arrival_order)
+
 
 # --------------------------------------------------------------------------
 # registry entries: every factory takes the subset of the shared runtime

@@ -33,14 +33,29 @@ False = force the jnp path).
 
 from __future__ import annotations
 
+import dataclasses
 import inspect
 from typing import Any, Callable, Dict, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 import jax.numpy as jnp
 
-__all__ = ["CodingScheme", "SchemeDefaults", "register", "build", "get",
-           "names"]
+__all__ = ["AnytimeDecode", "CodingScheme", "SchemeDefaults", "register",
+           "build", "get", "names"]
+
+
+@dataclasses.dataclass
+class AnytimeDecode:
+    """Result of decoding an in-flight round at an arbitrary responder
+    prefix (the paper's no-minimum-wait claim, §V).
+
+    ``ready`` is False when the scheme cannot decode this prefix at all
+    (threshold schemes below their recovery threshold); ``decoded`` is the
+    scheme's usual decoded-block stack otherwise.
+    """
+    ready: bool
+    decoded: Optional[Any]
+    n_responders: int
 
 
 @runtime_checkable
@@ -73,6 +88,10 @@ class CodingScheme(Protocol):
         """Traceable encode → batched worker matmul → masked decode for the
         job A @ B, one jittable dispatch.  Linear data-coded schemes only
         (``supports_fused``); routed through ``kernels.ops.coded_matmul``."""
+
+    def anytime_decode(self, results_so_far, mask) -> "AnytimeDecode":
+        """Decode an arbitrary in-flight responder prefix, or report
+        ``ready=False`` when the prefix is below the scheme's minimum."""
 
     def wait_policy(self, n_stragglers: int = 0) -> int:
         """How many responders a master should wait for per round."""
@@ -186,6 +205,72 @@ class SchemeDefaults:
         blocks = self.fused_blocks(a, key)
         results = coded_matmul(enc, blocks, b, force_kernel=self.use_kernel)
         return self._combine(self.decode_matrix_masked(mask), results)
+
+    # -- anytime (progressive) decoding ----------------------------------
+    @property
+    def min_responders(self) -> int:
+        """Smallest responder prefix the scheme can decode at all."""
+        return 1 if self.rateless else int(self.recovery_threshold)
+
+    def anytime_decode(self, results_so_far, mask) -> AnytimeDecode:
+        """Decode an in-flight round at an arbitrary responder prefix.
+
+        ``results_so_far``: (N, ...) worker results with non-responder
+        slots holding anything; ``mask``: (N,) responder mask.  Rateless
+        schemes (SPACDC / BACC) decode any non-empty prefix; threshold
+        schemes report ``ready=False`` below their recovery threshold —
+        the qualitative gap the paper's Fig. 3 story rests on.
+        """
+        n = int(np.asarray(mask, dtype=bool).sum())
+        if n < self.min_responders:
+            return AnytimeDecode(ready=False, decoded=None, n_responders=n)
+        return AnytimeDecode(ready=True,
+                             decoded=self.decode_masked(results_so_far, mask),
+                             n_responders=n)
+
+    def prefix_decode_weights(self, arrival_order):
+        """Stacked decode weights for EVERY prefix of a concrete arrival
+        order: ``(E, K, N)`` float32 + ``(E,)`` ready flags, E = len(order).
+
+        ``weights[p-1] @ results`` decodes the first-p-arrivals prefix, so
+        a whole round's anytime curve is ONE batched contraction
+        (``kernels.ops.prefix_decode``), not E dispatches.  Built host-side
+        in float64 (the arrival order is host data — no need for the
+        traceable masked construction, and the f64 pinv keeps large-K
+        Vandermonde/Lagrange prefixes exact where the in-trace f32 decode
+        would drown in conditioning noise).  Prefixes below
+        ``min_responders`` get zero weights and ``ready=False``.
+        """
+        enc = self.fused_encoder_matrix()
+        if enc is None:
+            raise NotImplementedError(
+                f"{self.name}: no linear encoder — no prefix decode stack")
+        enc = np.asarray(enc, np.float64)
+        n = enc.shape[0]
+        order = np.asarray(arrival_order, dtype=np.int64)
+        k_out = self.fused_out_blocks
+        weights = np.zeros((order.size, k_out, n), np.float32)
+        ready = np.zeros(order.size, bool)
+        masked = np.zeros_like(enc)
+        for p in range(1, order.size + 1):
+            masked[order[p - 1]] = enc[order[p - 1]]
+            if p < self.min_responders:
+                continue
+            weights[p - 1] = np.linalg.pinv(masked)[:k_out].astype(np.float32)
+            ready[p - 1] = True
+        return weights, ready
+
+    def anytime_proxy_weights(self, arrival_order):
+        """Optional second decoder stack for the embedded-pair error proxy
+        (``(E, K, N)`` weights + ``(E,)`` valid flags), or None.
+
+        Rateless schemes return a higher-order decode here (SPACDC:
+        Floater–Hormann) whose disagreement with the primary decode
+        estimates the primary's error in-trace.  Threshold schemes decode
+        exactly once past their threshold, so they have no embedded pair:
+        the scheduler prices their prefixes 0 (ready) / inf (not).
+        """
+        return None
 
     # -- runtime contract ------------------------------------------------
     def wait_policy(self, n_stragglers: int = 0) -> int:

@@ -183,6 +183,45 @@ class SPACDCCode(registry.SchemeDefaults):
         """
         return self._combine(self.decode_matrix_masked(mask), results)
 
+    # ------------------------------------------------------ anytime decode
+    def prefix_decode_weights(self, arrival_order):
+        """(E, K, N) Berrut decode weights for every prefix of a concrete
+        arrival order + all-True ready flags (rateless: every non-empty
+        prefix decodes).  Each prefix reuses the lru-cached
+        :meth:`decode_matrix` of its sorted responder tuple, scattered into
+        the worker axis, so a round's whole anytime curve is one batched
+        contraction downstream (``kernels.ops.prefix_decode``)."""
+        order = np.asarray(arrival_order, dtype=np.int64)
+        k = self.cfg.k_blocks
+        weights = np.zeros((order.size, k, self.n_workers), np.float32)
+        for p in range(1, order.size + 1):
+            resp = np.sort(order[:p])
+            weights[p - 1, :, resp] = np.asarray(
+                self.decode_matrix(resp)).T[: len(resp)]
+        return weights, np.ones(order.size, bool)
+
+    def anytime_proxy_weights(self, arrival_order, fh_degree: int = 2):
+        """The embedded-pair proxy decoder: Floater–Hormann degree-d
+        weights over the same prefixes.  FH converges an order faster than
+        Berrut's d=0 interpolant, so ``|decode_d0 - decode_fh|`` estimates
+        the d=0 decode's error — in-trace, no ground truth.  Prefixes with
+        ≤ d+1 nodes (where FH degenerates to Berrut) are flagged invalid.
+        """
+        order = np.asarray(arrival_order, dtype=np.int64)
+        k = self.cfg.k_blocks
+        nodes_all = np.asarray(self.alphas, np.float64)
+        betas = np.asarray(self.betas, np.float64)[:k]
+        weights = np.zeros((order.size, k, self.n_workers), np.float32)
+        valid = np.zeros(order.size, bool)
+        for p in range(fh_degree + 2, order.size + 1):
+            resp = np.sort(order[:p])
+            nodes = nodes_all[resp]
+            bw = berrut.fh_weights(nodes, fh_degree)
+            mat = np.asarray(berrut.bary_weight_matrix(betas, nodes, bw))
+            weights[p - 1, :, resp] = mat.T[: len(resp)]
+            valid[p - 1] = True
+        return weights, valid
+
     # ------------------------------------------------------------ end-to-end
     def run(self, x: jnp.ndarray, f: Callable[[jnp.ndarray], jnp.ndarray],
             responders: Optional[Sequence[int]] = None,

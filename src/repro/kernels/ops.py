@@ -46,6 +46,25 @@ def berrut_combine(weights, blocks, *, force_kernel: bool | None = None):
     return out.reshape((weights.shape[0],) + blocks.shape[1:])
 
 
+def prefix_decode(weights, results, *, force_kernel: bool | None = None):
+    """Batched prefix-masked decode: every responder prefix of a round in
+    ONE contraction.
+
+    ``weights`` (E, K, N) — stacked decode matrices, one per responder
+    prefix (``CodingScheme.prefix_decode_weights``); ``results`` (N, ...)
+    — the workers' outputs.  Returns (E, K, ...): row e is what decoding
+    after the (e+1)-th arrival would have yielded.  The prefix axis folds
+    into the output-row axis of :func:`berrut_combine`, so evaluating E
+    error points of an anytime curve costs one dispatch, not E — the same
+    kernel the per-round decode already runs.
+    """
+    weights = jnp.asarray(weights, jnp.float32)
+    e, k, n = weights.shape
+    out = berrut_combine(weights.reshape(e * k, n), results,
+                         force_kernel=force_kernel)
+    return out.reshape((e, k) + out.shape[1:])
+
+
 def coded_matmul(weights, blocks, rhs, *, force_kernel: bool | None = None):
     """Fused encode + batched worker matmul with kernel dispatch.
 

@@ -213,6 +213,29 @@ def build_train_step(model, optimizer: Optimizer, *, accum: int = 1,
     return train_step
 
 
+def build_mask_fn(gcode: BerrutGradientCode | dict, straggler,
+                  wait_policy=None):
+    """Per-round responder masks for the coded train step, driven by the
+    SAME wait-policy strategy objects the master/worker runtime uses
+    (``repro.runtime.wait_policy``): ``mask_fn(round_idx) -> (n_shards,)``.
+
+    ``straggler`` is a ``repro.runtime.StragglerModel`` over the dp
+    shards.  FixedQuantile (default) reproduces the everyone-but-the-
+    stragglers mask; ``Deadline`` / ``FirstK`` shrink it; ``ErrorTarget``
+    uses the scheduler's decode-weight-stability proxy (gradients don't
+    exist until the step runs, but the decoded gradient is
+    ``weights @ encoded`` — once the Berrut weights stop moving between
+    prefixes, waiting longer can no longer move the decode).  The mask is
+    a *runtime* value of the jitted train step, so policies switch with
+    zero recompiles.
+    """
+    from ..runtime.scheduler import policy_mask_fn
+    if isinstance(gcode, dict):
+        spec = dict(gcode)
+        gcode = registry.build(spec.pop("name", "berrut_grad"), **spec)
+    return policy_mask_fn(gcode._code, straggler, policy=wait_policy)
+
+
 def build_serve_step(model):
     """serve_step(params, cache, tokens, pos[, mrope]) -> (next_tokens, cache)."""
 

@@ -1,4 +1,14 @@
 from .straggler import StragglerModel
+from .wait_policy import (ArrivalEvent, Deadline, ErrorTarget, FirstK,
+                          FixedQuantile, WaitPolicy, resolve_policy)
+from .scheduler import (AnytimePoint, EncodePipeline, RoundPlan,
+                        plan_round, policy_mask_fn, virtual_events)
 from .master_worker import CodedMaster, WorkerPool
 
-__all__ = ["StragglerModel", "CodedMaster", "WorkerPool"]
+__all__ = [
+    "StragglerModel", "CodedMaster", "WorkerPool",
+    "ArrivalEvent", "Deadline", "ErrorTarget", "FirstK", "FixedQuantile",
+    "WaitPolicy", "resolve_policy",
+    "AnytimePoint", "EncodePipeline", "RoundPlan", "plan_round",
+    "policy_mask_fn", "virtual_events",
+]

@@ -22,7 +22,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from typing import Callable, Optional
 
 import numpy as np
@@ -30,7 +30,10 @@ import jax
 import jax.numpy as jnp
 
 from ..core import registry
+from .scheduler import EncodePipeline, assemble_curve, plan_round, virtual_events
 from .straggler import StragglerModel
+from .wait_policy import (ArrivalEvent, RoundContext, WaitPolicy,
+                          resolve_policy, scheme_min_responders)
 
 
 @dataclasses.dataclass
@@ -43,20 +46,69 @@ class RoundStats:
     # modeled MEA-ECC estimate kept as a cross-check when ``crypto_s`` is a
     # real measurement (encrypt="real"); 0 otherwise
     crypto_modeled_s: float = 0.0
+    # --- event-driven round timeline (scheduler) -------------------------
+    policy: str = "fixed_quantile"   # wait policy that picked the prefix
+    arrivals: tuple = ()             # ((virtual_t_s, worker), ...) sorted
+    decode_at_s: float = 0.0         # virtual time the decode fired
+    pipelined_s: float = 0.0         # encode wall time hidden in the
+                                     # previous round's wait window
 
     @property
     def total_s(self):
-        return self.encode_s + self.compute_wait_s + self.decode_s + self.crypto_s
+        return (self.encode_s + self.compute_wait_s + self.decode_s +
+                self.crypto_s - self.pipelined_s)
 
 
 class WorkerPool:
-    """N simulated workers.  run_round returns (results, elapsed virtual s)."""
+    """N simulated workers behind an event-driven round API.
+
+    Real-thread mode keeps ONE long-lived executor for the pool's lifetime
+    (the seed built and tore one down per round) and consumes completions
+    as timestamped events, stopping as soon as the wait policy is
+    satisfied — unconsumed stragglers keep running in the background and
+    their results are dropped.  Virtual-clock mode computes the arrival
+    timeline analytically and only ever runs the work of the responders a
+    policy actually selects.
+    """
 
     def __init__(self, n_workers: int, straggler: StragglerModel,
                  real_threads: bool = False):
         self.n = n_workers
         self.straggler = straggler
         self.real_threads = real_threads
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self._stray_errors: list = []
+
+    @property
+    def executor(self) -> ThreadPoolExecutor:
+        """The pool's single long-lived executor (lazily created).
+
+        Sized 2N, not N: an early-stopped round leaves up to N-1
+        stragglers sleeping on their threads, and the next round's N
+        submissions must all start immediately or their arrival
+        timestamps would include queueing delay the straggler model never
+        injected."""
+        if self._executor is None:
+            self._executor = ThreadPoolExecutor(max_workers=2 * self.n)
+        return self._executor
+
+    def close(self):
+        """Shut the executor down (stragglers of the last round included);
+        surfaces any failure an unconsumed straggler hit after its round."""
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+        if self._stray_errors:
+            err = self._stray_errors[0]
+            self._stray_errors.clear()
+            raise RuntimeError("a straggler worker failed after its round "
+                               "decoded") from err
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
 
     def run_round(self, shards, f: Callable, round_idx: int, wait_for: int,
                   t_compute: Optional[float] = None):
@@ -69,36 +121,99 @@ class WorkerPool:
         so cross-scheme comparisons price workers identically).  Ignored
         in real-thread mode, required otherwise.
         """
-        delays = self.straggler.delays(round_idx)
         if self.real_threads:
-            t0 = time.perf_counter()
-            done = {}
-
-            def work(i):
-                time.sleep(delays[i])
-                done[i] = f(shards[i])
-                return i
-
-            with ThreadPoolExecutor(max_workers=self.n) as ex:
-                futs = [ex.submit(work, i) for i in range(self.n)]
-                got = []
-                for fu in futs:
-                    got.append(fu.result())
-            order = np.argsort(delays)
-            resp = np.sort(order[:wait_for])
-            return resp, [done[i] for i in resp], time.perf_counter() - t0
+            events, done, elapsed = self.run_round_real(
+                shards, f, round_idx, stop_after=wait_for)
+            resp = np.sort(np.asarray([e.worker for e in events[:wait_for]],
+                                      dtype=np.int64))
+            return resp, [done[i] for i in resp], elapsed
 
         # virtual clock: per-worker latency = representative compute time
-        # + injected straggler delay
+        # + injected straggler delay; only the selected responders' work
+        # actually runs (stragglers the policy never picks cost nothing)
         if t_compute is None:
             raise ValueError("virtual-clock run_round needs t_compute "
                              "(see DistributedMatmul._worker_compute_time)")
-        results = [f(s) for s in shards]
-        lat = delays + t_compute
-        order = np.argsort(lat)
-        resp = np.sort(order[:wait_for])
-        wait_s = float(lat[order[wait_for - 1]])
-        return resp, [results[i] for i in resp], wait_s
+        events = virtual_events(self.straggler.delays(round_idx), t_compute)
+        resp = np.sort(np.asarray([e.worker for e in events[:wait_for]],
+                                  dtype=np.int64))
+        return resp, [f(shards[i]) for i in resp], float(events[wait_for - 1].t)
+
+    def run_round_real(self, shards, f: Callable, round_idx: int,
+                       policy: Optional[WaitPolicy] = None, scheme=None,
+                       n_stragglers: int = 0,
+                       stop_after: Optional[int] = None):
+        """Event-driven real-thread round.
+
+        Submits all N tasks to the persistent executor, consumes
+        completions as :class:`ArrivalEvent`s (timestamped on the wall
+        clock) and stops as soon as ``policy.satisfied`` — or after
+        ``stop_after`` arrivals when given.  Returns
+        (events_consumed, {worker: result}, elapsed_s); stragglers the
+        policy never waited for keep running and are discarded.  Policies
+        that need per-prefix error proxies (ErrorTarget) are a
+        virtual-clock feature — real mode exists to validate the clock.
+        """
+        if policy is not None and policy.needs_proxy:
+            raise NotImplementedError(
+                f"{policy.name}: proxy-driven policies run on the virtual "
+                "clock (real-thread mode validates the clock)")
+        if self._stray_errors:
+            # a worker the previous round never consumed died — surface it
+            # instead of silently running on a broken pool
+            err = self._stray_errors[0]
+            self._stray_errors.clear()
+            raise RuntimeError("a straggler worker of an earlier round "
+                               "failed after its round decoded") from err
+        delays = self.straggler.delays(round_idx)
+        # Deadline-style policies publish their budget so the event loop
+        # can wake AT the deadline rather than at the next (possibly far
+        # later) straggler completion
+        budget = getattr(policy, "t_budget", None)
+        t0 = time.perf_counter()
+
+        def work(i):
+            time.sleep(delays[i])
+            return i, f(shards[i])
+
+        def stray(fu):
+            if not fu.cancelled() and fu.exception() is not None:
+                self._stray_errors.append(fu.exception())
+
+        pending = {self.executor.submit(work, i) for i in range(self.n)}
+        events, done = [], {}
+        min_ready = scheme_min_responders(scheme) if scheme is not None else 1
+        try:
+            while pending:
+                timeout = None
+                if budget is not None and len(events) >= min_ready:
+                    timeout = max(budget - (time.perf_counter() - t0), 0.0)
+                finished, pending = wait(pending, timeout=timeout,
+                                         return_when=FIRST_COMPLETED)
+                for fu in finished:
+                    i, res = fu.result()
+                    done[i] = res
+                    events.append(ArrivalEvent(t=time.perf_counter() - t0,
+                                               worker=int(i)))
+                if stop_after is not None:
+                    if len(events) >= max(int(stop_after), 1):
+                        break
+                    continue
+                if budget is not None and not finished:
+                    break            # the deadline fired, prefix is decodable
+                if policy is not None and len(events) >= min_ready:
+                    ctx = RoundContext(scheme=scheme,
+                                       n_stragglers=n_stragglers,
+                                       events=events, min_ready=min_ready)
+                    if policy.satisfied(ctx):
+                        break
+        finally:
+            for fu in pending:
+                # queued-but-unstarted work is dropped; a running straggler
+                # that fails later is recorded and raised next round
+                if not fu.cancel():
+                    fu.add_done_callback(stray)
+        return events, done, time.perf_counter() - t0
 
 
 class DistributedMatmul:
@@ -122,7 +237,9 @@ class DistributedMatmul:
                  t_colluding: int = 0, straggler: Optional[StragglerModel] = None,
                  n_stragglers: int = 0, encrypt: bool | str = False,
                  seed: int = 0, fused: Optional[bool] = None,
-                 cipher_mode: str = "stream", **scheme_kwargs):
+                 cipher_mode: str = "stream",
+                 wait_policy: Optional[WaitPolicy | str] = None,
+                 pipeline_encode: bool = False, **scheme_kwargs):
         self.name = scheme_name
         self.n = n_workers
         self.k = k_blocks
@@ -146,7 +263,20 @@ class DistributedMatmul:
                                      k_blocks=k_blocks,
                                      t_colluding=t_colluding,
                                      seed=seed, **scheme_kwargs)
+        # the decode point is a pluggable WaitPolicy; the default
+        # FixedQuantile reproduces the seed's fixed-count wait (and its
+        # responder selection) bit-identically through the event scheduler
+        self.policy = resolve_policy(wait_policy)
         self.wait_for = self.scheme.wait_policy(self.straggler.n_stragglers)
+        # encode-of-next-round pipelining: the master hides encode wall
+        # time inside the previous round's wait window (virtual-clock
+        # accounting via RoundStats.pipelined_s); opt-in so the seed's
+        # per-round accounting stays unchanged by default
+        self._pipeline = EncodePipeline() if pipeline_encode else None
+        if self.policy.needs_proxy and mode == "real":
+            raise NotImplementedError(
+                "proxy-driven wait policies (ErrorTarget) are not wired "
+                "through the encrypted-transport round yet")
         supports = bool(getattr(self.scheme, "supports_fused", False))
         if fused and not supports:
             raise ValueError(f"{scheme_name!r} has no fused round path "
@@ -161,6 +291,7 @@ class DistributedMatmul:
         self._fused_cache = collections.OrderedDict()   # shapes -> jitted fn
         self._fused_cache_max = 8
         self._worker_t = {}                 # shapes -> per-worker seconds
+        self._encode_t = {}                 # shapes -> encode-only seconds
         self._crypto = None
         self._crypto_per_elem = {}          # (dtype, mode) -> seconds/element
         if mode is not None:
@@ -307,36 +438,73 @@ class DistributedMatmul:
             self._worker_t[key] = (time.perf_counter() - t0) / self.n
         return self._worker_t[key]
 
-    def _virtual_round_plan(self, a_shape, b_shape, round_idx: int):
-        """Virtual clock: who responds this round and how long the master
-        waits.  Shared by the fused and real-encryption paths so their
-        responder selection can never desynchronize (the real round is
-        asserted bit-identical to the unencrypted one)."""
+    def _round_compute_time(self, a_shape, b_shape):
+        """(block rows, per-worker virtual compute seconds) for this job."""
         split = getattr(self.scheme, "k_blocks", self.n)
         blk = -(-a_shape[0] // split)
-        t_comp = self._worker_compute_time((blk, a_shape[1]),
-                                           (a_shape[1], b_shape[-1]))
-        lat = self.straggler.delays(round_idx) + t_comp
-        order = np.argsort(lat)
-        resp = np.sort(order[: self.wait_for])
-        wait_s = float(lat[order[self.wait_for - 1]])
-        mask = np.zeros(self.n, np.float32)
-        mask[resp] = 1.0
-        return blk, resp, wait_s, mask
+        return blk, self._worker_compute_time((blk, a_shape[1]),
+                                              (a_shape[1], b_shape[-1]))
+
+    def _virtual_round_plan(self, a_shape, b_shape, round_idx: int,
+                            proxy_fn=None):
+        """Virtual clock: the round's arrival timeline and the prefix the
+        wait policy consumes.  Shared by the fused and real-encryption
+        paths so their responder selection can never desynchronize (the
+        real round is asserted bit-identical to the unencrypted one)."""
+        blk, t_comp = self._round_compute_time(a_shape, b_shape)
+        plan = plan_round(self.scheme, self.policy,
+                          self.straggler.delays(round_idx), t_comp,
+                          self.straggler.n_stragglers, proxy_fn=proxy_fn)
+        return blk, plan
+
+    def _encode_only_time(self, a_shape) -> float:
+        """Measured wall seconds of ONE jitted encode at this shape
+        (cached).  Caps the pipelining credit on paths whose master timer
+        lumps encode with decode/reassembly: only the encode can genuinely
+        overlap the previous round's wait window — this round's decode
+        needs this round's results."""
+        key = tuple(a_shape)
+        if key not in self._encode_t:
+            fn = jax.jit(self.scheme.encode)
+            z = jnp.zeros(a_shape, jnp.float32)
+            jax.block_until_ready(fn(z))               # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(z))
+            self._encode_t[key] = time.perf_counter() - t0
+        return self._encode_t[key]
+
+    def _account_encode(self, encode_s: float, wait_s: float) -> float:
+        """Encode-pipelining credit: how much of this round's encode hid
+        in the previous round's wait window (and bank this round's)."""
+        if self._pipeline is None:
+            return 0.0
+        _, hidden = self._pipeline.charge(encode_s)
+        self._pipeline.credit(wait_s)
+        return hidden
+
+    def _stats(self, events, decode_at_s: float, **kw) -> RoundStats:
+        kw.setdefault("policy", self.policy.name)
+        kw.setdefault("arrivals", tuple((e.t, e.worker) for e in events))
+        kw.setdefault("decode_at_s", decode_at_s)
+        return RoundStats(**kw)
 
     def _matmul_fused(self, a: jnp.ndarray, b: jnp.ndarray, round_idx: int):
         fn = self._fused_fn(a.shape, b.shape, str(a.dtype))
-        blk, resp, wait_s, mask = self._virtual_round_plan(a.shape, b.shape,
-                                                           round_idx)
+        blk, plan = self._virtual_round_plan(a.shape, b.shape, round_idx)
         # master math (encode + decode + reassembly): one dispatch
         t0 = time.perf_counter()
-        out = fn(a, b, jnp.asarray(mask))
+        out = fn(a, b, jnp.asarray(plan.mask))
         jax.block_until_ready(out)
         t_master = time.perf_counter() - t0
         crypto_s = self._crypto_overhead_elems(self.n * blk * a.shape[1],
                                                np.float32)
-        stats = RoundStats(encode_s=t_master, compute_wait_s=wait_s,
-                           decode_s=0.0, crypto_s=crypto_s, n_waited=len(resp))
+        hideable = (0.0 if self._pipeline is None else
+                    min(t_master, self._encode_only_time(a.shape)))
+        stats = self._stats(plan.events, plan.wait_s, encode_s=t_master,
+                            compute_wait_s=plan.wait_s, decode_s=0.0,
+                            crypto_s=crypto_s, n_waited=len(plan.responders),
+                            pipelined_s=self._account_encode(hideable,
+                                                             plan.wait_s))
         return np.asarray(out), stats
 
     def _matmul_real(self, a: jnp.ndarray, b: jnp.ndarray, round_idx: int):
@@ -349,8 +517,8 @@ class DistributedMatmul:
         bit-identical to the unencrypted round."""
         enc_fn, worker_fn, decode_fn = self._staged_fns(a.shape, b.shape,
                                                         str(a.dtype))
-        blk, resp, wait_s, mask = self._virtual_round_plan(a.shape, b.shape,
-                                                           round_idx)
+        blk, plan = self._virtual_round_plan(a.shape, b.shape, round_idx)
+        resp, wait_s, mask = plan.responders, plan.wait_s, plan.mask
         t0 = time.perf_counter()
         enc = np.asarray(enc_fn(a))                      # (N, blk, d)
         t_enc = time.perf_counter() - t0
@@ -378,10 +546,178 @@ class DistributedMatmul:
         t_dec = time.perf_counter() - t0
         modeled = self._crypto_overhead_elems(self.n * blk * a.shape[1],
                                               np.float32)
-        stats = RoundStats(encode_s=t_enc, compute_wait_s=wait_s,
-                           decode_s=t_dec, crypto_s=crypto_s,
-                           n_waited=len(resp), crypto_modeled_s=modeled)
+        hideable = (0.0 if self._pipeline is None else
+                    min(t_enc, self._encode_only_time(a.shape)))
+        stats = self._stats(plan.events, wait_s, encode_s=t_enc,
+                            compute_wait_s=wait_s, decode_s=t_dec,
+                            crypto_s=crypto_s, n_waited=len(resp),
+                            crypto_modeled_s=modeled,
+                            pipelined_s=self._account_encode(hideable,
+                                                             wait_s))
         return np.asarray(out), stats
+
+    # ---------------------------------------------------- anytime pipeline
+    def _anytime_results_fn(self, a_shape, b_shape, dtype):
+        """Jitted stage 1 of the anytime round: encode + ALL N worker
+        matmuls in one ``kernels.ops.coded_matmul`` dispatch (no decode —
+        the decode point isn't known yet)."""
+        key = ("any_results", a_shape, b_shape, dtype)
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            scheme = self.scheme
+            from ..kernels.ops import coded_matmul
+            enc = jnp.asarray(scheme.fused_encoder_matrix(), jnp.float32)
+
+            def _results(a, b):
+                self.trace_count += 1      # runs at trace time only
+                return coded_matmul(enc, scheme.fused_blocks(a), b,
+                                    force_kernel=scheme.use_kernel)
+
+            fn = jax.jit(_results)
+            self._fused_cache[key] = fn
+            if len(self._fused_cache) > self._fused_cache_max:
+                self._fused_cache.popitem(last=False)
+        else:
+            self._fused_cache.move_to_end(key)
+        return fn
+
+    def _anytime_curve_fn(self, a_shape, b_shape, dtype, with_ref: bool):
+        """Jitted stage 2: EVERY responder prefix decoded in one batched
+        ``kernels.ops.prefix_decode`` contraction, plus the embedded-pair
+        error proxy (and, for curve reporting, true relative errors
+        against an in-trace A@B reference).  The per-round weight stacks
+        are runtime arguments — straggler churn never recompiles."""
+        key = ("any_curve", with_ref, a_shape, b_shape, dtype)
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            scheme = self.scheme
+            m, n_out = a_shape[0], b_shape[-1]
+
+            def _curve(results, w_lo, w_hi, valid, a, b):
+                self.trace_count += 1      # runs at trace time only
+                from ..kernels.ops import prefix_decode
+                e = w_lo.shape[0]
+                dec = prefix_decode(jnp.concatenate([w_lo, w_hi], axis=0),
+                                    results, force_kernel=scheme.use_kernel)
+                recon = jax.vmap(
+                    lambda d: scheme.reconstruct_matmul(d, m, n_out))
+                prod = recon(dec[:e])                       # (E, m, n_out)
+                prod_hi = recon(dec[e:])
+                diff = jnp.linalg.norm(
+                    (prod - prod_hi).reshape(e, -1), axis=-1)
+                den = jnp.linalg.norm(prod_hi.reshape(e, -1), axis=-1)
+                prox = jnp.where(valid > 0, diff / jnp.maximum(den, 1e-12),
+                                 jnp.inf)
+                if not with_ref:
+                    return prod, prox
+                ref = jnp.dot(a, b, precision=jax.lax.Precision.HIGHEST)
+                rel = (jnp.linalg.norm((prod - ref[None]).reshape(e, -1),
+                                       axis=-1) /
+                       jnp.maximum(jnp.linalg.norm(ref), 1e-12))
+                return prod, prox, rel
+
+            fn = jax.jit(_curve)
+            self._fused_cache[key] = fn
+            if len(self._fused_cache) > self._fused_cache_max:
+                self._fused_cache.popitem(last=False)
+        else:
+            self._fused_cache.move_to_end(key)
+        return fn
+
+    def _prefix_weight_stacks(self, events):
+        """Host-side per-prefix decode weights for one round's arrival
+        order: (w_lo, ready, w_hi, valid).  Rateless schemes supply a
+        genuine embedded pair (Berrut + Floater–Hormann); threshold
+        schemes have no second decoder — w_hi repeats w_lo with
+        ``valid=0`` so the proxy reports inf below/at threshold (their
+        per-prefix error is 0-or-undecodable anyway)."""
+        order = [e.worker for e in events]
+        w_lo, ready = self.scheme.prefix_decode_weights(order)
+        pw = self.scheme.anytime_proxy_weights(order) \
+            if hasattr(self.scheme, "anytime_proxy_weights") else None
+        if pw is None:
+            w_hi, valid = w_lo, np.zeros(len(order), np.float32)
+        else:
+            w_hi, valid = pw[0], np.asarray(pw[1], np.float32)
+        return (jnp.asarray(w_lo), np.asarray(ready, bool),
+                jnp.asarray(w_hi), jnp.asarray(valid))
+
+    def _anytime_prefix_eval(self, a, b, round_idx: int, with_ref: bool):
+        """The shared 2-dispatch prefix pipeline behind ErrorTarget rounds
+        and ``anytime_curve``: stage 1 (encode + all worker matmuls),
+        stage 2 (every prefix decoded + embedded-pair proxies, optionally
+        true errors against an in-trace reference).
+
+        Returns (events, ready, proxies, products, rel_errs-or-None).
+        """
+        _, t_comp = self._round_compute_time(a.shape, b.shape)
+        events = virtual_events(self.straggler.delays(round_idx), t_comp)
+        w_lo, ready, w_hi, valid = self._prefix_weight_stacks(events)
+        results = self._anytime_results_fn(a.shape, b.shape,
+                                           str(a.dtype))(a, b)
+        out = self._anytime_curve_fn(a.shape, b.shape, str(a.dtype),
+                                     with_ref=with_ref)(
+            results, w_lo, w_hi, valid, a, b)
+        prod, prox = out[0], out[1]
+        rel = out[2] if with_ref else None
+        prox = np.where(ready, np.asarray(prox, np.float64), np.inf)
+        if not np.asarray(valid).any():
+            # threshold scheme: no embedded pair — the decode is exact the
+            # moment it's possible
+            prox = np.where(ready, 0.0, np.inf)
+        return events, ready, prox, prod, rel
+
+    def _matmul_anytime(self, a: jnp.ndarray, b: jnp.ndarray, round_idx: int):
+        """The proxy-driven round (ErrorTarget): run all workers' math,
+        decode every prefix in one batched dispatch, stop at the earliest
+        prefix whose embedded error estimate meets the target.  Two jitted
+        dispatches per round, both LRU-cached per shape class."""
+        blk, _ = self._round_compute_time(a.shape, b.shape)
+        t0 = time.perf_counter()
+        events, ready, prox, prod, _ = self._anytime_prefix_eval(
+            a, b, round_idx, with_ref=False)
+        ctx = RoundContext(scheme=self.scheme,
+                           n_stragglers=self.straggler.n_stragglers,
+                           events=events,
+                           min_ready=scheme_min_responders(self.scheme),
+                           proxies=prox)
+        stop = int(self.policy.stop_index(ctx))
+        out = np.asarray(prod[stop - 1])
+        jax.block_until_ready(out)
+        t_master = time.perf_counter() - t0
+        wait_s = float(events[stop - 1].t)
+        crypto_s = self._crypto_overhead_elems(self.n * blk * a.shape[1],
+                                               np.float32)
+        hideable = (0.0 if self._pipeline is None else
+                    min(t_master, self._encode_only_time(a.shape)))
+        stats = self._stats(events, wait_s, encode_s=t_master,
+                            compute_wait_s=wait_s, decode_s=0.0,
+                            crypto_s=crypto_s, n_waited=stop,
+                            pipelined_s=self._account_encode(hideable,
+                                                             wait_s))
+        return out, stats
+
+    def anytime_curve(self, a: np.ndarray, b: np.ndarray, round_idx: int = 0):
+        """The full error-vs-latency curve of one virtual-clock round:
+        for every arrival prefix, the virtual time and the decode's true
+        relative error (inf where the scheme can't decode yet), plus the
+        in-trace embedded-pair proxy and the monotone ``best_err``
+        envelope.  Whole-curve cost: TWO jitted dispatches per shape class
+        (stage 1 worker results + stage 2 batched prefix decode), however
+        many error points the round has.
+
+        Returns a list of :class:`repro.runtime.scheduler.AnytimePoint`.
+        """
+        if not getattr(self.scheme, "supports_fused", False):
+            raise NotImplementedError(
+                f"{self.name!r}: anytime curves need a linear data-coded "
+                "scheme (prefix decode stacks)")
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        events, ready, prox, _, rel = self._anytime_prefix_eval(
+            a, b, round_idx, with_ref=True)
+        return assemble_curve(events, np.asarray(rel, np.float64), ready,
+                              prox)
 
     # --------------------------------------------------------------- rounds
     def matmul(self, a: np.ndarray, b: np.ndarray, round_idx: int = 0):
@@ -395,7 +731,15 @@ class DistributedMatmul:
         a = jnp.asarray(a, jnp.float32)
         b = jnp.asarray(b, jnp.float32)
         real = self.encrypt == "real"
+        if self.policy.needs_proxy and real:
+            # re-checked here (not just in __init__): the policy is a
+            # mutable attribute (CodedMaster(wait_policy=...) swaps it in)
+            raise NotImplementedError(
+                "proxy-driven wait policies (ErrorTarget) are not wired "
+                "through the encrypted-transport round yet")
         if self.use_fused:
+            if self.policy.needs_proxy:
+                return self._matmul_anytime(a, b, round_idx)
             if real:
                 return self._matmul_real(a, b, round_idx)
             return self._matmul_fused(a, b, round_idx)
@@ -429,9 +773,8 @@ class DistributedMatmul:
             crypto_s += time.perf_counter() - t0
 
         t_comp = self._worker_compute_time(lhs_shape, rhs_shape)
-        resp, results, wait_s = self.pool.run_round(shards, f, round_idx,
-                                                    self.wait_for,
-                                                    t_compute=t_comp)
+        resp, results, wait_s, plan = self._loop_round(shards, f, round_idx,
+                                                       t_comp)
         if real:
             # wire back: responders encrypt their products to the master
             t0 = time.perf_counter()
@@ -446,17 +789,94 @@ class DistributedMatmul:
         modeled = self._crypto_overhead(shards)
         stats = RoundStats(t_enc, wait_s, t_dec,
                            crypto_s if real else modeled, len(resp),
-                           crypto_modeled_s=modeled if real else 0.0)
+                           crypto_modeled_s=modeled if real else 0.0,
+                           policy=self.policy.name,
+                           arrivals=tuple((e.t, e.worker)
+                                          for e in plan) if plan else (),
+                           decode_at_s=wait_s,
+                           pipelined_s=self._account_encode(t_enc, wait_s))
         return out, stats
+
+    def _loop_round(self, shards, f, round_idx: int, t_comp: float):
+        """The unfused round's worker phase under the wait policy.
+
+        Returns (responders, results_in_responder_order, wait_s, events).
+        Virtual clock: the policy picks the prefix off the analytic
+        timeline and ONLY the selected responders' work runs — except for
+        proxy-driven policies, whose error proxy needs every arrival's
+        result as it lands.  Real threads: the event loop in
+        ``WorkerPool.run_round_real`` consumes completions until the
+        policy is satisfied.
+        """
+        pool, policy, scheme = self.pool, self.policy, self.scheme
+        if pool.real_threads:
+            events, done, _ = pool.run_round_real(
+                shards, f, round_idx, policy=policy, scheme=scheme,
+                n_stragglers=self.straggler.n_stragglers)
+            ctx = RoundContext(scheme=scheme,
+                               n_stragglers=self.straggler.n_stragglers,
+                               events=events,
+                               min_ready=scheme_min_responders(scheme))
+            stop = int(policy.stop_index(ctx))
+            resp = np.sort(np.asarray([e.worker for e in events[:stop]],
+                                      dtype=np.int64))
+            return resp, [done[i] for i in resp], float(events[stop - 1].t), \
+                events
+        delays = self.straggler.delays(round_idx)
+        proxy_fn = None
+        results_all = None
+        if policy.needs_proxy:
+            # the proxy needs worker outputs: run everyone (this is the
+            # oracle path; the fused anytime pipeline is the fast one)
+            results_all = [f(s) for s in shards]
+
+            def proxy_fn(events):
+                order = [e.worker for e in events]
+                w_lo, ready = scheme.prefix_decode_weights(order)
+                pw = scheme.anytime_proxy_weights(order) \
+                    if hasattr(scheme, "anytime_proxy_weights") else None
+                stack = np.stack(results_all).reshape(len(results_all), -1)
+                if pw is None:
+                    return np.where(ready, 0.0, np.inf)
+                w_hi, valid = pw
+                lo = np.einsum("ekn,nf->ekf", np.asarray(w_lo, np.float64),
+                               stack.astype(np.float64))
+                hi = np.einsum("ekn,nf->ekf", np.asarray(w_hi, np.float64),
+                               stack.astype(np.float64))
+                num = np.linalg.norm((lo - hi).reshape(len(order), -1),
+                                     axis=-1)
+                den = np.linalg.norm(hi.reshape(len(order), -1), axis=-1)
+                prox = np.where(valid, num / np.maximum(den, 1e-12), np.inf)
+                return np.where(ready, prox, np.inf)
+
+        plan = plan_round(scheme, policy, delays, t_comp,
+                          self.straggler.n_stragglers, proxy_fn=proxy_fn)
+        resp = plan.responders
+        if results_all is not None:
+            results = [results_all[i] for i in resp]
+        else:
+            results = [f(shards[i]) for i in resp]
+        return resp, results, plan.wait_s, plan.events
 
 
 class CodedMaster:
     """SPACDC-DL master (Algorithm 2): trains an MLP, distributing the
-    backward products through a DistributedMatmul scheme."""
+    backward products through a DistributedMatmul scheme.
 
-    def __init__(self, layer_sizes, dist: DistributedMatmul, lr=0.05, seed=0):
+    ``wait_policy`` overrides the DistributedMatmul's policy for the
+    training rounds (e.g. ``ErrorTarget(1e-2)`` trains on
+    good-enough-early decodes, ``Deadline(t)`` bounds every backward
+    round) — the same strategy objects the runtime and the SPMD trainer
+    consume.  Per-round stats land in ``round_stats``.
+    """
+
+    def __init__(self, layer_sizes, dist: DistributedMatmul, lr=0.05, seed=0,
+                 wait_policy=None):
         rng = np.random.default_rng(seed)
         self.dist = dist
+        if wait_policy is not None:
+            dist.policy = resolve_policy(wait_policy)
+        self.round_stats = []
         self.lr = lr
         self.weights = [rng.standard_normal((m, n)).astype(np.float32) *
                         np.sqrt(2.0 / m)
@@ -507,6 +927,7 @@ class CodedMaster:
                                                round_idx=self.round)
                 delta = prod.T * self._act_grad(pre[l - 1])
                 elapsed += stats.total_s
+                self.round_stats.append(stats)
                 self.round += 1
         grads_w, grads_b = grads_w[::-1], grads_b[::-1]
         for i in range(len(self.weights)):

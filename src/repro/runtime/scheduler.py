@@ -1,0 +1,192 @@
+"""Event-driven round scheduler: worker completions are timestamped events,
+the master decodes at any responder prefix a wait policy picks.
+
+The seed runtime collapsed every round to one wait-policy quantile and one
+decode.  This module is the generalization the paper's §V actually argues
+for: the round is a *timeline* of :class:`~.wait_policy.ArrivalEvent`s
+(virtual clock: latencies known upfront; real threads: completions stream
+in), and the decode point is chosen by a pluggable
+:class:`~.wait_policy.WaitPolicy`.  Three consumers share it:
+
+* ``DistributedMatmul`` (runtime/master_worker.py) plans each round here,
+  including the 2-dispatch anytime pipeline behind ``ErrorTarget``;
+* ``CodedMaster`` inherits whatever policy its ``DistributedMatmul`` runs;
+* the SPMD trainer (``launch/steps.py``) derives per-round responder masks
+  from the same policies via :func:`policy_mask_fn`.
+
+The scheduler also owns :class:`EncodePipeline`: the master is idle during
+the wait window of round *r*, so the encode of round *r+1* can hide there
+— the virtual clock credits the overlap instead of double-charging it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from .wait_policy import (ArrivalEvent, RoundContext, WaitPolicy,
+                          resolve_policy, scheme_min_responders)
+
+__all__ = [
+    "RoundPlan", "AnytimePoint", "EncodePipeline", "virtual_events",
+    "plan_round", "assemble_curve", "policy_mask_fn",
+]
+
+
+@dataclasses.dataclass
+class RoundPlan:
+    """One planned round: the consumed prefix and its timeline."""
+    stop: int                       # arrivals consumed before decoding
+    responders: np.ndarray          # sorted worker indices of the prefix
+    wait_s: float                   # virtual wait (time of last consumed event)
+    events: List[ArrivalEvent]      # the FULL round timeline, sorted by t
+    mask: np.ndarray                # (N,) float32 responder mask
+
+    @property
+    def arrival_order(self) -> np.ndarray:
+        """Worker indices in arrival order (the whole timeline)."""
+        return np.asarray([e.worker for e in self.events], dtype=np.int64)
+
+
+@dataclasses.dataclass
+class AnytimePoint:
+    """One point of an error-vs-latency curve: what decoding after the
+    ``n_responders``-th arrival (at virtual ``t_s``) would have cost."""
+    n_responders: int
+    worker: int                     # the worker whose arrival this is
+    t_s: float
+    ready: bool                     # scheme can decode this prefix at all
+    rel_err: float                  # raw decode error at this prefix
+    best_err: float                 # monotone envelope: min error up to here
+    proxy: float = float("inf")     # in-trace error estimate at this prefix
+
+
+def virtual_events(delays: np.ndarray, t_compute: float) -> List[ArrivalEvent]:
+    """Sorted arrival timeline of the virtual clock.
+
+    Latency model and tie-breaking are EXACTLY the seed's
+    (``np.argsort(delays + t_compute)``), so the default fixed-quantile
+    policy selects bit-identical responder sets.
+    """
+    lat = np.asarray(delays, dtype=np.float64) + float(t_compute)
+    order = np.argsort(lat)
+    return [ArrivalEvent(t=float(lat[i]), worker=int(i)) for i in order]
+
+
+def plan_round(scheme, policy: Optional[WaitPolicy], delays: np.ndarray,
+               t_compute: float, n_stragglers: int,
+               proxy_fn: Optional[Callable[[List[ArrivalEvent]],
+                                           np.ndarray]] = None) -> RoundPlan:
+    """Plan one virtual-clock round: build the event timeline, let the
+    policy pick the stop prefix, return responders/wait/mask.
+
+    ``proxy_fn(events) -> (E,) per-prefix error proxies`` is only invoked
+    for policies that declare ``needs_proxy`` (ErrorTarget) — for everyone
+    else the round costs no decode work beyond the one the master runs.
+    """
+    policy = resolve_policy(policy)
+    events = virtual_events(delays, t_compute)
+    min_ready = scheme_min_responders(scheme)
+    proxies = None
+    if policy.needs_proxy:
+        if proxy_fn is None:
+            raise ValueError(f"{policy.name} needs a proxy_fn")
+        proxies = np.asarray(proxy_fn(events), dtype=np.float64)
+    ctx = RoundContext(scheme=scheme, n_stragglers=n_stragglers,
+                       events=events, min_ready=min_ready, proxies=proxies)
+    stop = int(policy.stop_index(ctx))
+    if not (1 <= stop <= len(events)):
+        raise ValueError(f"{policy.name}: stop index {stop} outside round "
+                         f"of {len(events)} workers")
+    prefix = [e.worker for e in events[:stop]]
+    responders = np.sort(np.asarray(prefix, dtype=np.int64))
+    mask = np.zeros(len(events), np.float32)
+    mask[responders] = 1.0
+    return RoundPlan(stop=stop, responders=responders,
+                     wait_s=float(events[stop - 1].t), events=events,
+                     mask=mask)
+
+
+def assemble_curve(events: Sequence[ArrivalEvent], rel_errs: np.ndarray,
+                   ready: np.ndarray,
+                   proxies: Optional[np.ndarray] = None) -> List[AnytimePoint]:
+    """Zip a round timeline with per-prefix decode errors into the anytime
+    curve, adding the monotone envelope (``best_err`` — the error of the
+    best decode the master has *seen so far*; raw Berrut errors oscillate
+    with node parity, the envelope is what an anytime consumer tracks)."""
+    rel_errs = np.asarray(rel_errs, dtype=np.float64)
+    ready = np.asarray(ready, dtype=bool)
+    points: List[AnytimePoint] = []
+    best = float("inf")
+    for p, ev in enumerate(events):
+        err = float(rel_errs[p]) if ready[p] else float("inf")
+        best = min(best, err)
+        points.append(AnytimePoint(
+            n_responders=p + 1, worker=ev.worker, t_s=ev.t,
+            ready=bool(ready[p]), rel_err=err, best_err=best,
+            proxy=float(proxies[p]) if proxies is not None else float("inf")))
+    return points
+
+
+class EncodePipeline:
+    """Virtual-clock accounting for encode/wait overlap.
+
+    The master is idle while it waits for workers; the encode of round
+    r+1 runs in that window on the real system.  ``credit(wait_s)`` banks
+    round r's wait window; ``charge(encode_s)`` splits round r+1's encode
+    wall time into (charged, hidden) against the banked window.  The bank
+    never carries further than one round (windows don't accumulate — the
+    master can only hide work in the round directly before it).
+    """
+
+    def __init__(self):
+        self._window = 0.0
+
+    def credit(self, wait_s: float) -> None:
+        self._window = max(float(wait_s), 0.0)
+
+    def charge(self, encode_s: float) -> tuple:
+        hidden = min(max(float(encode_s), 0.0), self._window)
+        self._window = 0.0
+        return float(encode_s) - hidden, hidden
+
+
+def policy_mask_fn(scheme, straggler, policy=None, t_compute: float = 0.0,
+                   proxy_fn=None) -> Callable[[int], np.ndarray]:
+    """Per-round responder-mask source for mask-driven consumers (the SPMD
+    coded train step): ``mask_fn(round_idx) -> (N,) float32``.
+
+    ``scheme`` is any registered CodingScheme (for gradient coding, the
+    ``BerrutGradientCode``'s underlying SPACDC code);  ``straggler`` a
+    ``StragglerModel`` over the same N.  For ErrorTarget without an
+    explicit ``proxy_fn``, the default proxy is *decode-weight stability*:
+    the L1 change of the scheme's masked decode weights between
+    consecutive prefixes — the decoded gradient is ``weights @ results``,
+    so once the weights stop moving the decode has converged, and the
+    proxy needs no worker results (they don't exist until the step runs).
+    """
+    policy = resolve_policy(policy)
+    n = straggler.n_workers
+
+    def _weight_stability(events):
+        prox = np.full(len(events), np.inf)
+        prev = None
+        mask = np.zeros(n, np.float32)
+        for p, ev in enumerate(events):
+            mask[ev.worker] = 1.0
+            w = np.asarray(scheme.decode_matrix_masked(mask), np.float64)
+            if prev is not None:
+                prox[p] = (np.abs(w - prev).sum() /
+                           max(np.abs(w).sum(), 1e-12))
+            prev = w
+        return prox
+
+    def mask_fn(round_idx: int) -> np.ndarray:
+        plan = plan_round(scheme, policy, straggler.delays(round_idx),
+                          t_compute, straggler.n_stragglers,
+                          proxy_fn=proxy_fn or _weight_stability)
+        return plan.mask
+
+    return mask_fn

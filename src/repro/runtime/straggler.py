@@ -1,5 +1,21 @@
 """Straggler models for the simulated master/worker runtime (paper §VII-B:
-artificial delays via sleep()) and for SPMD responder-mask schedules."""
+artificial delays via sleep()) and for SPMD responder-mask schedules.
+
+Three delay modes (``mode=``):
+
+* ``"paper"`` (default, bit-identical to the seed): S of N workers get
+  ``delay_s`` extra latency with uniform scatter, everyone gets
+  exponential background jitter — the paper's sleep() injection.
+* ``"pareto"``: heavy-tailed per-worker delays, ``jitter + Pareto(shape)``
+  scaled so the tail routinely dwarfs the median — the regime where
+  anytime decoding's error-vs-latency curve matters most (real clusters
+  are closer to this than to uniform sleep injection).
+* ``"markov"``: bursty on/off congestion.  Each worker carries a hidden
+  two-state Markov chain over rounds (OK ↔ congested with transition
+  probabilities ``p_fail`` / ``p_recover``); congested workers pay
+  ``delay_s``-scale latency.  Straggler sets are *correlated across
+  rounds* — the burst pattern threshold schemes have no answer to.
+"""
 
 from __future__ import annotations
 
@@ -11,19 +27,75 @@ import numpy as np
 @dataclasses.dataclass
 class StragglerModel:
     """Per-epoch straggler assignment: S of N workers get `delay_s` extra
-    latency (the paper's setup); optionally exponential background jitter."""
+    latency (the paper's setup); optionally exponential background jitter.
+
+    ``delays(round_idx)`` is deterministic per (seed, round) in every mode.
+    """
     n_workers: int
     n_stragglers: int
     delay_s: float = 0.02
     jitter_scale: float = 0.002
     seed: int = 0
+    mode: str = "paper"          # "paper" | "pareto" | "markov"
+    pareto_shape: float = 1.5    # tail index (smaller = heavier tail)
+    p_fail: float = 0.1          # markov: P(OK -> congested) per round
+    p_recover: float = 0.5       # markov: P(congested -> OK) per round
+
+    def __post_init__(self):
+        if self.mode not in ("paper", "pareto", "markov"):
+            raise ValueError(f"unknown straggler mode {self.mode!r} "
+                             "(paper | pareto | markov)")
+
+    def _rng(self, round_idx: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, round_idx]))
 
     def delays(self, round_idx: int) -> np.ndarray:
-        rng = np.random.default_rng(np.random.SeedSequence([self.seed, round_idx]))
+        if self.mode == "pareto":
+            return self._pareto_delays(round_idx)
+        if self.mode == "markov":
+            return self._markov_delays(round_idx)
+        # "paper": the seed's exact construction — same rng stream, same
+        # draw order, so existing traces reproduce bit-identically
+        rng = self._rng(round_idx)
         d = rng.exponential(self.jitter_scale, self.n_workers)
         if self.n_stragglers:
             idx = rng.choice(self.n_workers, self.n_stragglers, replace=False)
             d[idx] += self.delay_s * (1.0 + rng.random(self.n_stragglers))
+        return d
+
+    def _pareto_delays(self, round_idx: int) -> np.ndarray:
+        """Heavy tail: every worker draws jitter + scaled Pareto excess.
+        The scale is set so the *median* worker sits near the paper mode's
+        jitter while the tail reaches multiples of ``delay_s``."""
+        rng = self._rng(round_idx)
+        jitter = rng.exponential(self.jitter_scale, self.n_workers)
+        excess = rng.pareto(self.pareto_shape, self.n_workers)
+        return jitter + self.delay_s * 0.25 * excess
+
+    def _markov_states(self, round_idx: int) -> np.ndarray:
+        """Boolean congested-state vector at ``round_idx``, evolved from
+        round 0 (initial states: the ``n_stragglers`` lowest worker ids
+        congested) — O(round_idx · N), deterministic, uncached on purpose
+        (bench sweeps re-enter rounds arbitrarily)."""
+        state = np.zeros(self.n_workers, bool)
+        state[: self.n_stragglers] = True
+        for r in range(round_idx + 1):
+            # a stream distinct from the jitter draw of the same round
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, r, 1]))
+            u = rng.random(self.n_workers)
+            fail = ~state & (u < self.p_fail)
+            recover = state & (u < self.p_recover)
+            state = (state | fail) & ~recover
+        return state
+
+    def _markov_delays(self, round_idx: int) -> np.ndarray:
+        rng = self._rng(round_idx)
+        d = rng.exponential(self.jitter_scale, self.n_workers)
+        state = self._markov_states(round_idx)
+        if state.any():
+            d[state] += self.delay_s * (1.0 + rng.random(int(state.sum())))
         return d
 
     def responder_mask(self, round_idx: int, wait_for: int) -> np.ndarray:

@@ -25,6 +25,49 @@ def test_straggler_count():
     assert (d > 0.5).sum() == 5
 
 
+def test_straggler_paper_mode_unchanged_by_new_modes():
+    """mode='paper' (the default) must reproduce the seed's exact rng
+    stream — existing traces and Fig-3 sweeps stay bit-identical."""
+    s = StragglerModel(12, 4, seed=7)
+    rng = np.random.default_rng(np.random.SeedSequence([7, 3]))
+    want = rng.exponential(s.jitter_scale, 12)
+    idx = rng.choice(12, 4, replace=False)
+    want[idx] += s.delay_s * (1.0 + rng.random(4))
+    np.testing.assert_array_equal(s.delays(3), want)
+    assert s.mode == "paper"
+
+
+@pytest.mark.parametrize("mode", ["pareto", "markov"])
+def test_straggler_new_modes_deterministic(mode):
+    s = StragglerModel(10, 3, seed=1, mode=mode)
+    np.testing.assert_array_equal(s.delays(5), s.delays(5))
+    assert (s.delays(5) != s.delays(6)).any()
+    assert (s.delays(5) >= 0).all()
+
+
+def test_straggler_pareto_has_heavier_tail():
+    paper = StragglerModel(200, 0, seed=0)
+    pareto = StragglerModel(200, 0, seed=0, mode="pareto")
+    d_paper = np.concatenate([paper.delays(r) for r in range(5)])
+    d_pareto = np.concatenate([pareto.delays(r) for r in range(5)])
+    # jitter-only paper delays never reach delay_s scale; the heavy tail does
+    assert d_paper.max() < 0.02 < d_pareto.max()
+    assert np.median(d_pareto) < 0.01          # ...while the bulk stays fast
+
+
+def test_straggler_markov_bursts_persist_across_rounds():
+    s = StragglerModel(20, 5, seed=3, mode="markov", p_fail=0.05,
+                       p_recover=0.3)
+    slow_sets = [set(np.flatnonzero(s.delays(r) > 0.5 * s.delay_s))
+                 for r in range(6)]
+    # congestion is correlated round-to-round (bursts), unlike paper mode
+    overlaps = [len(a & b) for a, b in zip(slow_sets, slow_sets[1:])
+                if a or b]
+    assert overlaps and max(overlaps) >= 1
+    with pytest.raises(ValueError):
+        StragglerModel(4, 1, mode="quantum")
+
+
 @pytest.mark.parametrize("scheme,kwargs", [
     ("conv", {}),
     ("mds", {}),
@@ -70,6 +113,22 @@ def test_coded_master_trains():
         for i in range(0, 1024, 256):
             loss, el = m.train_batch(xtr[i:i + 256], ytr[i:i + 256])
     assert m.accuracy(xte, yte) > 0.8
+
+
+def test_coded_master_trains_under_error_target():
+    """Training under ErrorTarget: every backward round decodes at the
+    earliest prefix whose embedded error estimate meets the target."""
+    from repro.runtime import ErrorTarget
+    xtr, ytr, xte, yte = synthetic_mnist(n_train=512, n_test=128)
+    dist = DistributedMatmul("spacdc", n_workers=8, k_blocks=4,
+                             t_colluding=1, n_stragglers=1)
+    m = CodedMaster((784, 32, 10), dist, lr=0.1,
+                    wait_policy=ErrorTarget(0.25))
+    for i in range(0, 512, 256):
+        loss, _ = m.train_batch(xtr[i:i + 256], ytr[i:i + 256])
+        assert np.isfinite(loss)
+    assert all(s.policy == "error_target" for s in m.round_stats)
+    assert all(1 <= s.n_waited <= 8 for s in m.round_stats)
 
 
 def test_crypto_overhead_accounted():
