@@ -1,37 +1,44 @@
 """Paper Fig 4: test accuracy vs (virtual) training time, S ∈ {3,5,7}.
-Reports time-to-80% for each scheme (the paper's headline comparison)."""
+Reports time-to-80% for each scheme (the paper's headline comparison).
+Each scheme is one declarative ``ClusterSpec``; training runs through
+``Session.train_step``."""
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.api import (ClusterSpec, CodeSpec, PrivacySpec, Session,
+                       StragglerSpec)
 from repro.data.mnist import synthetic_mnist
-from repro.runtime.master_worker import CodedMaster, DistributedMatmul
 
 N, T, K = 30, 3, 24
 TARGET = 0.8
 
 
+def scheme_spec(scheme: str, stragglers: int) -> ClusterSpec:
+    return ClusterSpec(
+        code=CodeSpec(scheme=scheme, n_workers=N,
+                      k_blocks=12 if scheme == "matdot" else K),
+        privacy=PrivacySpec(t_colluding=T if scheme == "spacdc" else 0),
+        straggler=StragglerSpec(n_stragglers=stragglers), seed=0)
+
+
 def time_to_target(scheme: str, stragglers: int, epochs=3, bs=256) -> tuple:
     xtr, ytr, xte, yte = synthetic_mnist(n_train=2048, n_test=512)
-    kwargs = dict(n_workers=N, k_blocks=K, n_stragglers=stragglers, seed=0)
-    if scheme == "spacdc":
-        kwargs["t_colluding"] = T
-    if scheme == "matdot":
-        kwargs["k_blocks"] = 12
-    dist = DistributedMatmul(scheme, **kwargs)
-    master = CodedMaster((784, 512, 10), dist, lr=0.05)
-    dist.matmul(master.weights[1], np.zeros((10, bs), np.float32))
-    elapsed, hit = 0.0, None
-    final_acc = 0.0
-    for ep in range(epochs):
-        for i in range(0, len(xtr) - bs + 1, bs):
-            _, dt = master.train_batch(xtr[i:i + bs], ytr[i:i + bs])
-            elapsed += dt
-            if hit is None and (i // bs) % 2 == 1:
-                if master.accuracy(xte, yte) >= TARGET:
-                    hit = elapsed
-        final_acc = master.accuracy(xte, yte)
+    with Session(scheme_spec(scheme, stragglers)) as s:
+        s.init_mlp((784, 512, 10), lr=0.05)
+        s.matmul(s.mlp_weights[1], np.zeros((10, bs), np.float32),
+                 round_idx=0)                       # warm the jitted paths
+        elapsed, hit = 0.0, None
+        final_acc = 0.0
+        for ep in range(epochs):
+            for i in range(0, len(xtr) - bs + 1, bs):
+                _, dt = s.train_step(xtr[i:i + bs], ytr[i:i + bs])
+                elapsed += dt
+                if hit is None and (i // bs) % 2 == 1:
+                    if s.mlp_accuracy(xte, yte) >= TARGET:
+                        hit = elapsed
+            final_acc = s.mlp_accuracy(xte, yte)
     return (hit if hit is not None else float("inf")), final_acc
 
 

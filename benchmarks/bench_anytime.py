@@ -41,10 +41,26 @@ import numpy as np
 
 import jax
 
-from repro.runtime import FixedQuantile, StragglerModel
-from repro.runtime.master_worker import DistributedMatmul
+from repro.api import (ClusterSpec, CodeSpec, PrivacySpec, Session,
+                       StragglerSpec)
 
 ERR_TARGET = 1e-2
+
+
+def scheme_spec(name, kw, n, s, pipeline_encode=False) -> ClusterSpec:
+    """One declarative spec per (scheme, operating point) on the SHARED
+    straggler trace (seed 0)."""
+    kw = dict(kw)
+    k_blocks = kw.pop("k_blocks")
+    t_colluding = kw.pop("t_colluding", 0)
+    noise_scale = kw.pop("noise_scale", 1.0)
+    return ClusterSpec(
+        code=CodeSpec(scheme=name, n_workers=n, k_blocks=k_blocks,
+                      extra=kw),
+        privacy=PrivacySpec(t_colluding=t_colluding,
+                            noise_scale=noise_scale),
+        straggler=StragglerSpec(n_stragglers=s), seed=0,
+        pipeline_encode=pipeline_encode)
 
 # one shared trace: the paper's Fig-3 apparatus (N=30, S=7 pushes the
 # K=24 threshold schemes past the fast-worker pool)
@@ -104,14 +120,13 @@ def measure(smoke: bool = False) -> dict:
     b = np.random.default_rng(0).standard_normal((d, n_out)).astype(np.float32)
     curves, summary = {}, {}
     for name, kw in cfg["schemes"].items():
-        straggler = StragglerModel(n, s, seed=0)      # the SHARED trace
-        dist = DistributedMatmul(name, n_workers=n, straggler=straggler,
-                                 **kw)
-        points = dist.anytime_curve(a, b, round_idx=0)
+        sess = Session(scheme_spec(name, kw, n, s))
+        dist = sess.engine
+        points = sess.anytime_curve(a, b, round_idx=0)
         assert dist.trace_count == 2, \
             f"{name}: anytime curve took {dist.trace_count} traced " \
             f"dispatches (contract: 2)"
-        points2 = dist.anytime_curve(a, b, round_idx=1)   # straggler churn
+        points2 = sess.anytime_curve(a, b, round_idx=1)   # straggler churn
         assert dist.trace_count == 2, \
             f"{name}: repeated curve re-traced ({dist.trace_count})"
         del points2
@@ -150,11 +165,8 @@ def measure(smoke: bool = False) -> dict:
                                      "code's information limit")
 
     # encode pipelining: how much master encode hides in the wait window
-    pipe = DistributedMatmul("spacdc", n_workers=n,
-                             straggler=StragglerModel(n, s, seed=0),
-                             pipeline_encode=True,
-                             wait_policy=FixedQuantile(),
-                             **cfg["schemes"]["spacdc"])
+    pipe = Session(scheme_spec("spacdc", cfg["schemes"]["spacdc"], n, s,
+                               pipeline_encode=True))
     stats = [pipe.matmul(a, b, round_idx=r)[1] for r in range(4)]
     pipelined = [st.pipelined_s for st in stats[1:]]   # round 0 has no window
     summary["encode_pipelining"] = {

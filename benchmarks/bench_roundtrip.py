@@ -25,10 +25,20 @@ import numpy as np
 
 import jax
 
-from repro.runtime.master_worker import DistributedMatmul
+from repro.api import (ClusterSpec, CodeSpec, PrivacySpec, Session,
+                       StragglerSpec)
 
 # fig-3 apparatus: N=30 workers, K=24 blocks, T=3 noise blocks, S=3 stragglers
 FIG3 = dict(n_workers=30, k_blocks=24, t_colluding=3, n_stragglers=3, seed=0)
+
+
+def _spec(cfg: dict, fused: bool) -> ClusterSpec:
+    return ClusterSpec(
+        code=CodeSpec(scheme="spacdc", n_workers=cfg["n_workers"],
+                      k_blocks=cfg["k_blocks"], fused=fused),
+        privacy=PrivacySpec(t_colluding=cfg["t_colluding"]),
+        straggler=StragglerSpec(n_stragglers=cfg["n_stragglers"]),
+        seed=cfg["seed"])
 
 SCALES = [
     # (name, m, d, n_out) for the coded job A(m,d) @ B(d,n_out)
@@ -38,13 +48,13 @@ SCALES = [
 SMOKE_SCALES = [("smoke", 96, 16, 32)]
 
 
-def _time_rounds(dist: DistributedMatmul, a, b, reps: int) -> float:
+def _time_rounds(sess: Session, a, b, reps: int) -> float:
     """Median wall seconds per round (after a warm-up round)."""
-    dist.matmul(a, b, round_idx=0)                 # warm: compile + caches
+    sess.matmul(a, b, round_idx=0)                 # warm: compile + caches
     times = []
     for r in range(reps):
         t0 = time.perf_counter()
-        dist.matmul(a, b, round_idx=r + 1)
+        sess.matmul(a, b, round_idx=r + 1)
         times.append(time.perf_counter() - t0)
     return float(np.median(times))
 
@@ -60,8 +70,8 @@ def measure(smoke: bool = False) -> dict:
     for name, m, d, n_out in scales:
         a = rng.standard_normal((m, d)).astype(np.float32)
         b = rng.standard_normal((d, n_out)).astype(np.float32)
-        fused = DistributedMatmul("spacdc", fused=True, **cfg)
-        loop = DistributedMatmul("spacdc", fused=False, **cfg)
+        fused = Session(_spec(cfg, fused=True))
+        loop = Session(_spec(cfg, fused=False))
         t_fused = _time_rounds(fused, a, b, reps)
         t_loop = _time_rounds(loop, a, b, reps)
         results.append({

@@ -1,31 +1,38 @@
 """Paper Fig 3: average DNN training time under S ∈ {0,3,5,7} stragglers for
 CONV-DL / MDS-DL / MATDOT-DL / SPACDC-DL (N=30, T=3) — virtual-clock rounds
-of the actual coded backprop, synthetic-MNIST MLP."""
+of the actual coded backprop, synthetic-MNIST MLP, one declarative
+``ClusterSpec`` per scheme (the SPACDC point is ``ClusterSpec.paper_fig3``)."""
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.api import (ClusterSpec, CodeSpec, PrivacySpec, Session,
+                       StragglerSpec)
 from repro.data.mnist import synthetic_mnist
-from repro.runtime.master_worker import CodedMaster, DistributedMatmul
 
 N, T, K = 30, 3, 24
 
 
+def scheme_spec(scheme: str, stragglers: int) -> ClusterSpec:
+    if scheme == "spacdc":
+        return ClusterSpec.paper_fig3(n_stragglers=stragglers)
+    return ClusterSpec(
+        code=CodeSpec(scheme=scheme, n_workers=N,
+                      k_blocks=12 if scheme == "matdot" else K),
+        straggler=StragglerSpec(n_stragglers=stragglers), seed=0)
+
+
 def epoch_time(scheme: str, stragglers: int, n_batches=8, bs=256) -> float:
     xtr, ytr, _, _ = synthetic_mnist(n_train=n_batches * bs, n_test=64)
-    kwargs = dict(n_workers=N, k_blocks=K, n_stragglers=stragglers, seed=0)
-    if scheme == "spacdc":
-        kwargs["t_colluding"] = T
-    if scheme == "matdot":
-        kwargs["k_blocks"] = 12
-    dist = DistributedMatmul(scheme, **kwargs)
-    master = CodedMaster((784, 512, 10), dist, lr=0.05)
-    dist.matmul(master.weights[1], np.zeros((10, bs), np.float32))  # warm
-    total = 0.0
-    for i in range(0, n_batches * bs, bs):
-        _, dt = master.train_batch(xtr[i:i + bs], ytr[i:i + bs])
-        total += dt
+    with Session(scheme_spec(scheme, stragglers)) as s:
+        s.init_mlp((784, 512, 10), lr=0.05)
+        s.matmul(s.mlp_weights[1], np.zeros((10, bs), np.float32),
+                 round_idx=0)                               # warm
+        total = 0.0
+        for i in range(0, n_batches * bs, bs):
+            _, dt = s.train_step(xtr[i:i + bs], ytr[i:i + bs])
+            total += dt
     return total
 
 

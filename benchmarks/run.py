@@ -12,7 +12,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table2,fig3,fig4,fig5,fig6,fig7,"
-                         "roundtrip,crypto,anytime,roofline")
+                         "roundtrip,crypto,anytime,serve,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -22,7 +22,7 @@ def main() -> None:
         return only is None or any(k in only for k in keys)
 
     from benchmarks import (bench_accuracy, bench_anytime, bench_complexity,
-                            bench_crypto, bench_roundtrip,
+                            bench_crypto, bench_roundtrip, bench_serve,
                             bench_training_time, roofline)
     if want("table2", "fig5", "fig6", "fig7"):
         bench_complexity.run(rows)
@@ -36,6 +36,8 @@ def main() -> None:
         bench_crypto.run(rows)
     if want("anytime"):
         bench_anytime.run(rows)
+    if want("serve"):
+        bench_serve.run(rows, smoke=True)
     if want("roofline"):
         roofline.run(rows)
 

@@ -1,4 +1,8 @@
-"""Quickstart: SPACDC in one page — encode, distribute, lose workers, decode.
+"""Quickstart: the whole SPACDC stack behind one declarative spec.
+
+A ``ClusterSpec`` names every choice — scheme, privacy, crypto, wait
+policy, stragglers, transport — and a ``Session`` runs any workload
+under it.  Then the same privacy/crypto internals, hands-on.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,18 +13,34 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import SPACDCCode, SPACDCConfig
+from repro.api import (ClusterSpec, CodeSpec, PrivacySpec, StragglerSpec,
+                       Session, WaitSpec)
 from repro.core.privacy import gaussian_mi_bound
 from repro.crypto import MEAECC, generate_keypair
 
-# ---- the computation we want a cluster to approximate: Y = f(X) ----------
+# ---- one spec, one session, one coded round ------------------------------
+spec = ClusterSpec(
+    code=CodeSpec(scheme="spacdc", n_workers=20, k_blocks=4),
+    privacy=PrivacySpec(t_colluding=2, noise_scale=0.5),
+    straggler=StragglerSpec(n_stragglers=3),
+    wait=WaitSpec(policy="deadline", t_budget=0.01),
+)
 rng = np.random.default_rng(0)
-X = jnp.asarray(rng.standard_normal((120, 32)), jnp.float32)
-f = lambda a: jax.nn.gelu(a @ a.T)          # arbitrary non-polynomial f!
+a = rng.standard_normal((240, 64)).astype(np.float32)
+b = rng.standard_normal((64, 32)).astype(np.float32)
+with Session(spec) as s:
+    out, stats = s.matmul(a, b)
+    rel = np.linalg.norm(out - a @ b) / np.linalg.norm(a @ b)
+    print(f"coded A@B from {stats.n_waited}/20 workers under a "
+          f"{spec.wait.t_budget * 1e3:.0f} ms deadline: rel err {rel:.4f} "
+          f"(decode at {stats.decode_at_s * 1e3:.2f} ms virtual)")
+    print("spec round-trips:",
+          ClusterSpec.from_dict(s.spec.to_dict()) == s.spec)
 
-# ---- SPACDC: N=20 workers, K=4 data blocks, T=2 colluding tolerated ------
-code = SPACDCCode(SPACDCConfig(n_workers=20, k_blocks=4, t_colluding=2,
-                               noise_scale=0.5))
+# ---- the same machinery, hands-on: encode, lose workers, decode ----------
+code = spec.build_scheme()
+X = jnp.asarray(rng.standard_normal((120, 32)), jnp.float32)
+f = lambda z: jax.nn.gelu(z @ z.T)          # arbitrary non-polynomial f!
 shards = code.encode(X, key=jax.random.PRNGKey(1))      # (20, 30, 32)
 print("per-worker privacy bound (bits/elem):",
       float(gaussian_mi_bound(code).max()))

@@ -1,5 +1,7 @@
-"""Batched serving demo: greedy decode of a 4-request batch on a reduced
-deepseek (MLA absorbed-cache decode path).
+"""Coded serving demo: deadline-bounded greedy decode of a 4-request batch
+on a reduced deepseek (MLA absorbed-cache decode path) — every generation
+step's output projection is a coded round that decodes at (or before) the
+budget, whatever the stragglers do.
 
   PYTHONPATH=src python examples/serve_demo.py
 """
@@ -8,4 +10,5 @@ from repro.launch.serve import main
 
 if __name__ == "__main__":
     main(["--arch", "deepseek-v2-lite-16b", "--tiny",
-          "--batch", "4", "--prompt-len", "12", "--gen", "24"])
+          "--batch", "4", "--prompt-len", "12", "--gen", "24",
+          "--deadline-ms", "8"])

@@ -5,6 +5,7 @@ T=3 colluding, S stragglers; the backward products are computed through each
 coding scheme and the virtual-clock round times reproduce Fig. 3/4's
 qualitative result: SPACDC-DL reaches target accuracy fastest once
 stragglers push survivors below the classical schemes' recovery thresholds.
+One ``ClusterSpec`` per scheme; the training loop is ``Session.train_step``.
 
   PYTHONPATH=src python examples/spacdc_dl_mnist.py [--stragglers 5]
 """
@@ -13,32 +14,37 @@ import argparse
 
 import numpy as np
 
+from repro.api import (ClusterSpec, CodeSpec, PrivacySpec, StragglerSpec,
+                       Session)
 from repro.configs.spacdc_paper import CONFIG as PAPER
 from repro.data.mnist import synthetic_mnist
-from repro.runtime.master_worker import CodedMaster, DistributedMatmul
 
 
-def run_scheme(scheme, xtr, ytr, xte, yte, stragglers, epochs=3, k=24):
-    kwargs = dict(n_workers=PAPER.n_workers, k_blocks=k,
-                  n_stragglers=stragglers, seed=PAPER.seed)
-    if scheme == "spacdc":
-        kwargs["t_colluding"] = PAPER.t_colluding
+def scheme_spec(scheme, stragglers, k=24):
+    t = PAPER.t_colluding if scheme == "spacdc" else 0
     if scheme == "matdot":
-        kwargs["k_blocks"] = 12        # threshold 2p-1 = 23
-    dist = DistributedMatmul(scheme, **kwargs)
-    master = CodedMaster((784, 512, 10), dist, lr=PAPER.lr, seed=PAPER.seed)
-    # warm the jitted encode/compute/decode paths so the virtual clock
-    # measures steady-state rounds, not compilation
-    dist.matmul(master.weights[1], np.zeros((10, PAPER.batch_size), np.float32))
-    elapsed, curve = 0.0, []
-    bs = PAPER.batch_size
-    for ep in range(epochs):
-        for i in range(0, len(xtr) - bs + 1, bs):
-            loss, dt = master.train_batch(xtr[i:i + bs], ytr[i:i + bs])
-            elapsed += dt
-        acc = master.accuracy(xte, yte)
-        curve.append((elapsed, acc))
-    return curve
+        k = 12                         # threshold 2p-1 = 23
+    return ClusterSpec(
+        code=CodeSpec(scheme=scheme, n_workers=PAPER.n_workers, k_blocks=k),
+        privacy=PrivacySpec(t_colluding=t),
+        straggler=StragglerSpec(n_stragglers=stragglers), seed=PAPER.seed)
+
+
+def run_scheme(scheme, xtr, ytr, xte, yte, stragglers, epochs=3):
+    with Session(scheme_spec(scheme, stragglers)) as s:
+        s.init_mlp((784, 512, 10), lr=PAPER.lr, seed=PAPER.seed)
+        # warm the jitted encode/compute/decode paths so the virtual clock
+        # measures steady-state rounds, not compilation
+        s.matmul(s.mlp_weights[1],
+                 np.zeros((10, PAPER.batch_size), np.float32), round_idx=0)
+        elapsed, curve = 0.0, []
+        bs = PAPER.batch_size
+        for ep in range(epochs):
+            for i in range(0, len(xtr) - bs + 1, bs):
+                loss, dt = s.train_step(xtr[i:i + bs], ytr[i:i + bs])
+                elapsed += dt
+            curve.append((elapsed, s.mlp_accuracy(xte, yte)))
+        return curve
 
 
 def main(argv=None):

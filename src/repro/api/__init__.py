@@ -1,0 +1,25 @@
+"""The public surface: one declarative ``ClusterSpec`` → one ``Session``.
+
+    from repro.api import ClusterSpec, CodeSpec, PrivacySpec, WaitSpec, Session
+
+    spec = ClusterSpec(
+        code=CodeSpec(scheme="spacdc", n_workers=20, k_blocks=5),
+        privacy=PrivacySpec(t_colluding=2, noise_scale=0.05),
+        wait=WaitSpec(policy="deadline", t_budget=0.005),
+    )
+    with Session(spec) as s:
+        out, stats = s.matmul(a, b)
+
+See README "Public API" for the spec schema and the migration table from
+the legacy ``DistributedMatmul`` kwargs.
+"""
+
+from .spec import (ClusterSpec, CodeSpec, CryptoSpec, PrivacySpec,
+                   StragglerSpec, TransportSpec, WaitSpec)
+from .session import ServeReport, Session, coded_mlp_init, coded_mlp_step
+
+__all__ = [
+    "ClusterSpec", "CodeSpec", "CryptoSpec", "PrivacySpec", "StragglerSpec",
+    "TransportSpec", "WaitSpec", "Session", "ServeReport",
+    "coded_mlp_init", "coded_mlp_step",
+]

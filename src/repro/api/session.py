@@ -1,0 +1,319 @@
+"""``Session``: the context-managed runtime behind one ``ClusterSpec``.
+
+One typed entry point for every workload the stack runs:
+
+    with Session(ClusterSpec.serve_deadline(t_budget=0.005)) as s:
+        out, stats = s.matmul(a, b)            # one coded round
+        curve = s.anytime_curve(a, b)          # error-vs-latency curve
+        s.init_mlp((784, 64, 10), lr=0.1)
+        loss, elapsed = s.train_step(x, y)     # SPACDC-DL (Algorithm 2)
+        report = s.serve(arch="qwen2-7b")      # coded deadline serving
+
+The Session owns the pool/executor lifecycle: the long-lived thread
+executor behind the ``"threads"`` transport is torn down exactly once on
+``close()`` / context exit, and repeated open/close cycles never leak
+threads (asserted in tests).  The legacy ``DistributedMatmul`` /
+``CodedMaster`` constructors are thin shims over the same
+``runtime.engine.RoundEngine`` this Session drives, so both surfaces
+produce bit-identical rounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..runtime.engine import RoundEngine, RoundStats
+from .spec import ClusterSpec
+
+__all__ = ["Session", "ServeReport", "coded_mlp_init", "coded_mlp_step"]
+
+
+# --------------------------------------------------------------------------
+# the SPACDC-DL training step (Algorithm 2), functional form
+# --------------------------------------------------------------------------
+
+def coded_mlp_init(layer_sizes: Sequence[int], seed: int = 0):
+    """He-initialized MLP state: (weights, biases) — the exact layer init
+    the SPACDC-DL master has always used (bit-identical)."""
+    rng = np.random.default_rng(seed)
+    weights = [rng.standard_normal((m, n)).astype(np.float32) *
+               np.sqrt(2.0 / m)
+               for m, n in zip(layer_sizes[:-1], layer_sizes[1:])]
+    biases = [np.zeros(n, np.float32) for n in layer_sizes[1:]]
+    return weights, biases
+
+
+def _act(x):
+    return np.maximum(x, 0.0)
+
+
+def _act_grad(x):
+    return (x > 0).astype(np.float32)
+
+
+def mlp_forward(weights, biases, x):
+    """ReLU MLP forward: returns (activations, pre-activations)."""
+    acts, pre = [x], []
+    h = x
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        z = h @ w + b
+        pre.append(z)
+        h = _act(z) if i < len(weights) - 1 else z
+        acts.append(h)
+    return acts, pre
+
+
+def coded_mlp_step(weights, biases, matmul, x, y, lr: float = 0.05,
+                   round0: int = 0):
+    """One SGD step of SPACDC-DL (paper Algorithm 2), backward layer
+    products distributed through ``matmul(a, b, round_idx) ->
+    (product, RoundStats)`` — the coded job is Eq. 23's delta @ W^T,
+    coded over W's rows.
+
+    Mutates ``weights``/``biases`` in place (the master owns its state).
+    Returns (loss, elapsed_virtual_s, per_round_stats).
+    """
+    bsz = x.shape[0]
+    acts, pre = mlp_forward(weights, biases, x)
+    logits = acts[-1]
+    z = logits - logits.max(1, keepdims=True)
+    p = np.exp(z)
+    p /= p.sum(1, keepdims=True)
+    loss = -np.mean(np.log(p[np.arange(bsz), y] + 1e-12))
+    onehot = np.zeros_like(p)
+    onehot[np.arange(bsz), y] = 1.0
+    delta = (p - onehot) / bsz                      # (B, n_out)
+
+    elapsed = 0.0
+    stats_out: List[RoundStats] = []
+    grads_w, grads_b = [], []
+    for l in reversed(range(len(weights))):
+        grads_w.append(acts[l].T @ delta)
+        grads_b.append(delta.sum(0))
+        if l > 0:
+            # the distributed job (Eq. 23): delta @ W^T, coded over W rows
+            prod, stats = matmul(weights[l], delta.T,
+                                 round_idx=round0 + len(stats_out))
+            delta = prod.T * _act_grad(pre[l - 1])
+            elapsed += stats.total_s
+            stats_out.append(stats)
+    grads_w, grads_b = grads_w[::-1], grads_b[::-1]
+    for i in range(len(weights)):
+        weights[i] -= lr * grads_w[i]
+        biases[i] -= lr * grads_b[i]
+    return float(loss), elapsed, stats_out
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeReport:
+    """One coded serving run: what came out and what every step cost."""
+    tokens: np.ndarray               # (batch, gen) generated token ids
+    step_stats: List[RoundStats]     # one coded round per generation step
+    wall_s: float                    # wall time of the generation loop
+    tok_s: float                     # batch * gen / wall_s
+    t_budget: Optional[float]        # the Deadline budget (None: no deadline)
+    argmax_agreement: float          # fraction of coded argmax == exact
+
+    @property
+    def steps_within_budget(self) -> int:
+        """Generation steps whose coded decode fired at/before the
+        deadline (all of them, for a rateless scheme — SPACDC's minimum
+        decodable prefix is 1)."""
+        if self.t_budget is None:
+            return len(self.step_stats)
+        return sum(1 for s in self.step_stats
+                   if s.decode_at_s <= self.t_budget + 1e-12)
+
+
+class Session:
+    """Context-managed front door over the whole SPACDC stack.
+
+    Everything is configured by the frozen :class:`~repro.api.ClusterSpec`
+    — scheme, privacy, crypto, wait policy, straggler environment,
+    transport backend.  ``straggler`` / ``policy`` accept pre-built
+    instances for the legacy shims (objects a spec can't express).
+    """
+
+    def __init__(self, spec: ClusterSpec, *, straggler=None, policy=None):
+        self.spec = spec
+        self.engine = RoundEngine(spec, straggler=straggler, policy=policy)
+        self._closed = False
+        self._mlp = None                 # (weights, biases, lr)
+        self._round = 0
+        self.round_stats: List[RoundStats] = []
+
+    # ----------------------------------------------------------- lifecycle
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        return False
+
+    def close(self):
+        """Tear down the pool's long-lived executor — exactly once; later
+        calls are no-ops.  Unconsumed-straggler failures surface here."""
+        if not self._closed:
+            self._closed = True
+            self.engine.close()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def _check_open(self):
+        if self._closed:
+            raise RuntimeError("Session is closed")
+
+    # -------------------------------------------------------------- rounds
+    def matmul(self, a, b, round_idx: Optional[int] = None
+               ) -> Tuple[np.ndarray, RoundStats]:
+        """One coded A@B round under the spec's scheme/policy/transport.
+        ``round_idx`` defaults to an internal counter (each call is a new
+        straggler draw); pass it explicitly to replay rounds."""
+        self._check_open()
+        if round_idx is None:
+            round_idx = self._round
+            self._round += 1
+        out, stats = self.engine.matmul(a, b, round_idx=round_idx)
+        self.round_stats.append(stats)
+        return out, stats
+
+    def anytime_curve(self, a, b, round_idx: int = 0):
+        """Error-vs-latency curve of one round (2 jitted dispatches);
+        see :meth:`repro.runtime.engine.RoundEngine.anytime_curve`."""
+        self._check_open()
+        return self.engine.anytime_curve(a, b, round_idx=round_idx)
+
+    # ------------------------------------------------------------ training
+    def init_mlp(self, layer_sizes: Sequence[int], lr: float = 0.05,
+                 seed: int = 0) -> "Session":
+        """Initialize the SPACDC-DL training state ``train_step`` advances."""
+        self._check_open()
+        w, b = coded_mlp_init(layer_sizes, seed)
+        self._mlp = (w, b, lr)
+        return self
+
+    @property
+    def mlp_weights(self):
+        return self._mlp[0] if self._mlp else None
+
+    @property
+    def mlp_biases(self):
+        return self._mlp[1] if self._mlp else None
+
+    def train_step(self, x, y) -> Tuple[float, float]:
+        """One coded SGD step (Algorithm 2); backward layer products run
+        as coded rounds under the session's policy.  Returns
+        (loss, virtual_elapsed_s); per-round stats land in
+        ``round_stats``."""
+        self._check_open()
+        if self._mlp is None:
+            raise RuntimeError("call init_mlp(layer_sizes) first")
+        w, b, lr = self._mlp
+        loss, elapsed, stats = coded_mlp_step(
+            w, b, self.engine.matmul, x, y, lr=lr, round0=self._round)
+        self._round += len(stats)
+        self.round_stats.extend(stats)
+        return loss, elapsed
+
+    def mlp_accuracy(self, x, y) -> float:
+        self._check_open()
+        if self._mlp is None:
+            raise RuntimeError("call init_mlp(layer_sizes) first")
+        acts, _ = mlp_forward(self._mlp[0], self._mlp[1], x)
+        return float((acts[-1].argmax(1) == y).mean())
+
+    # ------------------------------------------------------------- serving
+    def serve(self, arch: str = "qwen2-7b", *, tiny: bool = True,
+              batch: int = 4, prompt_len: int = 16, gen: int = 32,
+              seed: int = 0, check_agreement: bool = True) -> ServeReport:
+        """Batched greedy decode with the output projection run as coded
+        rounds — deadline-bounded coded inference (the ROADMAP serving
+        item).
+
+        Each generation step computes the model's last hidden state on
+        the plain decode path, then runs the unembed projection
+        ``logits = h @ W`` as the coded job ``W^T_rows-coded @ h^T``
+        (Eq. 23's layout) under the session's wait policy.  With
+        ``WaitSpec(policy="deadline", t_budget=...)`` every step's coded
+        matmul decodes at (or before) the budget from whatever responder
+        prefix arrived — fixed latency, best-effort accuracy — and the
+        per-step :class:`RoundStats` land in the report.  Swapping
+        ``TransportSpec(backend="threads")`` for ``"virtual"`` changes
+        nothing else.
+        """
+        self._check_open()
+        import jax
+        import jax.numpy as jnp
+        from ..configs import get_config, tiny_config
+        from ..models import build_model
+        from ..launch.steps import build_serve_step
+
+        cfg = tiny_config(arch) if tiny else get_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed))
+        hidden_step = jax.jit(build_serve_step(model, return_hidden=True))
+
+        rng = np.random.default_rng(seed)
+        max_len = prompt_len + gen + 1
+        cache = model.init_cache(batch, max_len)
+        prompts = rng.integers(1, cfg.vocab_size, (batch, prompt_len))
+
+        # prefill via the decode path (cache-consistent; fine at demo
+        # scale — the coded rounds are the generation steps' projections)
+        for t in range(prompt_len - 1):
+            _, cache = hidden_step(params, cache,
+                                   jnp.asarray(prompts[:, t:t + 1],
+                                               jnp.int32), t)
+
+        # the projection the coded rounds compute: logits = h @ W with
+        # W (H, V); the coded job runs row-block-coded A=W^T against h^T.
+        # greedy argmax is invariant under the monotone logit softcap, so
+        # the coded path skips it.
+        emb = params["embedding"]
+        wt = np.asarray(emb["table"] if cfg.tie_embeddings
+                        else emb["unembed"].T, np.float32)       # (V, H)
+
+        tok = jnp.asarray(prompts[:, -1:], jnp.int32)
+        out_tokens, stats_list, hiddens = [], [], []
+        round0 = self._round            # each serve step is a fresh straggler
+        self._round += gen              # draw, like every other session round
+        t0 = time.perf_counter()
+        for t in range(gen):
+            hidden, cache = hidden_step(params, cache, tok,
+                                        prompt_len - 1 + t)
+            h = np.asarray(hidden[:, -1, :], np.float32)         # (B, H)
+            prod, stats = self.engine.matmul(wt, h.T, round_idx=round0 + t)
+            logits = prod.T                                      # (B, V)
+            nxt = logits.argmax(-1).astype(np.int32)
+            stats_list.append(stats)
+            out_tokens.append(nxt)
+            if check_agreement:
+                hiddens.append(h)
+            tok = jnp.asarray(nxt[:, None], jnp.int32)
+        wall = time.perf_counter() - t0
+        tokens = (np.stack(out_tokens, axis=1) if out_tokens
+                  else np.zeros((batch, 0), np.int32))           # (B, gen)
+        # fidelity diagnostic OUTSIDE the timed window — it redoes the
+        # whole exact unembed GEMM, so production-shaped callers pass
+        # check_agreement=False (agreement reports NaN)
+        agree = 1.0 if check_agreement else float("nan")
+        if hiddens:
+            exact_tok = np.stack([h @ wt.T for h in hiddens],
+                                 axis=1).argmax(-1)              # (B, gen)
+            agree = float((tokens == exact_tok).mean())
+        self.round_stats.extend(stats_list)
+        return ServeReport(
+            tokens=tokens, step_stats=stats_list, wall_s=wall,
+            tok_s=batch * gen / max(wall, 1e-9),
+            t_budget=self.spec.wait.t_budget,
+            argmax_agreement=agree)

@@ -1,0 +1,490 @@
+"""The declarative front door: one frozen, serializable ``ClusterSpec``.
+
+The paper's pitch is a *single* scheme buying resilience, privacy and
+security simultaneously — the user-facing surface should read the same
+way.  A :class:`ClusterSpec` names every choice the whole stack consumes
+(coding scheme, privacy level, transmission crypto, wait policy,
+straggler environment, transport backend) as nested frozen dataclasses
+with validation and a lossless ``to_dict``/``from_dict`` round trip, so
+one JSON blob pins down an entire experiment:
+
+    spec = ClusterSpec(
+        code=CodeSpec(scheme="spacdc", n_workers=20, k_blocks=5),
+        privacy=PrivacySpec(t_colluding=2, noise_scale=0.05),
+        wait=WaitSpec(policy="deadline", t_budget=0.005),
+    )
+    with Session(spec) as s:
+        out, stats = s.matmul(a, b)
+
+Every workload (matmul, anytime curves, MLP training, serving) and every
+transport (virtual clock, threads, a future socket backend) plugs into
+the same spec — swapping ``TransportSpec(backend="threads")`` for
+``"virtual"`` changes nothing else.  The legacy ``DistributedMatmul``
+constructor knobs map 1:1 onto spec fields via
+:meth:`ClusterSpec.from_legacy_kwargs` (see the README migration table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Mapping, Optional
+
+from ..runtime.wait_policy import (Deadline, ErrorTarget, FirstK,
+                                   FixedQuantile, WaitPolicy)
+from ..runtime.straggler import StragglerModel
+
+__all__ = [
+    "CodeSpec", "PrivacySpec", "CryptoSpec", "WaitSpec", "StragglerSpec",
+    "TransportSpec", "ClusterSpec",
+]
+
+_TRANSPORT_BACKENDS = ("virtual", "threads")
+_CIPHER_MODES = ("stream", "paper")
+_ENCRYPT_MODES = (None, "modeled", "real")
+_WAIT_POLICIES = ("fixed_quantile", "first_k", "deadline", "error_target")
+
+
+def _as_dict(obj) -> Dict[str, Any]:
+    """dataclasses.asdict, with Mapping fields coerced to plain dicts."""
+    out = {}
+    for f in dataclasses.fields(obj):
+        v = getattr(obj, f.name)
+        if dataclasses.is_dataclass(v):
+            v = v.to_dict()
+        elif isinstance(v, Mapping):
+            v = dict(v)
+        out[f.name] = v
+    return out
+
+
+def _from_dict(cls, d: Mapping, path: str):
+    """Strict dataclass construction: unknown keys are an error (a typo'd
+    spec field silently falling back to a default is how experiments lie)."""
+    if not isinstance(d, Mapping):
+        raise TypeError(f"{path}: expected a mapping, got {type(d).__name__}")
+    known = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - known)
+    if unknown:
+        raise ValueError(f"{path}: unknown key(s) {unknown}; valid keys: "
+                         f"{sorted(known)}")
+    return cls(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
+class CodeSpec:
+    """Which code runs the rounds, and at what block geometry.
+
+    ``extra`` carries scheme-specific factory kwargs (``deg_f`` for LCC,
+    ``p``/``q`` for Polynomial, encoder-side ``fh_degree`` for SPACDC, ...)
+    straight through ``repro.core.registry.build``.
+    """
+    scheme: str = "spacdc"
+    n_workers: int = 8
+    k_blocks: int = 4
+    fused: Optional[bool] = None    # None = auto (fused when stable)
+    use_kernel: Optional[bool] = None  # None = auto (Pallas on TPU)
+    extra: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.n_workers < 1 or self.k_blocks < 1:
+            raise ValueError(f"code: need n_workers >= 1 and k_blocks >= 1, "
+                             f"got N={self.n_workers}, K={self.k_blocks}")
+        object.__setattr__(self, "extra", dict(self.extra))
+
+    def to_dict(self):
+        return _as_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "CodeSpec":
+        return _from_dict(cls, d, "code")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrivacySpec:
+    """The paper's information-theoretic privacy knob: T noise blocks
+    tolerate T colluding workers; ``noise_scale`` is their std (the
+    field-uniform analogue — see ``core.privacy.gaussian_mi_bound``)."""
+    t_colluding: int = 0
+    noise_scale: float = 1.0
+
+    def __post_init__(self):
+        if self.t_colluding < 0:
+            raise ValueError("privacy: t_colluding must be >= 0")
+        if self.noise_scale < 0:
+            raise ValueError("privacy: noise_scale must be >= 0")
+
+    def to_dict(self):
+        return _as_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "PrivacySpec":
+        return _from_dict(cls, d, "privacy")
+
+
+@dataclasses.dataclass(frozen=True)
+class CryptoSpec:
+    """Transmission security (MEA-ECC, paper §IV).
+
+    ``encrypt``: ``None`` (off), ``"modeled"`` (cost priced from a measured
+    per-element rate) or ``"real"`` (genuine limb-vectorized ciphertexts on
+    every master↔worker transfer, measured ``crypto_s``).  ``cipher_mode``:
+    ``"stream"`` (per-message nonces — the hardened default) or ``"paper"``
+    (the paper-faithful single-mask construction)."""
+    encrypt: Optional[str] = None
+    cipher_mode: str = "stream"
+
+    def __post_init__(self):
+        # accept the legacy DistributedMatmul spellings at the boundary
+        mode = {False: None, True: "modeled"}.get(self.encrypt, self.encrypt)
+        object.__setattr__(self, "encrypt", mode)
+        if self.encrypt not in _ENCRYPT_MODES:
+            raise ValueError(f"crypto: encrypt must be one of "
+                             f"{_ENCRYPT_MODES}, got {self.encrypt!r}")
+        if self.cipher_mode not in _CIPHER_MODES:
+            raise ValueError(f"crypto: cipher_mode must be one of "
+                             f"{_CIPHER_MODES}, got {self.cipher_mode!r}")
+
+    def to_dict(self):
+        return _as_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "CryptoSpec":
+        return _from_dict(cls, d, "crypto")
+
+
+@dataclasses.dataclass(frozen=True)
+class WaitSpec:
+    """When the master stops waiting and decodes — plus the decode-side
+    Floater–Hormann degree, promoted here from an internal proxy detail.
+
+    ``fh_degree`` is the blending degree of the *embedded-pair* decoder
+    (the second, higher-order decode whose disagreement with the Berrut
+    decode estimates its error in-trace).  Default 2: the BENCH_anytime
+    parity-oscillation notes — raw Berrut per-prefix errors oscillate with
+    responder-count parity, and the d=2 Floater–Hormann interpolant is the
+    lowest degree whose disagreement tracks the oscillation envelope
+    instead of riding it (d=0 is Berrut itself and estimates nothing;
+    d=1 still inherits most of the parity swing).
+    """
+    policy: str = "fixed_quantile"
+    k: Optional[int] = None            # first_k: decode at the k-th arrival
+    t_budget: Optional[float] = None   # deadline: seconds from round start
+    eps: Optional[float] = None        # error_target: proxy threshold
+    min_prefix: int = 4                # error_target: proxy warm-up guard
+    fh_degree: int = 2                 # embedded-pair proxy decoder degree
+
+    def __post_init__(self):
+        if self.policy not in _WAIT_POLICIES:
+            raise ValueError(f"wait: policy must be one of {_WAIT_POLICIES}, "
+                             f"got {self.policy!r}")
+        if self.policy == "first_k" and (self.k is None or self.k < 1):
+            raise ValueError("wait: first_k needs k >= 1")
+        if self.policy == "deadline" and (self.t_budget is None or
+                                          self.t_budget <= 0):
+            raise ValueError("wait: deadline needs t_budget > 0 seconds")
+        if self.policy == "error_target" and (self.eps is None or
+                                              self.eps <= 0):
+            raise ValueError("wait: error_target needs eps > 0")
+        # a parameter belonging to a DIFFERENT policy is a typo'd spec
+        # (e.g. policy="deadline" with eps set almost certainly meant
+        # error_target) — reject it rather than silently ignore it
+        owners = {"k": "first_k", "t_budget": "deadline",
+                  "eps": "error_target"}
+        for param, owner in owners.items():
+            if getattr(self, param) is not None and self.policy != owner:
+                raise ValueError(
+                    f"wait: {param}= belongs to policy {owner!r}, not "
+                    f"{self.policy!r}")
+        if self.fh_degree < 0:
+            raise ValueError("wait: fh_degree must be >= 0")
+        if self.policy == "error_target" and self.fh_degree < 1:
+            # d=0 Floater–Hormann IS Berrut: the embedded pair degenerates,
+            # the proxy reads 0 everywhere, and ErrorTarget stops blindly
+            raise ValueError("wait: error_target needs fh_degree >= 1 "
+                             "(d=0 is the Berrut decode itself — the "
+                             "embedded-pair proxy would estimate nothing)")
+
+    def build(self) -> WaitPolicy:
+        """The strategy object the round scheduler consumes."""
+        if self.policy == "first_k":
+            return FirstK(self.k)
+        if self.policy == "deadline":
+            return Deadline(self.t_budget)
+        if self.policy == "error_target":
+            return ErrorTarget(self.eps, min_prefix=self.min_prefix)
+        return FixedQuantile()
+
+    @classmethod
+    def from_policy(cls, policy: WaitPolicy,
+                    fh_degree: int = 2) -> Optional["WaitSpec"]:
+        """Spec form of a known policy instance, or None for custom
+        subclasses (which stay object-only and can't serialize)."""
+        if type(policy) is FixedQuantile:
+            return cls(fh_degree=fh_degree)
+        if type(policy) is FirstK:
+            return cls(policy="first_k", k=policy.k, fh_degree=fh_degree)
+        if type(policy) is Deadline:
+            return cls(policy="deadline", t_budget=policy.t_budget,
+                       fh_degree=fh_degree)
+        if type(policy) is ErrorTarget:
+            return cls(policy="error_target", eps=policy.eps,
+                       min_prefix=policy.min_prefix, fh_degree=fh_degree)
+        return None
+
+    def to_dict(self):
+        return _as_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "WaitSpec":
+        return _from_dict(cls, d, "wait")
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerSpec:
+    """The injected straggler environment (paper §VII-B sleep() delays;
+    ``pareto``/``markov`` are the beyond-paper heavy-tail/bursty modes).
+    ``seed=None`` follows the cluster seed."""
+    n_stragglers: int = 0
+    delay_s: float = 0.02
+    jitter_scale: float = 0.002
+    mode: str = "paper"
+    pareto_shape: float = 1.5
+    p_fail: float = 0.1
+    p_recover: float = 0.5
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if self.n_stragglers < 0:
+            raise ValueError("straggler: n_stragglers must be >= 0")
+        if self.mode not in ("paper", "pareto", "markov"):
+            raise ValueError(f"straggler: unknown mode {self.mode!r} "
+                             "(paper | pareto | markov)")
+
+    def build(self, n_workers: int, seed: int) -> StragglerModel:
+        return StragglerModel(
+            n_workers, self.n_stragglers, delay_s=self.delay_s,
+            jitter_scale=self.jitter_scale,
+            seed=self.seed if self.seed is not None else seed,
+            mode=self.mode, pareto_shape=self.pareto_shape,
+            p_fail=self.p_fail, p_recover=self.p_recover)
+
+    @classmethod
+    def from_model(cls, m: StragglerModel) -> "StragglerSpec":
+        return cls(n_stragglers=m.n_stragglers, delay_s=m.delay_s,
+                   jitter_scale=m.jitter_scale, mode=m.mode,
+                   pareto_shape=m.pareto_shape, p_fail=m.p_fail,
+                   p_recover=m.p_recover, seed=m.seed)
+
+    def to_dict(self):
+        return _as_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "StragglerSpec":
+        return _from_dict(cls, d, "straggler")
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportSpec:
+    """Which backend carries master↔worker rounds.
+
+    ``"virtual"`` — the analytic virtual clock (benchmarks; Fig-3 sweeps
+    in seconds).  ``"threads"`` — real thread workers with sleep()-injected
+    delays behind the same event API (validates the clock).  A socket /
+    ``jax.distributed`` backend is a drop-in third class implementing
+    ``runtime.transport.Transport``.
+    """
+    backend: str = "virtual"
+
+    def __post_init__(self):
+        if self.backend not in _TRANSPORT_BACKENDS:
+            raise ValueError(f"transport: backend must be one of "
+                             f"{_TRANSPORT_BACKENDS}, got {self.backend!r}")
+
+    def to_dict(self):
+        return _as_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "TransportSpec":
+        return _from_dict(cls, d, "transport")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Everything a :class:`repro.api.Session` needs, in one frozen value.
+
+    ``validate()`` checks cross-field combinations the nested specs can't
+    see (pair-coded scheme × fused, threads × fused/proxy policies); the
+    Session runs it on entry, and ``from_dict`` re-checks after a
+    round trip.
+    """
+    code: CodeSpec = dataclasses.field(default_factory=CodeSpec)
+    privacy: PrivacySpec = dataclasses.field(default_factory=PrivacySpec)
+    crypto: CryptoSpec = dataclasses.field(default_factory=CryptoSpec)
+    wait: WaitSpec = dataclasses.field(default_factory=WaitSpec)
+    straggler: StragglerSpec = dataclasses.field(
+        default_factory=StragglerSpec)
+    transport: TransportSpec = dataclasses.field(
+        default_factory=TransportSpec)
+    seed: int = 0
+    pipeline_encode: bool = False
+
+    # ------------------------------------------------------------ validate
+    def validate(self, scheme=None) -> "ClusterSpec":
+        """Cross-field validation; returns self so call sites can chain.
+
+        Builds the scheme through the registry (cheap — coding matrices at
+        these N are tiny) to check combinations that depend on scheme
+        capabilities rather than names; a caller that already built it
+        passes it in.
+        """
+        if scheme is None:
+            scheme = self.build_scheme()
+        supports_fused = bool(getattr(scheme, "supports_fused", False))
+        if self.code.fused and not supports_fused:
+            raise ValueError(
+                f"{self.code.scheme!r} has no fused round path (pair-coded "
+                "or non-linear encode) — drop code.fused=True")
+        if self.transport.backend == "threads":
+            if self.code.fused:
+                raise ValueError(
+                    "transport 'threads' runs the event-driven loop round; "
+                    "the fused single-dispatch path is virtual-clock only — "
+                    "drop code.fused=True")
+            if self.wait.policy == "error_target":
+                raise ValueError(
+                    "error_target needs the virtual clock's batched prefix "
+                    "pipeline (real-thread mode validates the clock) — use "
+                    "transport 'virtual'")
+        if (self.wait.policy == "first_k" and
+                self.wait.k > self.code.n_workers):
+            raise ValueError(f"wait: first_k k={self.wait.k} exceeds "
+                             f"n_workers={self.code.n_workers}")
+        # NOTE: error_target × crypto "real" is a supported combination —
+        # the staged real round runs the 2-dispatch anytime pipeline split
+        # at its wire boundaries (see RoundEngine._matmul_anytime_real).
+        return self
+
+    def build_scheme(self):
+        """Construct the coding scheme this spec names (via the registry)."""
+        from ..core import registry
+        return registry.build(
+            self.code.scheme, n_workers=self.code.n_workers,
+            k_blocks=self.code.k_blocks,
+            t_colluding=self.privacy.t_colluding,
+            noise_scale=self.privacy.noise_scale, seed=self.seed,
+            use_kernel=self.code.use_kernel, **dict(self.code.extra))
+
+    # --------------------------------------------------------- serialization
+    def to_dict(self) -> Dict[str, Any]:
+        return _as_dict(self)
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "ClusterSpec":
+        if not isinstance(d, Mapping):
+            raise TypeError(f"ClusterSpec.from_dict: expected a mapping, "
+                            f"got {type(d).__name__}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"ClusterSpec: unknown key(s) {unknown}; "
+                             f"valid keys: {sorted(known)}")
+        nested = {"code": CodeSpec, "privacy": PrivacySpec,
+                  "crypto": CryptoSpec, "wait": WaitSpec,
+                  "straggler": StragglerSpec, "transport": TransportSpec}
+        kw = {}
+        for key, val in d.items():
+            sub = nested.get(key)
+            kw[key] = sub.from_dict(val) if sub is not None else val
+        # deserialized configs are untrusted — reject cross-field-invalid
+        # combinations here, not at first use
+        return cls(**kw).validate()
+
+    @classmethod
+    def from_json(cls, s: str) -> "ClusterSpec":
+        return cls.from_dict(json.loads(s))
+
+    # -------------------------------------------------------------- legacy
+    @classmethod
+    def from_legacy_kwargs(cls, scheme_name: str, n_workers: int,
+                           k_blocks: int, t_colluding: int = 0,
+                           straggler: Optional[StragglerModel] = None,
+                           n_stragglers: int = 0,
+                           encrypt: Any = False, seed: int = 0,
+                           fused: Optional[bool] = None,
+                           cipher_mode: str = "stream",
+                           wait_policy: Any = None,
+                           pipeline_encode: bool = False,
+                           proxy_fh_degree: int = 2,
+                           **scheme_kwargs) -> "ClusterSpec":
+        """The old 14-knob ``DistributedMatmul`` surface, spec-ified.
+
+        This is the migration table in executable form (README "Public
+        API"): every legacy kwarg lands in exactly one spec field.  A
+        custom ``WaitPolicy`` subclass has no spec form — callers keep
+        passing the instance alongside (see ``DistributedMatmul``).
+        """
+        scheme_kwargs = dict(scheme_kwargs)
+        noise_scale = scheme_kwargs.pop("noise_scale", 1.0)
+        code = CodeSpec(scheme=scheme_name, n_workers=n_workers,
+                        k_blocks=k_blocks, fused=fused,
+                        use_kernel=scheme_kwargs.pop("use_kernel", None),
+                        extra=scheme_kwargs)
+        if straggler is not None:
+            stragg = StragglerSpec.from_model(straggler)
+        else:
+            stragg = StragglerSpec(n_stragglers=n_stragglers)
+        if isinstance(wait_policy, WaitSpec):
+            # already declarative — keep it verbatim (resolve_policy would
+            # round-trip through the built policy object and lose
+            # fh_degree, which policy instances don't carry)
+            wait = wait_policy
+        else:
+            from ..runtime.wait_policy import resolve_policy
+            wait = WaitSpec.from_policy(resolve_policy(wait_policy),
+                                        fh_degree=proxy_fh_degree)
+            if wait is None:
+                wait = WaitSpec(fh_degree=proxy_fh_degree)
+        return cls(code=code,
+                   privacy=PrivacySpec(t_colluding=t_colluding,
+                                       noise_scale=noise_scale),
+                   crypto=CryptoSpec(encrypt=encrypt,
+                                     cipher_mode=cipher_mode),
+                   wait=wait, straggler=stragg,
+                   transport=TransportSpec(), seed=seed,
+                   pipeline_encode=pipeline_encode)
+
+    # -------------------------------------------------------------- presets
+    @classmethod
+    def paper_fig3(cls, n_stragglers: int = 7) -> "ClusterSpec":
+        """The paper's Fig-3 training apparatus: N=30, K=24, T=3 SPACDC
+        under S injected stragglers (S ∈ {0, 3, 5, 7} in the figure)."""
+        return cls(code=CodeSpec(scheme="spacdc", n_workers=30, k_blocks=24),
+                   privacy=PrivacySpec(t_colluding=3),
+                   straggler=StragglerSpec(n_stragglers=n_stragglers))
+
+    @classmethod
+    def anytime_bench(cls, n_stragglers: int = 7) -> "ClusterSpec":
+        """The BENCH_anytime SPACDC operating point: N=30, K=6, T=2,
+        noise 0.05 — the error-vs-latency curve's smooth-workload trace."""
+        return cls(code=CodeSpec(scheme="spacdc", n_workers=30, k_blocks=6),
+                   privacy=PrivacySpec(t_colluding=2, noise_scale=0.05),
+                   straggler=StragglerSpec(n_stragglers=n_stragglers))
+
+    @classmethod
+    def serve_deadline(cls, t_budget: float = 0.008, n_workers: int = 8,
+                       k_blocks: int = 4, t_colluding: int = 1,
+                       n_stragglers: int = 2,
+                       backend: str = "virtual") -> "ClusterSpec":
+        """Deadline-bounded coded serving: every generation step's
+        projection matmul decodes at (or before) ``t_budget`` seconds."""
+        return cls(code=CodeSpec(scheme="spacdc", n_workers=n_workers,
+                                 k_blocks=k_blocks),
+                   privacy=PrivacySpec(t_colluding=t_colluding,
+                                       noise_scale=0.05),
+                   wait=WaitSpec(policy="deadline", t_budget=t_budget),
+                   straggler=StragglerSpec(n_stragglers=n_stragglers),
+                   transport=TransportSpec(backend=backend))

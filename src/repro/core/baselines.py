@@ -355,8 +355,8 @@ class BACCScheme(_SchemeBase):
     def prefix_decode_weights(self, arrival_order):
         return self._code.prefix_decode_weights(arrival_order)
 
-    def anytime_proxy_weights(self, arrival_order):
-        return self._code.anytime_proxy_weights(arrival_order)
+    def anytime_proxy_weights(self, arrival_order, fh_degree: int = 2):
+        return self._code.anytime_proxy_weights(arrival_order, fh_degree)
 
 
 # --------------------------------------------------------------------------

@@ -260,15 +260,17 @@ class SchemeDefaults:
             ready[p - 1] = True
         return weights, ready
 
-    def anytime_proxy_weights(self, arrival_order):
+    def anytime_proxy_weights(self, arrival_order, fh_degree: int = 2):
         """Optional second decoder stack for the embedded-pair error proxy
         (``(E, K, N)`` weights + ``(E,)`` valid flags), or None.
 
         Rateless schemes return a higher-order decode here (SPACDC:
-        Floater–Hormann) whose disagreement with the primary decode
-        estimates the primary's error in-trace.  Threshold schemes decode
-        exactly once past their threshold, so they have no embedded pair:
-        the scheduler prices their prefixes 0 (ready) / inf (not).
+        Floater–Hormann of blending degree ``fh_degree`` — a first-class
+        runtime config, ``repro.api.WaitSpec.fh_degree``) whose
+        disagreement with the primary decode estimates the primary's
+        error in-trace.  Threshold schemes decode exactly once past their
+        threshold, so they have no embedded pair: the scheduler prices
+        their prefixes 0 (ready) / inf (not).
         """
         return None
 

@@ -1,9 +1,17 @@
-"""Batched serving driver: continuous greedy decode over a request batch
-with a step-level KV cache (tiny configs run on CPU; full configs lower on
-the production mesh via dryrun.py).
+"""Batched serving driver — coded by default.
+
+Continuous greedy decode over a request batch with a step-level KV cache;
+each generation step's output projection runs as a coded round under a
+``Deadline`` wait policy (fixed latency budget, best-effort accuracy —
+the deadline-bounded coded inference the ROADMAP asks for).  The whole
+serving configuration is one declarative ``repro.api.ClusterSpec``;
+``--transport threads`` swaps the round backend with no other change.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --tiny \
-      --batch 4 --prompt-len 16 --gen 32
+      --batch 4 --prompt-len 16 --gen 32 --deadline-ms 8
+
+``--uncoded`` keeps the original plain decode loop (no coded rounds) for
+comparison.
 """
 
 from __future__ import annotations
@@ -20,16 +28,8 @@ from ..models import build_model
 from .steps import build_serve_step
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-7b")
-    ap.add_argument("--tiny", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
+def uncoded_loop(args):
+    """The pre-spec plain serving loop (kept as the uncoded baseline)."""
     cfg = tiny_config(args.arch) if args.tiny else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
@@ -41,9 +41,9 @@ def main(argv=None):
     prompts = rng.integers(1, cfg.vocab_size, (args.batch, args.prompt_len))
 
     # prefill via the decode path (cache-consistent; fine at demo scale)
-    tok = jnp.asarray(prompts[:, :1], jnp.int32)
     for t in range(args.prompt_len - 1):
-        _, cache = serve(params, cache, jnp.asarray(prompts[:, t:t+1], jnp.int32), t)
+        _, cache = serve(params, cache,
+                         jnp.asarray(prompts[:, t:t + 1], jnp.int32), t)
 
     tok = jnp.asarray(prompts[:, -1:], jnp.int32)
     out = []
@@ -54,9 +54,56 @@ def main(argv=None):
     dt = time.time() - t0
     gen = np.stack(out, axis=1)
     print(f"generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
+          f"({args.batch * args.gen / dt:.1f} tok/s) [uncoded]")
     for b in range(min(args.batch, 2)):
         print(f"  req{b}: {gen[b][:16].tolist()}...")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--uncoded", action="store_true",
+                    help="plain decode loop, no coded rounds")
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--k-blocks", type=int, default=4)
+    ap.add_argument("--stragglers", type=int, default=2)
+    ap.add_argument("--deadline-ms", type=float, default=8.0,
+                    help="per-step coded decode budget (virtual ms)")
+    ap.add_argument("--transport", default="virtual",
+                    choices=("virtual", "threads"))
+    args = ap.parse_args(argv)
+
+    if args.uncoded:
+        return uncoded_loop(args)
+
+    from ..api import ClusterSpec, Session
+    spec = ClusterSpec.serve_deadline(
+        t_budget=args.deadline_ms * 1e-3, n_workers=args.workers,
+        k_blocks=args.k_blocks, n_stragglers=args.stragglers,
+        backend=args.transport)
+    with Session(spec) as s:
+        rep = s.serve(arch=args.arch, tiny=args.tiny, batch=args.batch,
+                      prompt_len=args.prompt_len, gen=args.gen,
+                      seed=args.seed)
+    waits = [st.decode_at_s * 1e3 for st in rep.step_stats]
+    print(f"generated {args.batch}x{args.gen} tokens in {rep.wall_s:.2f}s "
+          f"({rep.tok_s:.1f} tok/s) [coded, {spec.code.scheme} "
+          f"N={spec.code.n_workers} K={spec.code.k_blocks}, "
+          f"{args.transport} transport]")
+    if waits:
+        print(f"  deadline {args.deadline_ms:.1f} ms: "
+              f"{rep.steps_within_budget}/{len(rep.step_stats)} steps "
+              f"decoded in budget (decode at {min(waits):.2f}-"
+              f"{max(waits):.2f} ms, "
+              f"argmax agreement {rep.argmax_agreement:.2f})")
+    for b in range(min(args.batch, 2)):
+        print(f"  req{b}: {rep.tokens[b][:16].tolist()}...")
     return 0
 
 

@@ -236,18 +236,28 @@ def build_mask_fn(gcode: BerrutGradientCode | dict, straggler,
     return policy_mask_fn(gcode._code, straggler, policy=wait_policy)
 
 
-def build_serve_step(model):
-    """serve_step(params, cache, tokens, pos[, mrope]) -> (next_tokens, cache)."""
+def build_serve_step(model, *, return_hidden: bool = False):
+    """serve_step(params, cache, tokens, pos[, mrope]) -> (next_tokens, cache).
+
+    ``return_hidden=True`` yields the pre-unembed hidden state instead of
+    sampled tokens — the coded serving path (``repro.api.Session.serve``)
+    runs the output projection as a distributed round outside the step.
+    """
 
     def serve_step(params, cache, tokens, pos, mrope_positions=None):
         kwargs = {}
         if mrope_positions is not None:
             kwargs["mrope_positions"] = mrope_positions
         if model.cfg.encoder_decoder:
-            logits, cache = model.decode_step(params, cache, tokens, pos)
+            out, cache = model.decode_step(params, cache, tokens, pos,
+                                           return_hidden=return_hidden)
         else:
-            logits, cache = model.decode_step(params, cache, tokens, pos, **kwargs)
-        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out, cache = model.decode_step(params, cache, tokens, pos,
+                                           return_hidden=return_hidden,
+                                           **kwargs)
+        if return_hidden:
+            return out, cache
+        nxt = jnp.argmax(out[:, -1:], axis=-1).astype(jnp.int32)
         return nxt, cache
 
     return serve_step

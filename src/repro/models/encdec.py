@@ -158,7 +158,8 @@ class EncDecLM:
         return jax.tree.map(lambda s: P(*((None,) + tuple(s))), one,
                             is_leaf=lambda s: isinstance(s, P))
 
-    def decode_step(self, params, cache, tokens, pos):
+    def decode_step(self, params, cache, tokens, pos, *,
+                    return_hidden: bool = False):
         cfg = self.cfg
         cd = dtype_of(cfg, "compute")
         x = embed(params["embedding"], tokens, cfg)
@@ -183,4 +184,8 @@ class EncDecLM:
 
         x, new_cache = jax.lax.scan(body, x, (params["decoder"], cache))
         x = apply_norm(params["final_norm"], x, cfg)
+        if return_hidden:
+            # pre-unembed hidden state — the coded serving path runs the
+            # output projection as a distributed round (Session.serve)
+            return x, new_cache
         return unembed(params["embedding"], x, cfg), new_cache

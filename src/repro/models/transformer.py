@@ -370,8 +370,12 @@ class TransformerLM:
             is_leaf=lambda s: isinstance(s, P))
         return specs
 
-    def decode_step(self, params, cache, tokens, pos, *, mrope_positions=None):
-        """tokens (B,1), pos scalar -> (logits (B,1,V), new cache)."""
+    def decode_step(self, params, cache, tokens, pos, *, mrope_positions=None,
+                    return_hidden: bool = False):
+        """tokens (B,1), pos scalar -> (logits (B,1,V), new cache);
+        ``return_hidden`` yields the pre-unembed hidden state instead of
+        logits (the coded serving path runs the output projection as a
+        distributed round — see ``repro.api.Session.serve``)."""
         cfg = self.cfg
         x = embed(params["embedding"], tokens, cfg)
         new_pre = []
@@ -394,8 +398,11 @@ class TransformerLM:
         x, new_groups = jax.lax.scan(group_body, x,
                                      (params["groups"], cache["groups"]))
         x = apply_norm(params["final_norm"], x, cfg)
+        new_cache = {"prelude": new_pre, "groups": new_groups}
+        if return_hidden:
+            return x, new_cache
         logits = unembed(params["embedding"], x, cfg)
-        return logits, {"prelude": new_pre, "groups": new_groups}
+        return logits, new_cache
 
 
 def softmax_xent(logits, targets):

@@ -3,6 +3,9 @@ from .wait_policy import (ArrivalEvent, Deadline, ErrorTarget, FirstK,
                           FixedQuantile, WaitPolicy, resolve_policy)
 from .scheduler import (AnytimePoint, EncodePipeline, RoundPlan,
                         plan_round, policy_mask_fn, virtual_events)
+from .transport import (ThreadTransport, Transport, VirtualClockTransport,
+                        build_transport)
+from .engine import RoundEngine, RoundStats
 from .master_worker import CodedMaster, WorkerPool
 
 __all__ = [
@@ -11,4 +14,6 @@ __all__ = [
     "WaitPolicy", "resolve_policy",
     "AnytimePoint", "EncodePipeline", "RoundPlan", "plan_round",
     "policy_mask_fn", "virtual_events",
+    "Transport", "VirtualClockTransport", "ThreadTransport",
+    "build_transport", "RoundEngine", "RoundStats",
 ]

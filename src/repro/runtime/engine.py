@@ -1,0 +1,887 @@
+"""The coded-round engine behind every front door.
+
+``RoundEngine`` executes coded A@B rounds for ONE declarative
+``repro.api.ClusterSpec``: scheme construction, wait policy, transport
+selection, crypto mode, straggler environment and encode pipelining all
+come off the spec.  Consumers never construct it with loose knobs:
+
+* ``repro.api.Session`` — the public context-managed surface (owns the
+  engine's lifecycle, adds ``train_step`` / ``serve``);
+* ``repro.runtime.master_worker.DistributedMatmul`` — the legacy
+  constructor, now a thin kwargs→spec shim over this engine (outputs
+  bit-identical to the pre-spec implementation, asserted in tests).
+
+Execution paths per round (unchanged semantics from the pre-spec
+runtime, plus the encrypted anytime round):
+
+* **fused**: encode → all N worker matmuls → masked decode in ONE jitted
+  dispatch, LRU-cached per shape class (virtual clock).
+* **staged real**: the same round split at its wire boundaries so genuine
+  MEA-ECC ciphertexts cross between three jitted stages.
+* **anytime** (proxy-driven policies): 2 jitted dispatches — stage 1
+  worker results, stage 2 every responder prefix decoded + embedded-pair
+  error proxies in one batched contraction.
+* **anytime real**: stage 1 split at the wire (encrypted shards out,
+  encrypted results back per arrival), stage 2 unchanged — ``ErrorTarget``
+  over genuine ciphertexts with *measured* ``crypto_s``.
+* **loop**: the per-worker oracle path (pair-coded schemes,
+  ``fused=False``, and the real-thread transport).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .scheduler import EncodePipeline, assemble_curve, plan_round, virtual_events
+from .transport import ThreadTransport, VirtualClockTransport
+from .wait_policy import (RoundContext, WaitPolicy, resolve_policy,
+                          scheme_min_responders)
+
+__all__ = ["RoundStats", "WorkerPool", "RoundEngine"]
+
+
+@dataclasses.dataclass
+class RoundStats:
+    encode_s: float
+    compute_wait_s: float
+    decode_s: float
+    crypto_s: float = 0.0
+    n_waited: int = 0
+    # modeled MEA-ECC estimate kept as a cross-check when ``crypto_s`` is a
+    # real measurement (encrypt="real"); 0 otherwise
+    crypto_modeled_s: float = 0.0
+    # --- event-driven round timeline (scheduler) -------------------------
+    policy: str = "fixed_quantile"   # wait policy that picked the prefix
+    arrivals: tuple = ()             # ((virtual_t_s, worker), ...) sorted
+    decode_at_s: float = 0.0         # virtual time the decode fired
+    pipelined_s: float = 0.0         # encode wall time hidden in the
+                                     # previous round's wait window
+
+    @property
+    def total_s(self):
+        return (self.encode_s + self.compute_wait_s + self.decode_s +
+                self.crypto_s - self.pipelined_s)
+
+
+class WorkerPool:
+    """N simulated workers behind the event-driven round API.
+
+    The pool is a facade over the two in-tree transports (see
+    ``runtime.transport``): the analytic virtual clock and the
+    real-thread backend with one long-lived executor.  ``real_threads``
+    stays a plain attribute consulted per round, so callers can flip a
+    pool between backends mid-life (the tests validating the clock do).
+    """
+
+    def __init__(self, n_workers: int, straggler, real_threads: bool = False):
+        self.n = n_workers
+        self.straggler = straggler
+        self.real_threads = real_threads
+        self._virtual = VirtualClockTransport(straggler)
+        self._threads = ThreadTransport(n_workers, straggler)
+
+    @property
+    def transport(self):
+        """The backend the next round runs on."""
+        return self._threads if self.real_threads else self._virtual
+
+    @property
+    def _executor(self):
+        # surfaced for lifecycle tests: the thread transport's executor,
+        # None when closed / never used
+        return self._threads._executor
+
+    def close(self):
+        """Shut the thread transport down (stragglers of the last round
+        included); surfaces any failure an unconsumed straggler hit after
+        its round.  Idempotent."""
+        self._threads.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def run_round(self, shards, f, round_idx: int, wait_for: int,
+                  t_compute: Optional[float] = None):
+        """shards: list of per-worker inputs (or (a,b) tuples).  Returns
+        (responder_indices, results_in_responder_order, wait_seconds).
+
+        ``t_compute`` is the virtual-clock per-task compute time; the
+        caller owns the latency model (``RoundEngine`` passes the same
+        once-per-shape timed batched call for fused and loop rounds, so
+        cross-scheme comparisons price workers identically).  Ignored in
+        real-thread mode, required otherwise.
+        """
+        if self.real_threads:
+            events, done, elapsed = self.run_round_real(
+                shards, f, round_idx, stop_after=wait_for)
+            resp = np.sort(np.asarray([e.worker for e in events[:wait_for]],
+                                      dtype=np.int64))
+            return resp, [done[i] for i in resp], elapsed
+
+        # virtual clock: only the selected responders' work actually runs
+        # (stragglers the policy never picks cost nothing)
+        if t_compute is None:
+            raise ValueError("virtual-clock run_round needs t_compute "
+                             "(see RoundEngine._worker_compute_time)")
+        handle = self._virtual.submit_round(shards, f, round_idx,
+                                            t_compute=t_compute)
+        events = list(itertools.islice(handle.events(), int(wait_for)))
+        resp = np.sort(np.asarray([e.worker for e in events],
+                                  dtype=np.int64))
+        return resp, [handle.result(i) for i in resp], float(events[-1].t)
+
+    def run_round_real(self, shards, f, round_idx: int,
+                       policy: Optional[WaitPolicy] = None, scheme=None,
+                       n_stragglers: int = 0,
+                       stop_after: Optional[int] = None):
+        """Event-driven real-thread round.
+
+        Drains the thread transport's completion stream until
+        ``policy.satisfied`` — or after ``stop_after`` arrivals when
+        given.  Returns (events_consumed, {worker: result}, elapsed_s);
+        stragglers the policy never waited for keep running and are
+        discarded.  Policies that need per-prefix error proxies
+        (ErrorTarget) are a virtual-clock feature — real mode exists to
+        validate the clock.
+        """
+        if policy is not None and policy.needs_proxy:
+            raise NotImplementedError(
+                f"{policy.name}: proxy-driven policies run on the virtual "
+                "clock (real-thread mode validates the clock)")
+        budget = getattr(policy, "t_budget", None)
+        min_ready = scheme_min_responders(scheme) if scheme is not None else 1
+        handle = self._threads.submit_round(shards, f, round_idx,
+                                            budget=budget,
+                                            min_ready=min_ready)
+        events = []
+        try:
+            for ev in handle.events():
+                events.append(ev)
+                if stop_after is not None:
+                    if len(events) >= max(int(stop_after), 1):
+                        break
+                    continue
+                if policy is not None and len(events) >= min_ready:
+                    ctx = RoundContext(scheme=scheme,
+                                       n_stragglers=n_stragglers,
+                                       events=events, min_ready=min_ready)
+                    if policy.satisfied(ctx):
+                        break
+        finally:
+            elapsed = handle.finish()
+        done = {e.worker: handle.result(e.worker) for e in events}
+        return events, done, elapsed
+
+
+class RoundEngine:
+    """Coded A@B rounds for one ``ClusterSpec`` (see module docstring).
+
+    ``straggler`` / ``policy`` accept pre-built instances for callers
+    holding objects the spec can't express (a hand-built
+    ``StragglerModel``, a custom ``WaitPolicy`` subclass) — the legacy
+    shim passes its instances straight through so outputs stay
+    bit-identical to the pre-spec runtime.
+    """
+
+    def __init__(self, spec, *, straggler=None, policy=None):
+        self.spec = spec
+        self.name = spec.code.scheme
+        self.n = spec.code.n_workers
+        self.k = spec.code.k_blocks
+        self.t = spec.privacy.t_colluding
+        mode = spec.crypto.encrypt
+        self.encrypt = mode
+        self.straggler = straggler if straggler is not None else \
+            spec.straggler.build(self.n, spec.seed)
+        self.pool = WorkerPool(
+            self.n, self.straggler,
+            real_threads=spec.transport.backend == "threads")
+        self.scheme = spec.build_scheme()
+        spec.validate(scheme=self.scheme)
+        # the decode point is a pluggable WaitPolicy; the default
+        # FixedQuantile reproduces the seed's fixed-count wait (and its
+        # responder selection) bit-identically through the event scheduler
+        self.policy = resolve_policy(policy if policy is not None
+                                     else spec.wait.build())
+        # the embedded-pair proxy decoder's Floater–Hormann degree — a
+        # first-class decode config (WaitSpec.fh_degree, default 2 from the
+        # BENCH_anytime parity-oscillation notes)
+        self.fh_degree = spec.wait.fh_degree
+        self.wait_for = self.scheme.wait_policy(self.straggler.n_stragglers)
+        # encode-of-next-round pipelining: the master hides encode wall
+        # time inside the previous round's wait window (virtual-clock
+        # accounting via RoundStats.pipelined_s); opt-in so the seed's
+        # per-round accounting stays unchanged by default
+        self._pipeline = EncodePipeline() if spec.pipeline_encode else None
+        supports = bool(getattr(self.scheme, "supports_fused", False))
+        fused = spec.code.fused
+        # default to fused only when the masked decode is also numerically
+        # sound in f32 — the pinv of an ill-conditioned (large-K Vandermonde
+        # / Lagrange) encoder silently destroys the result, so those
+        # schemes keep the exact f64 loop decode unless forced.  The
+        # real-thread transport always runs the event-driven loop round.
+        stable = bool(getattr(self.scheme, "fused_decode_stable", False))
+        self.use_fused = (supports and stable) if fused is None else bool(fused)
+        if spec.transport.backend == "threads":
+            self.use_fused = False
+        self.trace_count = 0                # jit traces of the fused round
+        self._fused_cache = collections.OrderedDict()   # shapes -> jitted fn
+        self._fused_cache_max = 8
+        self._worker_t = {}                 # shapes -> per-worker seconds
+        self._encode_t = {}                 # shapes -> encode-only seconds
+        self._crypto = None
+        self._crypto_per_elem = {}          # (dtype, mode) -> seconds/element
+        if mode is not None:
+            from ..crypto import MEAECC, generate_keypair
+            # per-element rate sample for the modeled estimate (the seed
+            # behaviour; in "real" mode it survives as a cross-check)
+            self._crypto = (MEAECC(mode=spec.crypto.cipher_mode),
+                            generate_keypair())
+        if mode == "real":
+            from ..crypto import MEAECC, generate_keypair
+            # the transport cipher: lossless bits codec + static session
+            # keys, so decrypt(encrypt(x)) is bit-identical to x and the
+            # per-message EC cost is one cached shared-point lookup.
+            # cipher_mode defaults to "stream" — on a static channel the
+            # paper's single-mask mode would reuse one mask for every
+            # message; cipher_mode="paper" stays available for studying
+            # the paper-faithful construction (see README "Security")
+            self._mea = MEAECC(mode=spec.crypto.cipher_mode, codec="bits")
+            self._master_kp = generate_keypair()
+            self._worker_kps = [generate_keypair() for _ in range(self.n)]
+            self._nonce = itertools.count(1)
+
+    def close(self):
+        """Release the pool's long-lived executor.  Idempotent — the
+        Session context manager calls this exactly once on exit, but a
+        second call is safe."""
+        self.pool.close()
+
+    # ------------------------------------------------------------- crypto
+    def _crypto_cost_per_elem(self, dtype) -> float:
+        """MEA-ECC seconds per matrix element, measured once per (dtype,
+        mode) on a 64×64 sample and cached — the cost is per-element linear.
+        A warm-up round trip runs first so jit compilation and the one-time
+        EC table builds never leak into the extrapolated rate."""
+        mea, kp = self._crypto
+        key = (str(dtype), mea.mode)
+        if key not in self._crypto_per_elem:
+            m = np.zeros((64, 64), dtype)
+            ct = mea.encrypt(m, kp.pk)          # warm: compile + tables
+            mea.decrypt(ct, kp)
+            t0 = time.perf_counter()
+            ct = mea.encrypt(m, kp.pk)
+            mea.decrypt(ct, kp)
+            self._crypto_per_elem[key] = (time.perf_counter() - t0) / m.size
+        return self._crypto_per_elem[key]
+
+    def _crypto_overhead_elems(self, total_elems: int, dtype) -> float:
+        """Modeled MEA-ECC cost: master encrypt + worker decrypt + result
+        encrypt (3 passes) over ``total_elems`` shard elements."""
+        if not self._crypto:
+            return 0.0
+        return self._crypto_cost_per_elem(dtype) * total_elems * 3
+
+    def _crypto_overhead(self, shards) -> float:
+        if not self._crypto:
+            return 0.0
+        a = shards[0][0] if isinstance(shards[0], tuple) else shards[0]
+        total_elems = sum(int(np.prod(np.shape(s[0] if isinstance(s, tuple) else s)))
+                          for s in shards)
+        # dtype off the attribute — np.asarray would round-trip the whole
+        # device array to host just to read it
+        return self._crypto_overhead_elems(total_elems,
+                                           getattr(a, "dtype", np.float32))
+
+    def _wire(self, arr: np.ndarray, sender_kp, recipient_kp) -> np.ndarray:
+        """One real master↔worker transfer: MEA-ECC encrypt to the
+        recipient's public key, decrypt with its private key at the other
+        end.  The bits codec makes the round trip bit-identical; the static
+        session keys make the per-message EC cost a cache lookup."""
+        ct = self._mea.encrypt(np.asarray(arr), recipient_kp.pk,
+                               sender=sender_kp, nonce=next(self._nonce))
+        return self._mea.decrypt(ct, recipient_kp)
+
+    # ------------------------------------------------------- fused pipeline
+    def _fused_fn(self, a_shape, b_shape, dtype):
+        """The jitted round for one shape class, LRU-cached.  The straggler
+        mask is a traced argument, so responder churn never recompiles."""
+        key = (a_shape, b_shape, dtype)
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            scheme = self.scheme
+            m, n_out = a_shape[0], b_shape[-1]
+
+            def _round(a, b, mask):
+                self.trace_count += 1      # runs at trace time only
+                decoded = scheme.fused_round(a, b, mask)
+                return scheme.reconstruct_matmul(decoded, m, n_out)
+
+            fn = jax.jit(_round)
+            self._fused_cache[key] = fn
+            if len(self._fused_cache) > self._fused_cache_max:
+                self._fused_cache.popitem(last=False)
+        else:
+            self._fused_cache.move_to_end(key)
+        return fn
+
+    def _staged_fns(self, a_shape, b_shape, dtype):
+        """The real-encryption round, split at the wire boundaries into
+        three jitted stages (encode / batched worker matmul / masked decode)
+        — each LRU-cached per shape class, so the fused path still compiles
+        once per shape class while genuine ciphertexts cross between the
+        stages.  The stages mirror ``kernels.ref.coded_matmul`` op-for-op,
+        so a real round is bit-identical to the single-dispatch round."""
+        key = ("real", a_shape, b_shape, dtype)
+        fns = self._fused_cache.get(key)
+        if fns is None:
+            scheme = self.scheme
+            m, n_out = a_shape[0], b_shape[-1]
+
+            def _encode(a):
+                self.trace_count += 1      # runs at trace time only
+                return scheme.encode(a)
+
+            def _workers(blocks, b):
+                self.trace_count += 1
+                return jnp.einsum(
+                    "nij,jk->nik", blocks.astype(jnp.float32),
+                    b.astype(jnp.float32),
+                    precision=jax.lax.Precision.HIGHEST).astype(jnp.float32)
+
+            def _decode(results, mask):
+                self.trace_count += 1
+                dec = scheme._combine(scheme.decode_matrix_masked(mask),
+                                      results)
+                return scheme.reconstruct_matmul(dec, m, n_out)
+
+            fns = (jax.jit(_encode), jax.jit(_workers), jax.jit(_decode))
+            self._fused_cache[key] = fns
+            if len(self._fused_cache) > self._fused_cache_max:
+                self._fused_cache.popitem(last=False)
+        else:
+            self._fused_cache.move_to_end(key)
+        return fns
+
+    def _worker_compute_time(self, lhs_shape, rhs_shape) -> float:
+        """Virtual-clock per-worker latency: time ONE jitted batched matmul
+        of the per-worker operand shapes (once per shape, cached) and
+        divide by N — the N workers of the real system run concurrently.
+        Both the fused and loop paths price workers through this same
+        model, so cross-scheme comparisons measure the codes, not
+        host-dispatch noise."""
+        key = (tuple(lhs_shape), tuple(rhs_shape))
+        if key not in self._worker_t:
+            lhs = jnp.zeros((self.n,) + tuple(lhs_shape), jnp.float32)
+            rhs = jnp.zeros((self.n,) + tuple(rhs_shape), jnp.float32)
+            batched = jax.jit(lambda l, r: jnp.einsum("nij,njk->nik", l, r))
+            jax.block_until_ready(batched(lhs, rhs))         # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(batched(lhs, rhs))
+            self._worker_t[key] = (time.perf_counter() - t0) / self.n
+        return self._worker_t[key]
+
+    def _round_compute_time(self, a_shape, b_shape):
+        """(block rows, per-worker virtual compute seconds) for this job."""
+        split = getattr(self.scheme, "k_blocks", self.n)
+        blk = -(-a_shape[0] // split)
+        return blk, self._worker_compute_time((blk, a_shape[1]),
+                                              (a_shape[1], b_shape[-1]))
+
+    def _virtual_round_plan(self, a_shape, b_shape, round_idx: int,
+                            proxy_fn=None):
+        """Virtual clock: the round's arrival timeline and the prefix the
+        wait policy consumes.  Shared by the fused and real-encryption
+        paths so their responder selection can never desynchronize (the
+        real round is asserted bit-identical to the unencrypted one)."""
+        blk, t_comp = self._round_compute_time(a_shape, b_shape)
+        plan = plan_round(self.scheme, self.policy,
+                          self.straggler.delays(round_idx), t_comp,
+                          self.straggler.n_stragglers, proxy_fn=proxy_fn)
+        return blk, plan
+
+    def _encode_only_time(self, a_shape) -> float:
+        """Measured wall seconds of ONE jitted encode at this shape
+        (cached).  Caps the pipelining credit on paths whose master timer
+        lumps encode with decode/reassembly: only the encode can genuinely
+        overlap the previous round's wait window — this round's decode
+        needs this round's results."""
+        key = tuple(a_shape)
+        if key not in self._encode_t:
+            fn = jax.jit(self.scheme.encode)
+            z = jnp.zeros(a_shape, jnp.float32)
+            jax.block_until_ready(fn(z))               # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(z))
+            self._encode_t[key] = time.perf_counter() - t0
+        return self._encode_t[key]
+
+    def _account_encode(self, encode_s: float, wait_s: float) -> float:
+        """Encode-pipelining credit: how much of this round's encode hid
+        in the previous round's wait window (and bank this round's)."""
+        if self._pipeline is None:
+            return 0.0
+        _, hidden = self._pipeline.charge(encode_s)
+        self._pipeline.credit(wait_s)
+        return hidden
+
+    def _stats(self, events, decode_at_s: float, **kw) -> RoundStats:
+        kw.setdefault("policy", self.policy.name)
+        kw.setdefault("arrivals", tuple((e.t, e.worker) for e in events))
+        kw.setdefault("decode_at_s", decode_at_s)
+        return RoundStats(**kw)
+
+    def _matmul_fused(self, a: jnp.ndarray, b: jnp.ndarray, round_idx: int):
+        fn = self._fused_fn(a.shape, b.shape, str(a.dtype))
+        blk, plan = self._virtual_round_plan(a.shape, b.shape, round_idx)
+        # master math (encode + decode + reassembly): one dispatch
+        t0 = time.perf_counter()
+        out = fn(a, b, jnp.asarray(plan.mask))
+        jax.block_until_ready(out)
+        t_master = time.perf_counter() - t0
+        crypto_s = self._crypto_overhead_elems(self.n * blk * a.shape[1],
+                                               np.float32)
+        hideable = (0.0 if self._pipeline is None else
+                    min(t_master, self._encode_only_time(a.shape)))
+        stats = self._stats(plan.events, plan.wait_s, encode_s=t_master,
+                            compute_wait_s=plan.wait_s, decode_s=0.0,
+                            crypto_s=crypto_s, n_waited=len(plan.responders),
+                            pipelined_s=self._account_encode(hideable,
+                                                             plan.wait_s))
+        return np.asarray(out), stats
+
+    def _staged_stage1(self, a, b, enc_fn, worker_fn):
+        """Encode, wire every coded shard to its worker (MEA-ECC), run the
+        batched worker matmul on the decrypted — bit-identical — shards.
+        The shared first half of every real-encryption round.  Returns
+        (results, master_compute_s, crypto_out_s); ``results`` is a
+        writable numpy copy so responder slots can be overwritten with
+        their decrypted wire payloads."""
+        t0 = time.perf_counter()
+        enc = np.asarray(enc_fn(a))                      # (N, blk, d)
+        t_enc = time.perf_counter() - t0
+        # wire out: each worker receives (and decrypts) its coded shard
+        t0 = time.perf_counter()
+        shards = np.stack([self._wire(enc[i], self._master_kp,
+                                      self._worker_kps[i])
+                           for i in range(self.n)])
+        crypto_out = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        results = np.array(worker_fn(jnp.asarray(shards), b))
+        t_enc += time.perf_counter() - t0
+        return results, t_enc, crypto_out
+
+    def _proxy_stop(self, events, prox) -> int:
+        """The proxy-driven policy's stop prefix for one round timeline."""
+        ctx = RoundContext(scheme=self.scheme,
+                           n_stragglers=self.straggler.n_stragglers,
+                           events=events,
+                           min_ready=scheme_min_responders(self.scheme),
+                           proxies=prox)
+        return int(self.policy.stop_index(ctx))
+
+    def _matmul_real(self, a: jnp.ndarray, b: jnp.ndarray, round_idx: int):
+        """The fused round with genuine transmission security: every shard
+        is MEA-ECC-encrypted to its worker and decrypted there, every
+        responder's product is encrypted back to the master — ``crypto_s``
+        is the *measured* wall time of those transfers (the modeled
+        estimate rides along in ``crypto_modeled_s`` as a cross-check).
+        The bits-codec transport is lossless, so the round output is
+        bit-identical to the unencrypted round."""
+        enc_fn, worker_fn, decode_fn = self._staged_fns(a.shape, b.shape,
+                                                        str(a.dtype))
+        blk, plan = self._virtual_round_plan(a.shape, b.shape, round_idx)
+        resp, wait_s, mask = plan.responders, plan.wait_s, plan.mask
+        results, t_enc, crypto_s = self._staged_stage1(a, b, enc_fn,
+                                                       worker_fn)
+        # wire back: the responders' products return encrypted (stragglers
+        # never answer; their slots carry weight 0 in the masked decode)
+        t0 = time.perf_counter()
+        for i in resp:
+            results[i] = self._wire(results[i], self._worker_kps[i],
+                                    self._master_kp)
+        crypto_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out = decode_fn(jnp.asarray(results), jnp.asarray(mask))
+        jax.block_until_ready(out)
+        t_dec = time.perf_counter() - t0
+        modeled = self._crypto_overhead_elems(self.n * blk * a.shape[1],
+                                              np.float32)
+        hideable = (0.0 if self._pipeline is None else
+                    min(t_enc, self._encode_only_time(a.shape)))
+        stats = self._stats(plan.events, wait_s, encode_s=t_enc,
+                            compute_wait_s=wait_s, decode_s=t_dec,
+                            crypto_s=crypto_s, n_waited=len(resp),
+                            crypto_modeled_s=modeled,
+                            pipelined_s=self._account_encode(hideable,
+                                                             wait_s))
+        return np.asarray(out), stats
+
+    # ---------------------------------------------------- anytime pipeline
+    def _anytime_results_fn(self, a_shape, b_shape, dtype):
+        """Jitted stage 1 of the anytime round: encode + ALL N worker
+        matmuls in one ``kernels.ops.coded_matmul`` dispatch (no decode —
+        the decode point isn't known yet)."""
+        key = ("any_results", a_shape, b_shape, dtype)
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            scheme = self.scheme
+            from ..kernels.ops import coded_matmul
+            enc = jnp.asarray(scheme.fused_encoder_matrix(), jnp.float32)
+
+            def _results(a, b):
+                self.trace_count += 1      # runs at trace time only
+                return coded_matmul(enc, scheme.fused_blocks(a), b,
+                                    force_kernel=scheme.use_kernel)
+
+            fn = jax.jit(_results)
+            self._fused_cache[key] = fn
+            if len(self._fused_cache) > self._fused_cache_max:
+                self._fused_cache.popitem(last=False)
+        else:
+            self._fused_cache.move_to_end(key)
+        return fn
+
+    def _anytime_curve_fn(self, a_shape, b_shape, dtype, with_ref: bool):
+        """Jitted stage 2: EVERY responder prefix decoded in one batched
+        ``kernels.ops.prefix_decode`` contraction, plus the embedded-pair
+        error proxy (and, for curve reporting, true relative errors
+        against an in-trace A@B reference).  The per-round weight stacks
+        are runtime arguments — straggler churn never recompiles."""
+        key = ("any_curve", with_ref, a_shape, b_shape, dtype)
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            scheme = self.scheme
+            m, n_out = a_shape[0], b_shape[-1]
+
+            def _curve(results, w_lo, w_hi, valid, a, b):
+                self.trace_count += 1      # runs at trace time only
+                from ..kernels.ops import prefix_decode
+                e = w_lo.shape[0]
+                dec = prefix_decode(jnp.concatenate([w_lo, w_hi], axis=0),
+                                    results, force_kernel=scheme.use_kernel)
+                recon = jax.vmap(
+                    lambda d: scheme.reconstruct_matmul(d, m, n_out))
+                prod = recon(dec[:e])                       # (E, m, n_out)
+                prod_hi = recon(dec[e:])
+                diff = jnp.linalg.norm(
+                    (prod - prod_hi).reshape(e, -1), axis=-1)
+                den = jnp.linalg.norm(prod_hi.reshape(e, -1), axis=-1)
+                prox = jnp.where(valid > 0, diff / jnp.maximum(den, 1e-12),
+                                 jnp.inf)
+                if not with_ref:
+                    return prod, prox
+                ref = jnp.dot(a, b, precision=jax.lax.Precision.HIGHEST)
+                rel = (jnp.linalg.norm((prod - ref[None]).reshape(e, -1),
+                                       axis=-1) /
+                       jnp.maximum(jnp.linalg.norm(ref), 1e-12))
+                return prod, prox, rel
+
+            fn = jax.jit(_curve)
+            self._fused_cache[key] = fn
+            if len(self._fused_cache) > self._fused_cache_max:
+                self._fused_cache.popitem(last=False)
+        else:
+            self._fused_cache.move_to_end(key)
+        return fn
+
+    def _prefix_weight_stacks(self, events):
+        """Host-side per-prefix decode weights for one round's arrival
+        order: (w_lo, ready, w_hi, valid).  Rateless schemes supply a
+        genuine embedded pair (Berrut + Floater–Hormann at the WaitSpec's
+        ``fh_degree``); threshold schemes have no second decoder — w_hi
+        repeats w_lo with ``valid=0`` so the proxy reports inf below/at
+        threshold (their per-prefix error is 0-or-undecodable anyway)."""
+        order = [e.worker for e in events]
+        w_lo, ready = self.scheme.prefix_decode_weights(order)
+        pw = self.scheme.anytime_proxy_weights(order,
+                                               fh_degree=self.fh_degree) \
+            if hasattr(self.scheme, "anytime_proxy_weights") else None
+        if pw is None:
+            w_hi, valid = w_lo, np.zeros(len(order), np.float32)
+        else:
+            w_hi, valid = pw[0], np.asarray(pw[1], np.float32)
+        return (jnp.asarray(w_lo), np.asarray(ready, bool),
+                jnp.asarray(w_hi), jnp.asarray(valid))
+
+    def _prefix_postprocess(self, ready, prox, valid):
+        """Shared proxy cleanup: not-ready prefixes are inf; threshold
+        schemes (no embedded pair anywhere) are exact once decodable."""
+        prox = np.where(ready, np.asarray(prox, np.float64), np.inf)
+        if not np.asarray(valid).any():
+            prox = np.where(ready, 0.0, np.inf)
+        return prox
+
+    def _anytime_prefix_eval(self, a, b, round_idx: int, with_ref: bool):
+        """The shared 2-dispatch prefix pipeline behind ErrorTarget rounds
+        and ``anytime_curve``: stage 1 (encode + all worker matmuls),
+        stage 2 (every prefix decoded + embedded-pair proxies, optionally
+        true errors against an in-trace reference).
+
+        Returns (events, ready, proxies, products, rel_errs-or-None).
+        """
+        _, t_comp = self._round_compute_time(a.shape, b.shape)
+        events = virtual_events(self.straggler.delays(round_idx), t_comp)
+        w_lo, ready, w_hi, valid = self._prefix_weight_stacks(events)
+        results = self._anytime_results_fn(a.shape, b.shape,
+                                           str(a.dtype))(a, b)
+        out = self._anytime_curve_fn(a.shape, b.shape, str(a.dtype),
+                                     with_ref=with_ref)(
+            results, w_lo, w_hi, valid, a, b)
+        prod, prox = out[0], out[1]
+        rel = out[2] if with_ref else None
+        prox = self._prefix_postprocess(ready, prox, valid)
+        return events, ready, prox, prod, rel
+
+    def _matmul_anytime(self, a: jnp.ndarray, b: jnp.ndarray, round_idx: int):
+        """The proxy-driven round (ErrorTarget): run all workers' math,
+        decode every prefix in one batched dispatch, stop at the earliest
+        prefix whose embedded error estimate meets the target.  Two jitted
+        dispatches per round, both LRU-cached per shape class."""
+        blk, _ = self._round_compute_time(a.shape, b.shape)
+        t0 = time.perf_counter()
+        events, ready, prox, prod, _ = self._anytime_prefix_eval(
+            a, b, round_idx, with_ref=False)
+        stop = self._proxy_stop(events, prox)
+        out = np.asarray(prod[stop - 1])
+        jax.block_until_ready(out)
+        t_master = time.perf_counter() - t0
+        wait_s = float(events[stop - 1].t)
+        crypto_s = self._crypto_overhead_elems(self.n * blk * a.shape[1],
+                                               np.float32)
+        hideable = (0.0 if self._pipeline is None else
+                    min(t_master, self._encode_only_time(a.shape)))
+        stats = self._stats(events, wait_s, encode_s=t_master,
+                            compute_wait_s=wait_s, decode_s=0.0,
+                            crypto_s=crypto_s, n_waited=stop,
+                            pipelined_s=self._account_encode(hideable,
+                                                             wait_s))
+        return out, stats
+
+    def _matmul_anytime_real(self, a: jnp.ndarray, b: jnp.ndarray,
+                             round_idx: int):
+        """The proxy-driven round over genuine ciphertexts: the 2-dispatch
+        anytime pipeline split at its wire boundaries.
+
+        Stage 1 becomes encode → MEA-ECC wire-out (all N shards) → batched
+        worker matmul; stage 2 (the batched prefix decode + embedded-pair
+        proxies) picks the stop prefix, and the consumed arrivals' results
+        cross the wire back.  The bits codec is lossless, so proxies, stop
+        index and output are bit-identical to the unencrypted anytime
+        round.  ``crypto_s`` is the *measured* wire cost of what the
+        master actually consumed: all N shards out, plus the results of
+        the arrivals up to the stop prefix (stragglers past the stop never
+        transmit).
+        """
+        blk, t_comp = self._round_compute_time(a.shape, b.shape)
+        enc_fn, worker_fn, _ = self._staged_fns(a.shape, b.shape,
+                                                str(a.dtype))
+        events = virtual_events(self.straggler.delays(round_idx), t_comp)
+        results, t_enc, crypto_out_s = self._staged_stage1(a, b, enc_fn,
+                                                           worker_fn)
+        # stage 2: batched prefix decode + proxies.  The bits-codec wire is
+        # lossless, so running it on the pre-wire results is bit-identical
+        # to decrypting first — which lets the stop prefix be computed
+        # BEFORE the wire-back, and only the arrivals the policy actually
+        # consumed pay (and charge) the return transfer.
+        t0 = time.perf_counter()
+        w_lo, ready, w_hi, valid = self._prefix_weight_stacks(events)
+        prod, prox = self._anytime_curve_fn(a.shape, b.shape, str(a.dtype),
+                                            with_ref=False)(
+            jnp.asarray(results), w_lo, w_hi, valid, a, b)
+        prox = self._prefix_postprocess(ready, prox, valid)
+        stop = self._proxy_stop(events, prox)
+        out = np.asarray(prod[stop - 1])
+        jax.block_until_ready(out)
+        t_dec = time.perf_counter() - t0
+        # wire back the consumed arrivals (decrypt-overwrite is the
+        # identity on these bits; the measured time is the real cost)
+        t0 = time.perf_counter()
+        for ev in events[:stop]:
+            results[ev.worker] = self._wire(results[ev.worker],
+                                            self._worker_kps[ev.worker],
+                                            self._master_kp)
+        crypto_back_s = time.perf_counter() - t0
+        wait_s = float(events[stop - 1].t)
+        crypto_s = crypto_out_s + crypto_back_s
+        modeled = self._crypto_overhead_elems(self.n * blk * a.shape[1],
+                                              np.float32)
+        hideable = (0.0 if self._pipeline is None else
+                    min(t_enc, self._encode_only_time(a.shape)))
+        stats = self._stats(events, wait_s, encode_s=t_enc,
+                            compute_wait_s=wait_s, decode_s=t_dec,
+                            crypto_s=crypto_s, n_waited=stop,
+                            crypto_modeled_s=modeled,
+                            pipelined_s=self._account_encode(hideable,
+                                                             wait_s))
+        return out, stats
+
+    def anytime_curve(self, a: np.ndarray, b: np.ndarray, round_idx: int = 0):
+        """The full error-vs-latency curve of one virtual-clock round:
+        for every arrival prefix, the virtual time and the decode's true
+        relative error (inf where the scheme can't decode yet), plus the
+        in-trace embedded-pair proxy and the monotone ``best_err``
+        envelope.  Whole-curve cost: TWO jitted dispatches per shape class
+        (stage 1 worker results + stage 2 batched prefix decode), however
+        many error points the round has.
+
+        Returns a list of :class:`repro.runtime.scheduler.AnytimePoint`.
+        """
+        if not getattr(self.scheme, "supports_fused", False):
+            raise NotImplementedError(
+                f"{self.name!r}: anytime curves need a linear data-coded "
+                "scheme (prefix decode stacks)")
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        events, ready, prox, _, rel = self._anytime_prefix_eval(
+            a, b, round_idx, with_ref=True)
+        return assemble_curve(events, np.asarray(rel, np.float64), ready,
+                              prox)
+
+    # --------------------------------------------------------------- rounds
+    def matmul(self, a: np.ndarray, b: np.ndarray, round_idx: int = 0):
+        """Returns (result (m, n), RoundStats).  Result stacked over K blocks
+        for block schemes, reshaped to a's row layout.
+
+        On the fused path encode/compute/decode are one dispatch, so the
+        whole master-side wall time is reported as ``encode_s`` and
+        ``decode_s`` is 0; ``compute_wait_s`` stays the virtual-clock wait.
+        """
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        real = self.encrypt == "real"
+        if self.use_fused:
+            if self.policy.needs_proxy:
+                if real:
+                    return self._matmul_anytime_real(a, b, round_idx)
+                return self._matmul_anytime(a, b, round_idx)
+            if real:
+                return self._matmul_real(a, b, round_idx)
+            return self._matmul_fused(a, b, round_idx)
+        t0 = time.perf_counter()
+        if self.scheme.pair_coded:
+            ea, eb = self.scheme.encode_pair(a, b)
+            jax.block_until_ready((ea, eb))
+            shards = [(ea[i], eb[i]) for i in range(self.n)]
+            # jnp.asarray: no-op on the plain path's device arrays, converts
+            # the real path's decrypted numpy shards — both modes compute
+            # the worker product with the same jnp matmul on the same bits
+            f = lambda ab: np.asarray(jnp.asarray(ab[0]) @ jnp.asarray(ab[1]))
+            lhs_shape, rhs_shape = ea.shape[1:], eb.shape[1:]
+        else:
+            enc = self.scheme.encode(a)
+            jax.block_until_ready(enc)
+            shards = [np.asarray(enc[i]) for i in range(self.n)]
+            f = lambda s: np.asarray(jnp.asarray(s) @ b)
+            lhs_shape, rhs_shape = enc.shape[1:], b.shape
+        t_enc = time.perf_counter() - t0
+
+        crypto_s = 0.0
+        if real:
+            # wire out: every worker decrypts bit-identical shard bytes
+            t0 = time.perf_counter()
+            shards = [
+                tuple(self._wire(part, self._master_kp, self._worker_kps[i])
+                      for part in s) if isinstance(s, tuple)
+                else self._wire(s, self._master_kp, self._worker_kps[i])
+                for i, s in enumerate(shards)]
+            crypto_s += time.perf_counter() - t0
+
+        t_comp = self._worker_compute_time(lhs_shape, rhs_shape)
+        resp, results, wait_s, plan = self._loop_round(shards, f, round_idx,
+                                                       t_comp)
+        if real:
+            # wire back: responders encrypt their products to the master
+            t0 = time.perf_counter()
+            results = [self._wire(r, self._worker_kps[i], self._master_kp)
+                       for i, r in zip(resp, results)]
+            crypto_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        dec = self.scheme.decode(jnp.asarray(np.stack(results)), list(resp))
+        out = np.asarray(self.scheme.reconstruct_matmul(dec, a.shape[0],
+                                                        b.shape[-1]))
+        t_dec = time.perf_counter() - t0
+        modeled = self._crypto_overhead(shards)
+        stats = RoundStats(t_enc, wait_s, t_dec,
+                           crypto_s if real else modeled, len(resp),
+                           crypto_modeled_s=modeled if real else 0.0,
+                           policy=self.policy.name,
+                           arrivals=tuple((e.t, e.worker)
+                                          for e in plan) if plan else (),
+                           decode_at_s=wait_s,
+                           pipelined_s=self._account_encode(t_enc, wait_s))
+        return out, stats
+
+    def _loop_round(self, shards, f, round_idx: int, t_comp: float):
+        """The unfused round's worker phase under the wait policy.
+
+        Returns (responders, results_in_responder_order, wait_s, events).
+        Virtual clock: the policy picks the prefix off the analytic
+        timeline and ONLY the selected responders' work runs — except for
+        proxy-driven policies, whose error proxy needs every arrival's
+        result as it lands.  Real threads: the event loop in
+        ``WorkerPool.run_round_real`` consumes completions until the
+        policy is satisfied.
+        """
+        pool, policy, scheme = self.pool, self.policy, self.scheme
+        if pool.real_threads:
+            events, done, _ = pool.run_round_real(
+                shards, f, round_idx, policy=policy, scheme=scheme,
+                n_stragglers=self.straggler.n_stragglers)
+            ctx = RoundContext(scheme=scheme,
+                               n_stragglers=self.straggler.n_stragglers,
+                               events=events,
+                               min_ready=scheme_min_responders(scheme))
+            stop = int(policy.stop_index(ctx))
+            resp = np.sort(np.asarray([e.worker for e in events[:stop]],
+                                      dtype=np.int64))
+            return resp, [done[i] for i in resp], float(events[stop - 1].t), \
+                events
+        delays = self.straggler.delays(round_idx)
+        proxy_fn = None
+        results_all = None
+        if policy.needs_proxy:
+            # the proxy needs worker outputs: run everyone (this is the
+            # oracle path; the fused anytime pipeline is the fast one)
+            results_all = [f(s) for s in shards]
+            fh_degree = self.fh_degree
+
+            def proxy_fn(events):
+                order = [e.worker for e in events]
+                w_lo, ready = scheme.prefix_decode_weights(order)
+                pw = scheme.anytime_proxy_weights(order,
+                                                  fh_degree=fh_degree) \
+                    if hasattr(scheme, "anytime_proxy_weights") else None
+                stack = np.stack(results_all).reshape(len(results_all), -1)
+                if pw is None:
+                    return np.where(ready, 0.0, np.inf)
+                w_hi, valid = pw
+                lo = np.einsum("ekn,nf->ekf", np.asarray(w_lo, np.float64),
+                               stack.astype(np.float64))
+                hi = np.einsum("ekn,nf->ekf", np.asarray(w_hi, np.float64),
+                               stack.astype(np.float64))
+                num = np.linalg.norm((lo - hi).reshape(len(order), -1),
+                                     axis=-1)
+                den = np.linalg.norm(hi.reshape(len(order), -1), axis=-1)
+                prox = np.where(valid, num / np.maximum(den, 1e-12), np.inf)
+                return np.where(ready, prox, np.inf)
+
+        plan = plan_round(scheme, policy, delays, t_comp,
+                          self.straggler.n_stragglers, proxy_fn=proxy_fn)
+        resp = plan.responders
+        if results_all is not None:
+            results = [results_all[i] for i in resp]
+        else:
+            results = [f(shards[i]) for i in resp]
+        return resp, results, plan.wait_s, plan.events

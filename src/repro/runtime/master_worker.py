@@ -1,862 +1,64 @@
-"""Simulated master/worker runtime for the paper-scale experiments (§VII-B).
+"""Legacy master/worker surface — thin shims over the spec-driven engine.
 
-The paper runs mpi4py on 31 instances with sleep()-injected stragglers.  We
-reproduce the same semantics with a *virtual clock*: each worker's round
-latency = (measured per-task compute time) + (injected straggler delay),
-and the master's round time = encode + wait-policy quantile of worker
-latencies + decode (+ MEA-ECC encrypt/decrypt when enabled).  A real-thread
-mode exists to validate the virtual clock (tests), but benchmarks default
-to the virtual clock so Fig-3/4 sweeps run in seconds, not hours.
+The simulated runtime (virtual clock / real threads, paper §VII-B) now
+lives in two layers this module fronts:
 
-``DistributedMatmul`` adapts *any* registered coding scheme (CONV / MDS /
-MatDot / Polynomial / SecPoly / LCC / BACC / SPACDC — see
-``repro.core.registry``) to the backprop job A@B the SPACDC-DL algorithm
-distributes (Eq. 23): A = (Θ^l)^T row-blocks, B = δ^{l+1}.  Scheme
-construction, wait policy, pair-vs-data coding and product reassembly all
-come from the scheme object itself, so a new scheme needs zero runtime
-changes.
+* ``runtime.engine.RoundEngine`` — the coded-round machinery, constructed
+  from one declarative ``repro.api.ClusterSpec``;
+* ``runtime.transport`` — the backend seam (virtual clock / threads)
+  behind ``WorkerPool``.
+
+:class:`DistributedMatmul` is the pre-spec constructor: its loosely-typed
+knobs map 1:1 onto spec fields (``ClusterSpec.from_legacy_kwargs`` — the
+README migration table in code) and the rounds it runs are bit-identical
+to the spec'd engine's, asserted in ``tests/test_api.py``.  New code
+should build a ``repro.api.Session`` instead.
+
+:class:`CodedMaster` is the SPACDC-DL training master (Algorithm 2),
+now delegating its SGD step to the same ``coded_mlp_step`` the Session's
+``train_step`` runs.
 """
 
 from __future__ import annotations
 
-import collections
-import dataclasses
-import time
-from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
-from typing import Callable, Optional
+from typing import Optional
 
-import numpy as np
-import jax
-import jax.numpy as jnp
-
-from ..core import registry
-from .scheduler import EncodePipeline, assemble_curve, plan_round, virtual_events
+from .engine import RoundEngine, RoundStats, WorkerPool      # noqa: F401
 from .straggler import StragglerModel
-from .wait_policy import (ArrivalEvent, RoundContext, WaitPolicy,
-                          resolve_policy, scheme_min_responders)
+from .wait_policy import WaitPolicy, resolve_policy
+
+__all__ = ["RoundStats", "WorkerPool", "DistributedMatmul", "CodedMaster"]
 
 
-@dataclasses.dataclass
-class RoundStats:
-    encode_s: float
-    compute_wait_s: float
-    decode_s: float
-    crypto_s: float = 0.0
-    n_waited: int = 0
-    # modeled MEA-ECC estimate kept as a cross-check when ``crypto_s`` is a
-    # real measurement (encrypt="real"); 0 otherwise
-    crypto_modeled_s: float = 0.0
-    # --- event-driven round timeline (scheduler) -------------------------
-    policy: str = "fixed_quantile"   # wait policy that picked the prefix
-    arrivals: tuple = ()             # ((virtual_t_s, worker), ...) sorted
-    decode_at_s: float = 0.0         # virtual time the decode fired
-    pipelined_s: float = 0.0         # encode wall time hidden in the
-                                     # previous round's wait window
+class DistributedMatmul(RoundEngine):
+    """Coded A@B on the pool under a named scheme — legacy constructor.
 
-    @property
-    def total_s(self):
-        return (self.encode_s + self.compute_wait_s + self.decode_s +
-                self.crypto_s - self.pipelined_s)
-
-
-class WorkerPool:
-    """N simulated workers behind an event-driven round API.
-
-    Real-thread mode keeps ONE long-lived executor for the pool's lifetime
-    (the seed built and tore one down per round) and consumes completions
-    as timestamped events, stopping as soon as the wait policy is
-    satisfied — unconsumed stragglers keep running in the background and
-    their results are dropped.  Virtual-clock mode computes the arrival
-    timeline analytically and only ever runs the work of the responders a
-    policy actually selects.
-    """
-
-    def __init__(self, n_workers: int, straggler: StragglerModel,
-                 real_threads: bool = False):
-        self.n = n_workers
-        self.straggler = straggler
-        self.real_threads = real_threads
-        self._executor: Optional[ThreadPoolExecutor] = None
-        self._stray_errors: list = []
-
-    @property
-    def executor(self) -> ThreadPoolExecutor:
-        """The pool's single long-lived executor (lazily created).
-
-        Sized 2N, not N: an early-stopped round leaves up to N-1
-        stragglers sleeping on their threads, and the next round's N
-        submissions must all start immediately or their arrival
-        timestamps would include queueing delay the straggler model never
-        injected."""
-        if self._executor is None:
-            self._executor = ThreadPoolExecutor(max_workers=2 * self.n)
-        return self._executor
-
-    def close(self):
-        """Shut the executor down (stragglers of the last round included);
-        surfaces any failure an unconsumed straggler hit after its round."""
-        if self._executor is not None:
-            self._executor.shutdown(wait=True)
-            self._executor = None
-        if self._stray_errors:
-            err = self._stray_errors[0]
-            self._stray_errors.clear()
-            raise RuntimeError("a straggler worker failed after its round "
-                               "decoded") from err
-
-    def __del__(self):
-        try:
-            self.close()
-        except Exception:
-            pass
-
-    def run_round(self, shards, f: Callable, round_idx: int, wait_for: int,
-                  t_compute: Optional[float] = None):
-        """shards: list of per-worker inputs (or (a,b) tuples).  Returns
-        (responder_indices, results_in_responder_order, wait_seconds).
-
-        ``t_compute`` is the virtual-clock per-task compute time; the
-        caller owns the latency model (``DistributedMatmul`` passes the
-        same once-per-shape timed batched call for fused and loop rounds,
-        so cross-scheme comparisons price workers identically).  Ignored
-        in real-thread mode, required otherwise.
-        """
-        if self.real_threads:
-            events, done, elapsed = self.run_round_real(
-                shards, f, round_idx, stop_after=wait_for)
-            resp = np.sort(np.asarray([e.worker for e in events[:wait_for]],
-                                      dtype=np.int64))
-            return resp, [done[i] for i in resp], elapsed
-
-        # virtual clock: per-worker latency = representative compute time
-        # + injected straggler delay; only the selected responders' work
-        # actually runs (stragglers the policy never picks cost nothing)
-        if t_compute is None:
-            raise ValueError("virtual-clock run_round needs t_compute "
-                             "(see DistributedMatmul._worker_compute_time)")
-        events = virtual_events(self.straggler.delays(round_idx), t_compute)
-        resp = np.sort(np.asarray([e.worker for e in events[:wait_for]],
-                                  dtype=np.int64))
-        return resp, [f(shards[i]) for i in resp], float(events[wait_for - 1].t)
-
-    def run_round_real(self, shards, f: Callable, round_idx: int,
-                       policy: Optional[WaitPolicy] = None, scheme=None,
-                       n_stragglers: int = 0,
-                       stop_after: Optional[int] = None):
-        """Event-driven real-thread round.
-
-        Submits all N tasks to the persistent executor, consumes
-        completions as :class:`ArrivalEvent`s (timestamped on the wall
-        clock) and stops as soon as ``policy.satisfied`` — or after
-        ``stop_after`` arrivals when given.  Returns
-        (events_consumed, {worker: result}, elapsed_s); stragglers the
-        policy never waited for keep running and are discarded.  Policies
-        that need per-prefix error proxies (ErrorTarget) are a
-        virtual-clock feature — real mode exists to validate the clock.
-        """
-        if policy is not None and policy.needs_proxy:
-            raise NotImplementedError(
-                f"{policy.name}: proxy-driven policies run on the virtual "
-                "clock (real-thread mode validates the clock)")
-        if self._stray_errors:
-            # a worker the previous round never consumed died — surface it
-            # instead of silently running on a broken pool
-            err = self._stray_errors[0]
-            self._stray_errors.clear()
-            raise RuntimeError("a straggler worker of an earlier round "
-                               "failed after its round decoded") from err
-        delays = self.straggler.delays(round_idx)
-        # Deadline-style policies publish their budget so the event loop
-        # can wake AT the deadline rather than at the next (possibly far
-        # later) straggler completion
-        budget = getattr(policy, "t_budget", None)
-        t0 = time.perf_counter()
-
-        def work(i):
-            time.sleep(delays[i])
-            return i, f(shards[i])
-
-        def stray(fu):
-            if not fu.cancelled() and fu.exception() is not None:
-                self._stray_errors.append(fu.exception())
-
-        pending = {self.executor.submit(work, i) for i in range(self.n)}
-        events, done = [], {}
-        min_ready = scheme_min_responders(scheme) if scheme is not None else 1
-        try:
-            while pending:
-                timeout = None
-                if budget is not None and len(events) >= min_ready:
-                    timeout = max(budget - (time.perf_counter() - t0), 0.0)
-                finished, pending = wait(pending, timeout=timeout,
-                                         return_when=FIRST_COMPLETED)
-                for fu in finished:
-                    i, res = fu.result()
-                    done[i] = res
-                    events.append(ArrivalEvent(t=time.perf_counter() - t0,
-                                               worker=int(i)))
-                if stop_after is not None:
-                    if len(events) >= max(int(stop_after), 1):
-                        break
-                    continue
-                if budget is not None and not finished:
-                    break            # the deadline fired, prefix is decodable
-                if policy is not None and len(events) >= min_ready:
-                    ctx = RoundContext(scheme=scheme,
-                                       n_stragglers=n_stragglers,
-                                       events=events, min_ready=min_ready)
-                    if policy.satisfied(ctx):
-                        break
-        finally:
-            for fu in pending:
-                # queued-but-unstarted work is dropped; a running straggler
-                # that fails later is recorded and raised next round
-                if not fu.cancel():
-                    fu.add_done_callback(stray)
-        return events, done, time.perf_counter() - t0
-
-
-class DistributedMatmul:
-    """Coded A@B on the pool under a named scheme.
-
-    Two execution paths:
-
-    * **fused** (default whenever the scheme ``supports_fused``): the whole
-      round — encode, all N worker matmuls, masked decode, product
-      reassembly — is ONE jitted dispatch (``CodingScheme.fused_round``
-      through ``kernels.ops.coded_matmul``), LRU-cached per
-      (scheme, a.shape, b.shape, dtype) so the straggler mask is a runtime
-      value and shape reuse never recompiles.  The virtual clock derives
-      per-worker latency from a once-per-shape timed batched matmul.
-    * **unfused loop** (pair-coded schemes, or ``fused=False``): the
-      original per-worker Python loop with host round-trips — kept as the
-      semantics oracle and for schemes whose encode depends on both factors.
+    Every kwarg lands in exactly one ``ClusterSpec`` field; the engine the
+    spec builds is the one ``repro.api.Session`` drives, so both surfaces
+    produce bit-identical rounds.  Pre-built ``StragglerModel`` /
+    ``WaitPolicy`` instances pass straight through (a custom policy
+    subclass has no spec form).
     """
 
     def __init__(self, scheme_name: str, n_workers: int, k_blocks: int,
-                 t_colluding: int = 0, straggler: Optional[StragglerModel] = None,
+                 t_colluding: int = 0,
+                 straggler: Optional[StragglerModel] = None,
                  n_stragglers: int = 0, encrypt: bool | str = False,
                  seed: int = 0, fused: Optional[bool] = None,
                  cipher_mode: str = "stream",
                  wait_policy: Optional[WaitPolicy | str] = None,
                  pipeline_encode: bool = False, **scheme_kwargs):
-        self.name = scheme_name
-        self.n = n_workers
-        self.k = k_blocks
-        self.t = t_colluding
-        # encrypt: False | "modeled" (True) | "real".  "modeled" prices
-        # MEA-ECC from a measured per-element rate (the seed behaviour);
-        # "real" genuinely encrypts every master↔worker transfer with the
-        # limb-vectorized cipher and reports *measured* crypto_s.
-        mode = {False: None, True: "modeled"}.get(encrypt, encrypt)
-        if mode not in (None, "modeled", "real"):
-            raise ValueError(f"encrypt must be False/True/'modeled'/'real', "
-                             f"got {encrypt!r}")
-        self.encrypt = mode
-        self.straggler = straggler or StragglerModel(n_workers, n_stragglers, seed=seed)
-        self.pool = WorkerPool(n_workers, self.straggler)
-        # one construction path for every scheme; extra kwargs (p, q, deg_f,
-        # noise_scale, use_kernel, ...) flow through to the factory that
-        # understands them
-        scheme_kwargs.setdefault("noise_scale", 1.0)
-        self.scheme = registry.build(scheme_name, n_workers=n_workers,
-                                     k_blocks=k_blocks,
-                                     t_colluding=t_colluding,
-                                     seed=seed, **scheme_kwargs)
-        # the decode point is a pluggable WaitPolicy; the default
-        # FixedQuantile reproduces the seed's fixed-count wait (and its
-        # responder selection) bit-identically through the event scheduler
-        self.policy = resolve_policy(wait_policy)
-        self.wait_for = self.scheme.wait_policy(self.straggler.n_stragglers)
-        # encode-of-next-round pipelining: the master hides encode wall
-        # time inside the previous round's wait window (virtual-clock
-        # accounting via RoundStats.pipelined_s); opt-in so the seed's
-        # per-round accounting stays unchanged by default
-        self._pipeline = EncodePipeline() if pipeline_encode else None
-        if self.policy.needs_proxy and mode == "real":
-            raise NotImplementedError(
-                "proxy-driven wait policies (ErrorTarget) are not wired "
-                "through the encrypted-transport round yet")
-        supports = bool(getattr(self.scheme, "supports_fused", False))
-        if fused and not supports:
-            raise ValueError(f"{scheme_name!r} has no fused round path "
-                             "(pair-coded or non-linear encode)")
-        # default to fused only when the masked decode is also numerically
-        # sound in f32 — the pinv of an ill-conditioned (large-K Vandermonde
-        # / Lagrange) encoder silently destroys the result, so those
-        # schemes keep the exact f64 loop decode unless forced
-        stable = bool(getattr(self.scheme, "fused_decode_stable", False))
-        self.use_fused = (supports and stable) if fused is None else bool(fused)
-        self.trace_count = 0                # jit traces of the fused round
-        self._fused_cache = collections.OrderedDict()   # shapes -> jitted fn
-        self._fused_cache_max = 8
-        self._worker_t = {}                 # shapes -> per-worker seconds
-        self._encode_t = {}                 # shapes -> encode-only seconds
-        self._crypto = None
-        self._crypto_per_elem = {}          # (dtype, mode) -> seconds/element
-        if mode is not None:
-            from ..crypto import MEAECC, generate_keypair
-            # per-element rate sample for the modeled estimate (the seed
-            # behaviour; in "real" mode it survives as a cross-check)
-            self._crypto = (MEAECC(mode=cipher_mode), generate_keypair())
-        if mode == "real":
-            from ..crypto import MEAECC, generate_keypair
-            import itertools
-            # the transport cipher: lossless bits codec + static session
-            # keys, so decrypt(encrypt(x)) is bit-identical to x and the
-            # per-message EC cost is one cached shared-point lookup.
-            # cipher_mode defaults to "stream" — on a static channel the
-            # paper's single-mask mode would reuse one mask for every
-            # message; cipher_mode="paper" stays available for studying
-            # the paper-faithful construction (see README "Security")
-            self._mea = MEAECC(mode=cipher_mode, codec="bits")
-            self._master_kp = generate_keypair()
-            self._worker_kps = [generate_keypair() for _ in range(n_workers)]
-            self._nonce = itertools.count(1)
-
-    # ------------------------------------------------------------- crypto
-    def _crypto_cost_per_elem(self, dtype) -> float:
-        """MEA-ECC seconds per matrix element, measured once per (dtype,
-        mode) on a 64×64 sample and cached — the cost is per-element linear.
-        A warm-up round trip runs first so jit compilation and the one-time
-        EC table builds never leak into the extrapolated rate."""
-        mea, kp = self._crypto
-        key = (str(dtype), mea.mode)
-        if key not in self._crypto_per_elem:
-            m = np.zeros((64, 64), dtype)
-            ct = mea.encrypt(m, kp.pk)          # warm: compile + tables
-            mea.decrypt(ct, kp)
-            t0 = time.perf_counter()
-            ct = mea.encrypt(m, kp.pk)
-            mea.decrypt(ct, kp)
-            self._crypto_per_elem[key] = (time.perf_counter() - t0) / m.size
-        return self._crypto_per_elem[key]
-
-    def _crypto_overhead_elems(self, total_elems: int, dtype) -> float:
-        """Modeled MEA-ECC cost: master encrypt + worker decrypt + result
-        encrypt (3 passes) over ``total_elems`` shard elements."""
-        if not self._crypto:
-            return 0.0
-        return self._crypto_cost_per_elem(dtype) * total_elems * 3
-
-    def _crypto_overhead(self, shards) -> float:
-        if not self._crypto:
-            return 0.0
-        a = shards[0][0] if isinstance(shards[0], tuple) else shards[0]
-        total_elems = sum(int(np.prod(np.shape(s[0] if isinstance(s, tuple) else s)))
-                          for s in shards)
-        # dtype off the attribute — np.asarray would round-trip the whole
-        # device array to host just to read it
-        return self._crypto_overhead_elems(total_elems,
-                                           getattr(a, "dtype", np.float32))
-
-    def _wire(self, arr: np.ndarray, sender_kp, recipient_kp) -> np.ndarray:
-        """One real master↔worker transfer: MEA-ECC encrypt to the
-        recipient's public key, decrypt with its private key at the other
-        end.  The bits codec makes the round trip bit-identical; the static
-        session keys make the per-message EC cost a cache lookup."""
-        ct = self._mea.encrypt(np.asarray(arr), recipient_kp.pk,
-                               sender=sender_kp, nonce=next(self._nonce))
-        return self._mea.decrypt(ct, recipient_kp)
-
-    # ------------------------------------------------------- fused pipeline
-    def _fused_fn(self, a_shape, b_shape, dtype):
-        """The jitted round for one shape class, LRU-cached.  The straggler
-        mask is a traced argument, so responder churn never recompiles."""
-        key = (a_shape, b_shape, dtype)
-        fn = self._fused_cache.get(key)
-        if fn is None:
-            scheme = self.scheme
-            m, n_out = a_shape[0], b_shape[-1]
-
-            def _round(a, b, mask):
-                self.trace_count += 1      # runs at trace time only
-                decoded = scheme.fused_round(a, b, mask)
-                return scheme.reconstruct_matmul(decoded, m, n_out)
-
-            fn = jax.jit(_round)
-            self._fused_cache[key] = fn
-            if len(self._fused_cache) > self._fused_cache_max:
-                self._fused_cache.popitem(last=False)
-        else:
-            self._fused_cache.move_to_end(key)
-        return fn
-
-    def _staged_fns(self, a_shape, b_shape, dtype):
-        """The real-encryption round, split at the wire boundaries into
-        three jitted stages (encode / batched worker matmul / masked decode)
-        — each LRU-cached per shape class, so the fused path still compiles
-        once per shape class while genuine ciphertexts cross between the
-        stages.  The stages mirror ``kernels.ref.coded_matmul`` op-for-op,
-        so a real round is bit-identical to the single-dispatch round."""
-        key = ("real", a_shape, b_shape, dtype)
-        fns = self._fused_cache.get(key)
-        if fns is None:
-            scheme = self.scheme
-            m, n_out = a_shape[0], b_shape[-1]
-
-            def _encode(a):
-                self.trace_count += 1      # runs at trace time only
-                return scheme.encode(a)
-
-            def _workers(blocks, b):
-                self.trace_count += 1
-                return jnp.einsum(
-                    "nij,jk->nik", blocks.astype(jnp.float32),
-                    b.astype(jnp.float32),
-                    precision=jax.lax.Precision.HIGHEST).astype(jnp.float32)
-
-            def _decode(results, mask):
-                self.trace_count += 1
-                dec = scheme._combine(scheme.decode_matrix_masked(mask),
-                                      results)
-                return scheme.reconstruct_matmul(dec, m, n_out)
-
-            fns = (jax.jit(_encode), jax.jit(_workers), jax.jit(_decode))
-            self._fused_cache[key] = fns
-            if len(self._fused_cache) > self._fused_cache_max:
-                self._fused_cache.popitem(last=False)
-        else:
-            self._fused_cache.move_to_end(key)
-        return fns
-
-    def _worker_compute_time(self, lhs_shape, rhs_shape) -> float:
-        """Virtual-clock per-worker latency: time ONE jitted batched matmul
-        of the per-worker operand shapes (once per shape, cached) and
-        divide by N — the N workers of the real system run concurrently.
-        Both the fused and loop paths price workers through this same
-        model, so cross-scheme comparisons measure the codes, not
-        host-dispatch noise."""
-        key = (tuple(lhs_shape), tuple(rhs_shape))
-        if key not in self._worker_t:
-            lhs = jnp.zeros((self.n,) + tuple(lhs_shape), jnp.float32)
-            rhs = jnp.zeros((self.n,) + tuple(rhs_shape), jnp.float32)
-            batched = jax.jit(lambda l, r: jnp.einsum("nij,njk->nik", l, r))
-            jax.block_until_ready(batched(lhs, rhs))         # compile
-            t0 = time.perf_counter()
-            jax.block_until_ready(batched(lhs, rhs))
-            self._worker_t[key] = (time.perf_counter() - t0) / self.n
-        return self._worker_t[key]
-
-    def _round_compute_time(self, a_shape, b_shape):
-        """(block rows, per-worker virtual compute seconds) for this job."""
-        split = getattr(self.scheme, "k_blocks", self.n)
-        blk = -(-a_shape[0] // split)
-        return blk, self._worker_compute_time((blk, a_shape[1]),
-                                              (a_shape[1], b_shape[-1]))
-
-    def _virtual_round_plan(self, a_shape, b_shape, round_idx: int,
-                            proxy_fn=None):
-        """Virtual clock: the round's arrival timeline and the prefix the
-        wait policy consumes.  Shared by the fused and real-encryption
-        paths so their responder selection can never desynchronize (the
-        real round is asserted bit-identical to the unencrypted one)."""
-        blk, t_comp = self._round_compute_time(a_shape, b_shape)
-        plan = plan_round(self.scheme, self.policy,
-                          self.straggler.delays(round_idx), t_comp,
-                          self.straggler.n_stragglers, proxy_fn=proxy_fn)
-        return blk, plan
-
-    def _encode_only_time(self, a_shape) -> float:
-        """Measured wall seconds of ONE jitted encode at this shape
-        (cached).  Caps the pipelining credit on paths whose master timer
-        lumps encode with decode/reassembly: only the encode can genuinely
-        overlap the previous round's wait window — this round's decode
-        needs this round's results."""
-        key = tuple(a_shape)
-        if key not in self._encode_t:
-            fn = jax.jit(self.scheme.encode)
-            z = jnp.zeros(a_shape, jnp.float32)
-            jax.block_until_ready(fn(z))               # compile
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(z))
-            self._encode_t[key] = time.perf_counter() - t0
-        return self._encode_t[key]
-
-    def _account_encode(self, encode_s: float, wait_s: float) -> float:
-        """Encode-pipelining credit: how much of this round's encode hid
-        in the previous round's wait window (and bank this round's)."""
-        if self._pipeline is None:
-            return 0.0
-        _, hidden = self._pipeline.charge(encode_s)
-        self._pipeline.credit(wait_s)
-        return hidden
-
-    def _stats(self, events, decode_at_s: float, **kw) -> RoundStats:
-        kw.setdefault("policy", self.policy.name)
-        kw.setdefault("arrivals", tuple((e.t, e.worker) for e in events))
-        kw.setdefault("decode_at_s", decode_at_s)
-        return RoundStats(**kw)
-
-    def _matmul_fused(self, a: jnp.ndarray, b: jnp.ndarray, round_idx: int):
-        fn = self._fused_fn(a.shape, b.shape, str(a.dtype))
-        blk, plan = self._virtual_round_plan(a.shape, b.shape, round_idx)
-        # master math (encode + decode + reassembly): one dispatch
-        t0 = time.perf_counter()
-        out = fn(a, b, jnp.asarray(plan.mask))
-        jax.block_until_ready(out)
-        t_master = time.perf_counter() - t0
-        crypto_s = self._crypto_overhead_elems(self.n * blk * a.shape[1],
-                                               np.float32)
-        hideable = (0.0 if self._pipeline is None else
-                    min(t_master, self._encode_only_time(a.shape)))
-        stats = self._stats(plan.events, plan.wait_s, encode_s=t_master,
-                            compute_wait_s=plan.wait_s, decode_s=0.0,
-                            crypto_s=crypto_s, n_waited=len(plan.responders),
-                            pipelined_s=self._account_encode(hideable,
-                                                             plan.wait_s))
-        return np.asarray(out), stats
-
-    def _matmul_real(self, a: jnp.ndarray, b: jnp.ndarray, round_idx: int):
-        """The fused round with genuine transmission security: every shard
-        is MEA-ECC-encrypted to its worker and decrypted there, every
-        responder's product is encrypted back to the master — ``crypto_s``
-        is the *measured* wall time of those transfers (the modeled
-        estimate rides along in ``crypto_modeled_s`` as a cross-check).
-        The bits-codec transport is lossless, so the round output is
-        bit-identical to the unencrypted round."""
-        enc_fn, worker_fn, decode_fn = self._staged_fns(a.shape, b.shape,
-                                                        str(a.dtype))
-        blk, plan = self._virtual_round_plan(a.shape, b.shape, round_idx)
-        resp, wait_s, mask = plan.responders, plan.wait_s, plan.mask
-        t0 = time.perf_counter()
-        enc = np.asarray(enc_fn(a))                      # (N, blk, d)
-        t_enc = time.perf_counter() - t0
-        # wire out: each worker receives (and decrypts) its coded shard
-        t0 = time.perf_counter()
-        shards = np.stack([self._wire(enc[i], self._master_kp,
-                                      self._worker_kps[i])
-                           for i in range(self.n)])
-        crypto_s = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        # np.array: a writable copy — responder slots are overwritten with
-        # their (bit-identical) decrypted wire payloads below
-        results = np.array(worker_fn(jnp.asarray(shards), b))
-        t_enc += time.perf_counter() - t0
-        # wire back: the responders' products return encrypted (stragglers
-        # never answer; their slots carry weight 0 in the masked decode)
-        t0 = time.perf_counter()
-        for i in resp:
-            results[i] = self._wire(results[i], self._worker_kps[i],
-                                    self._master_kp)
-        crypto_s += time.perf_counter() - t0
-        t0 = time.perf_counter()
-        out = decode_fn(jnp.asarray(results), jnp.asarray(mask))
-        jax.block_until_ready(out)
-        t_dec = time.perf_counter() - t0
-        modeled = self._crypto_overhead_elems(self.n * blk * a.shape[1],
-                                              np.float32)
-        hideable = (0.0 if self._pipeline is None else
-                    min(t_enc, self._encode_only_time(a.shape)))
-        stats = self._stats(plan.events, wait_s, encode_s=t_enc,
-                            compute_wait_s=wait_s, decode_s=t_dec,
-                            crypto_s=crypto_s, n_waited=len(resp),
-                            crypto_modeled_s=modeled,
-                            pipelined_s=self._account_encode(hideable,
-                                                             wait_s))
-        return np.asarray(out), stats
-
-    # ---------------------------------------------------- anytime pipeline
-    def _anytime_results_fn(self, a_shape, b_shape, dtype):
-        """Jitted stage 1 of the anytime round: encode + ALL N worker
-        matmuls in one ``kernels.ops.coded_matmul`` dispatch (no decode —
-        the decode point isn't known yet)."""
-        key = ("any_results", a_shape, b_shape, dtype)
-        fn = self._fused_cache.get(key)
-        if fn is None:
-            scheme = self.scheme
-            from ..kernels.ops import coded_matmul
-            enc = jnp.asarray(scheme.fused_encoder_matrix(), jnp.float32)
-
-            def _results(a, b):
-                self.trace_count += 1      # runs at trace time only
-                return coded_matmul(enc, scheme.fused_blocks(a), b,
-                                    force_kernel=scheme.use_kernel)
-
-            fn = jax.jit(_results)
-            self._fused_cache[key] = fn
-            if len(self._fused_cache) > self._fused_cache_max:
-                self._fused_cache.popitem(last=False)
-        else:
-            self._fused_cache.move_to_end(key)
-        return fn
-
-    def _anytime_curve_fn(self, a_shape, b_shape, dtype, with_ref: bool):
-        """Jitted stage 2: EVERY responder prefix decoded in one batched
-        ``kernels.ops.prefix_decode`` contraction, plus the embedded-pair
-        error proxy (and, for curve reporting, true relative errors
-        against an in-trace A@B reference).  The per-round weight stacks
-        are runtime arguments — straggler churn never recompiles."""
-        key = ("any_curve", with_ref, a_shape, b_shape, dtype)
-        fn = self._fused_cache.get(key)
-        if fn is None:
-            scheme = self.scheme
-            m, n_out = a_shape[0], b_shape[-1]
-
-            def _curve(results, w_lo, w_hi, valid, a, b):
-                self.trace_count += 1      # runs at trace time only
-                from ..kernels.ops import prefix_decode
-                e = w_lo.shape[0]
-                dec = prefix_decode(jnp.concatenate([w_lo, w_hi], axis=0),
-                                    results, force_kernel=scheme.use_kernel)
-                recon = jax.vmap(
-                    lambda d: scheme.reconstruct_matmul(d, m, n_out))
-                prod = recon(dec[:e])                       # (E, m, n_out)
-                prod_hi = recon(dec[e:])
-                diff = jnp.linalg.norm(
-                    (prod - prod_hi).reshape(e, -1), axis=-1)
-                den = jnp.linalg.norm(prod_hi.reshape(e, -1), axis=-1)
-                prox = jnp.where(valid > 0, diff / jnp.maximum(den, 1e-12),
-                                 jnp.inf)
-                if not with_ref:
-                    return prod, prox
-                ref = jnp.dot(a, b, precision=jax.lax.Precision.HIGHEST)
-                rel = (jnp.linalg.norm((prod - ref[None]).reshape(e, -1),
-                                       axis=-1) /
-                       jnp.maximum(jnp.linalg.norm(ref), 1e-12))
-                return prod, prox, rel
-
-            fn = jax.jit(_curve)
-            self._fused_cache[key] = fn
-            if len(self._fused_cache) > self._fused_cache_max:
-                self._fused_cache.popitem(last=False)
-        else:
-            self._fused_cache.move_to_end(key)
-        return fn
-
-    def _prefix_weight_stacks(self, events):
-        """Host-side per-prefix decode weights for one round's arrival
-        order: (w_lo, ready, w_hi, valid).  Rateless schemes supply a
-        genuine embedded pair (Berrut + Floater–Hormann); threshold
-        schemes have no second decoder — w_hi repeats w_lo with
-        ``valid=0`` so the proxy reports inf below/at threshold (their
-        per-prefix error is 0-or-undecodable anyway)."""
-        order = [e.worker for e in events]
-        w_lo, ready = self.scheme.prefix_decode_weights(order)
-        pw = self.scheme.anytime_proxy_weights(order) \
-            if hasattr(self.scheme, "anytime_proxy_weights") else None
-        if pw is None:
-            w_hi, valid = w_lo, np.zeros(len(order), np.float32)
-        else:
-            w_hi, valid = pw[0], np.asarray(pw[1], np.float32)
-        return (jnp.asarray(w_lo), np.asarray(ready, bool),
-                jnp.asarray(w_hi), jnp.asarray(valid))
-
-    def _anytime_prefix_eval(self, a, b, round_idx: int, with_ref: bool):
-        """The shared 2-dispatch prefix pipeline behind ErrorTarget rounds
-        and ``anytime_curve``: stage 1 (encode + all worker matmuls),
-        stage 2 (every prefix decoded + embedded-pair proxies, optionally
-        true errors against an in-trace reference).
-
-        Returns (events, ready, proxies, products, rel_errs-or-None).
-        """
-        _, t_comp = self._round_compute_time(a.shape, b.shape)
-        events = virtual_events(self.straggler.delays(round_idx), t_comp)
-        w_lo, ready, w_hi, valid = self._prefix_weight_stacks(events)
-        results = self._anytime_results_fn(a.shape, b.shape,
-                                           str(a.dtype))(a, b)
-        out = self._anytime_curve_fn(a.shape, b.shape, str(a.dtype),
-                                     with_ref=with_ref)(
-            results, w_lo, w_hi, valid, a, b)
-        prod, prox = out[0], out[1]
-        rel = out[2] if with_ref else None
-        prox = np.where(ready, np.asarray(prox, np.float64), np.inf)
-        if not np.asarray(valid).any():
-            # threshold scheme: no embedded pair — the decode is exact the
-            # moment it's possible
-            prox = np.where(ready, 0.0, np.inf)
-        return events, ready, prox, prod, rel
-
-    def _matmul_anytime(self, a: jnp.ndarray, b: jnp.ndarray, round_idx: int):
-        """The proxy-driven round (ErrorTarget): run all workers' math,
-        decode every prefix in one batched dispatch, stop at the earliest
-        prefix whose embedded error estimate meets the target.  Two jitted
-        dispatches per round, both LRU-cached per shape class."""
-        blk, _ = self._round_compute_time(a.shape, b.shape)
-        t0 = time.perf_counter()
-        events, ready, prox, prod, _ = self._anytime_prefix_eval(
-            a, b, round_idx, with_ref=False)
-        ctx = RoundContext(scheme=self.scheme,
-                           n_stragglers=self.straggler.n_stragglers,
-                           events=events,
-                           min_ready=scheme_min_responders(self.scheme),
-                           proxies=prox)
-        stop = int(self.policy.stop_index(ctx))
-        out = np.asarray(prod[stop - 1])
-        jax.block_until_ready(out)
-        t_master = time.perf_counter() - t0
-        wait_s = float(events[stop - 1].t)
-        crypto_s = self._crypto_overhead_elems(self.n * blk * a.shape[1],
-                                               np.float32)
-        hideable = (0.0 if self._pipeline is None else
-                    min(t_master, self._encode_only_time(a.shape)))
-        stats = self._stats(events, wait_s, encode_s=t_master,
-                            compute_wait_s=wait_s, decode_s=0.0,
-                            crypto_s=crypto_s, n_waited=stop,
-                            pipelined_s=self._account_encode(hideable,
-                                                             wait_s))
-        return out, stats
-
-    def anytime_curve(self, a: np.ndarray, b: np.ndarray, round_idx: int = 0):
-        """The full error-vs-latency curve of one virtual-clock round:
-        for every arrival prefix, the virtual time and the decode's true
-        relative error (inf where the scheme can't decode yet), plus the
-        in-trace embedded-pair proxy and the monotone ``best_err``
-        envelope.  Whole-curve cost: TWO jitted dispatches per shape class
-        (stage 1 worker results + stage 2 batched prefix decode), however
-        many error points the round has.
-
-        Returns a list of :class:`repro.runtime.scheduler.AnytimePoint`.
-        """
-        if not getattr(self.scheme, "supports_fused", False):
-            raise NotImplementedError(
-                f"{self.name!r}: anytime curves need a linear data-coded "
-                "scheme (prefix decode stacks)")
-        a = jnp.asarray(a, jnp.float32)
-        b = jnp.asarray(b, jnp.float32)
-        events, ready, prox, _, rel = self._anytime_prefix_eval(
-            a, b, round_idx, with_ref=True)
-        return assemble_curve(events, np.asarray(rel, np.float64), ready,
-                              prox)
-
-    # --------------------------------------------------------------- rounds
-    def matmul(self, a: np.ndarray, b: np.ndarray, round_idx: int = 0):
-        """Returns (result (m, n), RoundStats).  Result stacked over K blocks
-        for block schemes, reshaped to a's row layout.
-
-        On the fused path encode/compute/decode are one dispatch, so the
-        whole master-side wall time is reported as ``encode_s`` and
-        ``decode_s`` is 0; ``compute_wait_s`` stays the virtual-clock wait.
-        """
-        a = jnp.asarray(a, jnp.float32)
-        b = jnp.asarray(b, jnp.float32)
-        real = self.encrypt == "real"
-        if self.policy.needs_proxy and real:
-            # re-checked here (not just in __init__): the policy is a
-            # mutable attribute (CodedMaster(wait_policy=...) swaps it in)
-            raise NotImplementedError(
-                "proxy-driven wait policies (ErrorTarget) are not wired "
-                "through the encrypted-transport round yet")
-        if self.use_fused:
-            if self.policy.needs_proxy:
-                return self._matmul_anytime(a, b, round_idx)
-            if real:
-                return self._matmul_real(a, b, round_idx)
-            return self._matmul_fused(a, b, round_idx)
-        t0 = time.perf_counter()
-        if self.scheme.pair_coded:
-            ea, eb = self.scheme.encode_pair(a, b)
-            jax.block_until_ready((ea, eb))
-            shards = [(ea[i], eb[i]) for i in range(self.n)]
-            # jnp.asarray: no-op on the plain path's device arrays, converts
-            # the real path's decrypted numpy shards — both modes compute
-            # the worker product with the same jnp matmul on the same bits
-            f = lambda ab: np.asarray(jnp.asarray(ab[0]) @ jnp.asarray(ab[1]))
-            lhs_shape, rhs_shape = ea.shape[1:], eb.shape[1:]
-        else:
-            enc = self.scheme.encode(a)
-            jax.block_until_ready(enc)
-            shards = [np.asarray(enc[i]) for i in range(self.n)]
-            f = lambda s: np.asarray(jnp.asarray(s) @ b)
-            lhs_shape, rhs_shape = enc.shape[1:], b.shape
-        t_enc = time.perf_counter() - t0
-
-        crypto_s = 0.0
-        if real:
-            # wire out: every worker decrypts bit-identical shard bytes
-            t0 = time.perf_counter()
-            shards = [
-                tuple(self._wire(part, self._master_kp, self._worker_kps[i])
-                      for part in s) if isinstance(s, tuple)
-                else self._wire(s, self._master_kp, self._worker_kps[i])
-                for i, s in enumerate(shards)]
-            crypto_s += time.perf_counter() - t0
-
-        t_comp = self._worker_compute_time(lhs_shape, rhs_shape)
-        resp, results, wait_s, plan = self._loop_round(shards, f, round_idx,
-                                                       t_comp)
-        if real:
-            # wire back: responders encrypt their products to the master
-            t0 = time.perf_counter()
-            results = [self._wire(r, self._worker_kps[i], self._master_kp)
-                       for i, r in zip(resp, results)]
-            crypto_s += time.perf_counter() - t0
-        t0 = time.perf_counter()
-        dec = self.scheme.decode(jnp.asarray(np.stack(results)), list(resp))
-        out = np.asarray(self.scheme.reconstruct_matmul(dec, a.shape[0],
-                                                        b.shape[-1]))
-        t_dec = time.perf_counter() - t0
-        modeled = self._crypto_overhead(shards)
-        stats = RoundStats(t_enc, wait_s, t_dec,
-                           crypto_s if real else modeled, len(resp),
-                           crypto_modeled_s=modeled if real else 0.0,
-                           policy=self.policy.name,
-                           arrivals=tuple((e.t, e.worker)
-                                          for e in plan) if plan else (),
-                           decode_at_s=wait_s,
-                           pipelined_s=self._account_encode(t_enc, wait_s))
-        return out, stats
-
-    def _loop_round(self, shards, f, round_idx: int, t_comp: float):
-        """The unfused round's worker phase under the wait policy.
-
-        Returns (responders, results_in_responder_order, wait_s, events).
-        Virtual clock: the policy picks the prefix off the analytic
-        timeline and ONLY the selected responders' work runs — except for
-        proxy-driven policies, whose error proxy needs every arrival's
-        result as it lands.  Real threads: the event loop in
-        ``WorkerPool.run_round_real`` consumes completions until the
-        policy is satisfied.
-        """
-        pool, policy, scheme = self.pool, self.policy, self.scheme
-        if pool.real_threads:
-            events, done, _ = pool.run_round_real(
-                shards, f, round_idx, policy=policy, scheme=scheme,
-                n_stragglers=self.straggler.n_stragglers)
-            ctx = RoundContext(scheme=scheme,
-                               n_stragglers=self.straggler.n_stragglers,
-                               events=events,
-                               min_ready=scheme_min_responders(scheme))
-            stop = int(policy.stop_index(ctx))
-            resp = np.sort(np.asarray([e.worker for e in events[:stop]],
-                                      dtype=np.int64))
-            return resp, [done[i] for i in resp], float(events[stop - 1].t), \
-                events
-        delays = self.straggler.delays(round_idx)
-        proxy_fn = None
-        results_all = None
-        if policy.needs_proxy:
-            # the proxy needs worker outputs: run everyone (this is the
-            # oracle path; the fused anytime pipeline is the fast one)
-            results_all = [f(s) for s in shards]
-
-            def proxy_fn(events):
-                order = [e.worker for e in events]
-                w_lo, ready = scheme.prefix_decode_weights(order)
-                pw = scheme.anytime_proxy_weights(order) \
-                    if hasattr(scheme, "anytime_proxy_weights") else None
-                stack = np.stack(results_all).reshape(len(results_all), -1)
-                if pw is None:
-                    return np.where(ready, 0.0, np.inf)
-                w_hi, valid = pw
-                lo = np.einsum("ekn,nf->ekf", np.asarray(w_lo, np.float64),
-                               stack.astype(np.float64))
-                hi = np.einsum("ekn,nf->ekf", np.asarray(w_hi, np.float64),
-                               stack.astype(np.float64))
-                num = np.linalg.norm((lo - hi).reshape(len(order), -1),
-                                     axis=-1)
-                den = np.linalg.norm(hi.reshape(len(order), -1), axis=-1)
-                prox = np.where(valid, num / np.maximum(den, 1e-12), np.inf)
-                return np.where(ready, prox, np.inf)
-
-        plan = plan_round(scheme, policy, delays, t_comp,
-                          self.straggler.n_stragglers, proxy_fn=proxy_fn)
-        resp = plan.responders
-        if results_all is not None:
-            results = [results_all[i] for i in resp]
-        else:
-            results = [f(shards[i]) for i in resp]
-        return resp, results, plan.wait_s, plan.events
+        from ..api.spec import ClusterSpec
+        spec = ClusterSpec.from_legacy_kwargs(
+            scheme_name, n_workers, k_blocks, t_colluding=t_colluding,
+            straggler=straggler, n_stragglers=n_stragglers, encrypt=encrypt,
+            seed=seed, fused=fused, cipher_mode=cipher_mode,
+            wait_policy=wait_policy, pipeline_encode=pipeline_encode,
+            **scheme_kwargs)
+        super().__init__(
+            spec, straggler=straggler,
+            policy=resolve_policy(wait_policy) if wait_policy is not None
+            else None)
 
 
 class CodedMaster:
@@ -867,73 +69,36 @@ class CodedMaster:
     training rounds (e.g. ``ErrorTarget(1e-2)`` trains on
     good-enough-early decodes, ``Deadline(t)`` bounds every backward
     round) — the same strategy objects the runtime and the SPMD trainer
-    consume.  Per-round stats land in ``round_stats``.
+    consume.  Per-round stats land in ``round_stats``.  The SGD step
+    itself is ``repro.api.coded_mlp_step`` — shared with
+    ``Session.train_step``.
     """
 
     def __init__(self, layer_sizes, dist: DistributedMatmul, lr=0.05, seed=0,
                  wait_policy=None):
-        rng = np.random.default_rng(seed)
+        from ..api.session import coded_mlp_init
         self.dist = dist
         if wait_policy is not None:
             dist.policy = resolve_policy(wait_policy)
         self.round_stats = []
         self.lr = lr
-        self.weights = [rng.standard_normal((m, n)).astype(np.float32) *
-                        np.sqrt(2.0 / m)
-                        for m, n in zip(layer_sizes[:-1], layer_sizes[1:])]
-        self.biases = [np.zeros(n, np.float32) for n in layer_sizes[1:]]
+        self.weights, self.biases = coded_mlp_init(layer_sizes, seed)
         self.round = 0
 
-    @staticmethod
-    def _act(x):
-        return np.maximum(x, 0.0)
-
-    @staticmethod
-    def _act_grad(x):
-        return (x > 0).astype(np.float32)
-
     def forward(self, x):
-        acts, pre = [x], []
-        h = x
-        for i, (w, b) in enumerate(zip(self.weights, self.biases)):
-            z = h @ w + b
-            pre.append(z)
-            h = self._act(z) if i < len(self.weights) - 1 else z
-            acts.append(h)
-        return acts, pre
+        from ..api.session import mlp_forward
+        return mlp_forward(self.weights, self.biases, x)
 
     def train_batch(self, x, y, n_classes=10):
         """One SGD step; backward layer products distributed.  Returns
         (loss, virtual_seconds)."""
-        bsz = x.shape[0]
-        acts, pre = self.forward(x)
-        logits = acts[-1]
-        z = logits - logits.max(1, keepdims=True)
-        p = np.exp(z)
-        p /= p.sum(1, keepdims=True)
-        loss = -np.mean(np.log(p[np.arange(bsz), y] + 1e-12))
-        onehot = np.zeros_like(p)
-        onehot[np.arange(bsz), y] = 1.0
-        delta = (p - onehot) / bsz                      # (B, n_out)
-
-        elapsed = 0.0
-        grads_w, grads_b = [], []
-        for l in reversed(range(len(self.weights))):
-            grads_w.append(acts[l].T @ delta)
-            grads_b.append(delta.sum(0))
-            if l > 0:
-                # the distributed job (Eq. 23): delta @ W^T, coded over W rows
-                prod, stats = self.dist.matmul(self.weights[l], delta.T,
-                                               round_idx=self.round)
-                delta = prod.T * self._act_grad(pre[l - 1])
-                elapsed += stats.total_s
-                self.round_stats.append(stats)
-                self.round += 1
-        grads_w, grads_b = grads_w[::-1], grads_b[::-1]
-        for i in range(len(self.weights)):
-            self.weights[i] -= self.lr * grads_w[i]
-            self.biases[i] -= self.lr * grads_b[i]
-        return float(loss), elapsed
+        from ..api.session import coded_mlp_step
+        loss, elapsed, stats = coded_mlp_step(
+            self.weights, self.biases, self.dist.matmul, x, y, lr=self.lr,
+            round0=self.round)
+        self.round += len(stats)
+        self.round_stats.extend(stats)
+        return loss, elapsed
 
     def accuracy(self, x, y):
         acts, _ = self.forward(x)

@@ -64,15 +64,12 @@ class AnytimePoint:
 
 
 def virtual_events(delays: np.ndarray, t_compute: float) -> List[ArrivalEvent]:
-    """Sorted arrival timeline of the virtual clock.
-
-    Latency model and tie-breaking are EXACTLY the seed's
-    (``np.argsort(delays + t_compute)``), so the default fixed-quantile
-    policy selects bit-identical responder sets.
-    """
-    lat = np.asarray(delays, dtype=np.float64) + float(t_compute)
-    order = np.argsort(lat)
-    return [ArrivalEvent(t=float(lat[i]), worker=int(i)) for i in order]
+    """Sorted arrival timeline of the virtual clock (the transport seam's
+    :func:`repro.runtime.transport.virtual_timeline` — re-exported here
+    for the planners; latency model and tie-breaking are EXACTLY the
+    seed's, so fixed-quantile responder selection stays bit-identical)."""
+    from .transport import virtual_timeline
+    return virtual_timeline(delays, t_compute)
 
 
 def plan_round(scheme, policy: Optional[WaitPolicy], delays: np.ndarray,

@@ -1,0 +1,256 @@
+"""The transport seam: how one coded round's work reaches N workers and
+how their completions stream back.
+
+Everything master↔worker used to live inline in ``WorkerPool``; this
+module factors it into a backend protocol so a socket or
+``jax.distributed`` transport is a drop-in third class:
+
+* :class:`Transport` — ``submit_round(...)`` returns a
+  :class:`RoundHandle` whose ``events()`` iterator streams timestamped
+  :class:`~.wait_policy.ArrivalEvent` completions (in arrival order) and
+  whose ``result(worker)`` fetches/computes that worker's output.  The
+  consumer (``WorkerPool``, the round engine) drains exactly as many
+  events as its wait policy wants and then calls ``finish()``.
+* :class:`VirtualClockTransport` — the analytic clock: per-worker latency
+  = representative compute time + injected straggler delay, arrival
+  timeline known upfront, and ONLY the events a consumer drains ever
+  run their work (stragglers a policy never picks cost nothing).
+* :class:`ThreadTransport` — real threads sleeping real injected delays
+  behind ONE long-lived executor; completions are consumed as they land,
+  and unconsumed stragglers keep running in the background with their
+  results dropped (a late failure surfaces on the next round).
+
+``TransportSpec(backend=...)`` selects the class; ``build_transport``
+maps the name.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from typing import Callable, Iterator, List, Optional, Protocol, Sequence
+
+import numpy as np
+
+from .straggler import StragglerModel
+from .wait_policy import ArrivalEvent
+
+__all__ = ["RoundHandle", "Transport", "VirtualClockTransport",
+           "ThreadTransport", "build_transport", "virtual_timeline"]
+
+
+def virtual_timeline(delays: np.ndarray, t_compute: float) -> List[ArrivalEvent]:
+    """Sorted arrival timeline of the virtual clock.
+
+    Latency model and tie-breaking are EXACTLY the seed's
+    (``np.argsort(delays + t_compute)``), so fixed-quantile responder
+    selection stays bit-identical.
+    """
+    lat = np.asarray(delays, dtype=np.float64) + float(t_compute)
+    order = np.argsort(lat)
+    return [ArrivalEvent(t=float(lat[i]), worker=int(i)) for i in order]
+
+
+class RoundHandle(Protocol):
+    """One in-flight round: stream its completions, fetch its results."""
+
+    def events(self) -> Iterator[ArrivalEvent]:
+        """Completions in arrival order.  Stops early when the round's
+        deadline budget fires (after ``min_ready`` arrivals)."""
+
+    def result(self, worker: int):
+        """The worker's output (computed lazily on the virtual clock)."""
+
+    def finish(self) -> float:
+        """Stop consuming: drop/cancel stragglers, return elapsed wall
+        seconds (thread transport) or 0.0 (virtual — event times ARE the
+        clock).  Idempotent; always call it when done draining."""
+
+
+class Transport(Protocol):
+    """A backend that can carry rounds.  Implementations own whatever
+    long-lived resources rounds share (executors, sockets) and release
+    them in ``close()``."""
+
+    name: str
+
+    def submit_round(self, shards: Sequence, f: Callable, round_idx: int, *,
+                     t_compute: Optional[float] = None,
+                     budget: Optional[float] = None,
+                     min_ready: int = 1) -> RoundHandle:
+        ...
+
+    def close(self) -> None:
+        ...
+
+
+# --------------------------------------------------------------------------
+# virtual clock
+# --------------------------------------------------------------------------
+
+class _VirtualRoundHandle:
+    def __init__(self, shards, f, events, budget, min_ready):
+        self._shards, self._f = shards, f
+        self._events = events
+        self._budget = budget
+        self._min_ready = max(int(min_ready), 1)
+        self._cache = {}
+
+    def events(self) -> Iterator[ArrivalEvent]:
+        for i, ev in enumerate(self._events):
+            if (self._budget is not None and ev.t > self._budget and
+                    i >= self._min_ready):
+                return          # the deadline fired; prefix is decodable
+            yield ev
+
+    def result(self, worker: int):
+        if worker not in self._cache:
+            self._cache[worker] = self._f(self._shards[worker])
+        return self._cache[worker]
+
+    def finish(self) -> float:
+        return 0.0
+
+
+class VirtualClockTransport:
+    """Analytic arrivals; work runs lazily for drained events only."""
+
+    name = "virtual"
+
+    def __init__(self, straggler: StragglerModel):
+        self.straggler = straggler
+
+    def submit_round(self, shards, f, round_idx, *, t_compute=None,
+                     budget=None, min_ready=1) -> _VirtualRoundHandle:
+        if t_compute is None:
+            raise ValueError("virtual-clock rounds need t_compute (the "
+                             "representative per-worker compute seconds)")
+        events = virtual_timeline(self.straggler.delays(round_idx), t_compute)
+        return _VirtualRoundHandle(shards, f, events, budget, min_ready)
+
+    def close(self) -> None:
+        pass
+
+
+# --------------------------------------------------------------------------
+# real threads
+# --------------------------------------------------------------------------
+
+class _ThreadRoundHandle:
+    def __init__(self, transport: "ThreadTransport", shards, f,
+                 delays: np.ndarray, budget, min_ready):
+        self._tr = transport
+        self._budget = budget
+        self._min_ready = max(int(min_ready), 1)
+        self._done = {}
+        self._consumed = 0
+        self._finished_at: Optional[float] = None
+        self._t0 = time.perf_counter()
+
+        def work(i):
+            time.sleep(delays[i])
+            return i, f(shards[i])
+
+        self._pending = {transport.executor.submit(work, i)
+                         for i in range(len(delays))}
+
+    def events(self) -> Iterator[ArrivalEvent]:
+        arrived: List[ArrivalEvent] = []
+        while self._pending or arrived:
+            while arrived:
+                self._consumed += 1
+                yield arrived.pop(0)
+            if not self._pending:
+                return
+            timeout = None
+            if self._budget is not None and self._consumed >= self._min_ready:
+                timeout = max(self._budget -
+                              (time.perf_counter() - self._t0), 0.0)
+            finished, self._pending = wait(self._pending, timeout=timeout,
+                                           return_when=FIRST_COMPLETED)
+            if self._budget is not None and not finished:
+                return          # woke AT the budget, not at a straggler
+            for fu in finished:
+                i, res = fu.result()
+                self._done[i] = res
+                arrived.append(ArrivalEvent(
+                    t=time.perf_counter() - self._t0, worker=int(i)))
+
+    def result(self, worker: int):
+        return self._done[worker]
+
+    def finish(self) -> float:
+        if self._finished_at is None:
+            self._finished_at = time.perf_counter() - self._t0
+            for fu in self._pending:
+                # queued-but-unstarted work is dropped; a running straggler
+                # that fails later is recorded and raised next round
+                if not fu.cancel():
+                    fu.add_done_callback(self._tr._stray)
+            self._pending = set()
+        return self._finished_at
+
+
+class ThreadTransport:
+    """Real thread workers behind ONE long-lived executor."""
+
+    name = "threads"
+
+    def __init__(self, n_workers: int, straggler: StragglerModel):
+        self.n = n_workers
+        self.straggler = straggler
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self._stray_errors: list = []
+
+    @property
+    def executor(self) -> ThreadPoolExecutor:
+        """The transport's single executor (lazily created).
+
+        Sized 2N, not N: an early-stopped round leaves up to N-1
+        stragglers sleeping on their threads, and the next round's N
+        submissions must all start immediately or their arrival
+        timestamps would include queueing delay the straggler model never
+        injected."""
+        if self._executor is None:
+            self._executor = ThreadPoolExecutor(max_workers=2 * self.n)
+        return self._executor
+
+    def _stray(self, fu):
+        if not fu.cancelled() and fu.exception() is not None:
+            self._stray_errors.append(fu.exception())
+
+    def _raise_stray(self, msg: str):
+        if self._stray_errors:
+            err = self._stray_errors[0]
+            self._stray_errors.clear()
+            raise RuntimeError(msg) from err
+
+    def submit_round(self, shards, f, round_idx, *, t_compute=None,
+                     budget=None, min_ready=1) -> _ThreadRoundHandle:
+        # surface a worker the previous round never consumed dying —
+        # better than silently running on a broken pool
+        self._raise_stray("a straggler worker of an earlier round failed "
+                          "after its round decoded")
+        delays = self.straggler.delays(round_idx)
+        return _ThreadRoundHandle(self, shards, f, delays, budget, min_ready)
+
+    def close(self) -> None:
+        """Shut the executor down (stragglers of the last round included);
+        surfaces any failure an unconsumed straggler hit after its round.
+        Idempotent — a second close is a no-op."""
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+        self._raise_stray("a straggler worker failed after its round "
+                          "decoded")
+
+
+def build_transport(backend: str, n_workers: int,
+                    straggler: StragglerModel) -> Transport:
+    """``TransportSpec.backend`` -> transport instance."""
+    if backend == "virtual":
+        return VirtualClockTransport(straggler)
+    if backend == "threads":
+        return ThreadTransport(n_workers, straggler)
+    raise ValueError(f"unknown transport backend {backend!r} "
+                     f"(virtual | threads)")

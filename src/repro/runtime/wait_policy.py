@@ -197,11 +197,18 @@ _NAMED = {
 
 def resolve_policy(policy) -> WaitPolicy:
     """None -> FixedQuantile (the seed default); str -> by name; instances
-    pass through."""
+    pass through; spec objects (``repro.api.WaitSpec`` — anything with a
+    ``build()`` yielding a WaitPolicy) are built, so every policy-taking
+    surface accepts the declarative form too."""
     if policy is None:
         return FixedQuantile()
     if isinstance(policy, WaitPolicy):
         return policy
+    build = getattr(policy, "build", None)
+    if callable(build):
+        built = build()
+        if isinstance(built, WaitPolicy):
+            return built
     if isinstance(policy, str):
         key = policy.lower()
         if key in _NAMED:

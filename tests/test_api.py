@@ -1,0 +1,591 @@
+"""The declarative ClusterSpec → Session surface: serialization,
+validation, legacy-shim bit-parity, transport seam, lifecycle, serving."""
+
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import (ClusterSpec, CodeSpec, CryptoSpec, PrivacySpec,
+                       Session, StragglerSpec, TransportSpec, WaitSpec)
+from repro.runtime import Deadline, ErrorTarget, FirstK, FixedQuantile, \
+    resolve_policy
+from repro.runtime.master_worker import DistributedMatmul
+from repro.runtime.transport import (ThreadTransport, VirtualClockTransport,
+                                     build_transport)
+from repro.runtime.straggler import StragglerModel
+
+rng = np.random.default_rng(0)
+A = rng.standard_normal((256, 64)).astype(np.float32)
+B = rng.standard_normal((64, 32)).astype(np.float32)
+
+
+def smooth(m, d, seed=1):
+    r = np.random.default_rng(seed)
+    t = np.arange(m)[:, None] / m
+    return sum(r.standard_normal(d)[None, :] * np.cos(np.pi * c * t) /
+               (1 + c) ** 2.0 for c in range(5)).astype(np.float32)
+
+
+SPEC = ClusterSpec(
+    code=CodeSpec(scheme="spacdc", n_workers=10, k_blocks=4),
+    privacy=PrivacySpec(t_colluding=1, noise_scale=0.05),
+    straggler=StragglerSpec(n_stragglers=2), seed=3)
+
+
+# --------------------------------------------------------------------------
+# serialization
+# --------------------------------------------------------------------------
+
+class TestSpecSerialization:
+    def test_dict_round_trip_is_lossless(self):
+        spec = ClusterSpec(
+            code=CodeSpec(scheme="lcc", n_workers=12, k_blocks=6,
+                          extra={"deg_f": 1}),
+            privacy=PrivacySpec(t_colluding=2, noise_scale=0.1),
+            crypto=CryptoSpec(encrypt="real", cipher_mode="paper"),
+            wait=WaitSpec(policy="deadline", t_budget=0.005, fh_degree=3),
+            straggler=StragglerSpec(n_stragglers=3, mode="pareto", seed=9),
+            transport=TransportSpec(backend="threads"),
+            seed=7, pipeline_encode=True)
+        d = spec.to_dict()
+        back = ClusterSpec.from_dict(d)
+        assert back == spec
+        # nested values survive as typed dataclasses, not dicts
+        assert isinstance(back.code, CodeSpec)
+        assert back.code.extra == {"deg_f": 1}
+        assert back.wait.t_budget == 0.005 and back.wait.fh_degree == 3
+        assert back.crypto.encrypt == "real"
+        assert back.transport.backend == "threads"
+
+    def test_json_round_trip(self):
+        spec = ClusterSpec.serve_deadline(t_budget=0.004)
+        assert ClusterSpec.from_json(spec.to_json()) == spec
+
+    def test_round_trip_builds_equivalent_session(self):
+        spec = ClusterSpec(
+            code=CodeSpec(scheme="spacdc", n_workers=8, k_blocks=4),
+            privacy=PrivacySpec(t_colluding=1, noise_scale=0.05),
+            crypto=CryptoSpec(encrypt="modeled"),
+            wait=WaitSpec(policy="first_k", k=6),
+            straggler=StragglerSpec(n_stragglers=2), seed=1)
+        back = ClusterSpec.from_dict(spec.to_dict())
+        with Session(spec) as s1, Session(back) as s2:
+            assert s1.engine.scheme.name == s2.engine.scheme.name
+            assert type(s1.engine.policy) is type(s2.engine.policy)
+            assert s1.engine.policy == s2.engine.policy
+            assert s1.engine.encrypt == s2.engine.encrypt
+            assert s1.engine.pool.real_threads == s2.engine.pool.real_threads
+            o1, st1 = s1.matmul(A, B, round_idx=2)
+            o2, st2 = s2.matmul(A, B, round_idx=2)
+            np.testing.assert_array_equal(o1, o2)
+            assert st1.n_waited == st2.n_waited
+
+    def test_unknown_keys_rejected(self):
+        d = SPEC.to_dict()
+        d["typo_field"] = 1
+        with pytest.raises(ValueError, match="typo_field"):
+            ClusterSpec.from_dict(d)
+
+    def test_unknown_nested_keys_rejected(self):
+        d = SPEC.to_dict()
+        d["code"]["n_worker"] = 10          # typo'd nested key
+        with pytest.raises(ValueError, match="n_worker"):
+            ClusterSpec.from_dict(d)
+        d2 = SPEC.to_dict()
+        d2["wait"]["budget"] = 0.1
+        with pytest.raises(ValueError, match="budget"):
+            ClusterSpec.from_dict(d2)
+
+    def test_from_dict_rejects_cross_field_invalid_specs(self):
+        # deserialized configs are untrusted: from_dict re-runs validate()
+        d = ClusterSpec(code=CodeSpec(n_workers=4, k_blocks=2)).to_dict()
+        d["wait"] = {"policy": "first_k", "k": 99}
+        with pytest.raises(ValueError, match="first_k"):
+            ClusterSpec.from_dict(d)
+        d2 = SPEC.to_dict()
+        d2["code"]["fused"] = True
+        d2["transport"] = {"backend": "threads"}
+        with pytest.raises(ValueError, match="virtual-clock"):
+            ClusterSpec.from_dict(d2)
+
+    def test_presets_round_trip_and_validate(self):
+        for spec in (ClusterSpec.paper_fig3(), ClusterSpec.anytime_bench(),
+                     ClusterSpec.serve_deadline()):
+            assert ClusterSpec.from_dict(spec.to_dict()) == spec
+            spec.validate()
+
+    def test_specs_are_frozen(self):
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            SPEC.code.n_workers = 99
+
+
+# --------------------------------------------------------------------------
+# validation
+# --------------------------------------------------------------------------
+
+class TestSpecValidation:
+    def test_unknown_scheme_rejected(self):
+        spec = ClusterSpec(code=CodeSpec(scheme="quantum"))
+        with pytest.raises(KeyError, match="quantum"):
+            spec.validate()
+
+    def test_pair_coded_times_fused_rejected(self):
+        spec = ClusterSpec(code=CodeSpec(scheme="matdot", n_workers=8,
+                                         k_blocks=4, fused=True,
+                                         extra={"p": 2}))
+        with pytest.raises(ValueError, match="fused"):
+            spec.validate()
+
+    def test_threads_times_fused_rejected(self):
+        spec = ClusterSpec(code=CodeSpec(fused=True),
+                           transport=TransportSpec(backend="threads"))
+        with pytest.raises(ValueError, match="virtual-clock"):
+            spec.validate()
+
+    def test_threads_times_error_target_rejected(self):
+        spec = ClusterSpec(wait=WaitSpec(policy="error_target", eps=1e-2),
+                           transport=TransportSpec(backend="threads"))
+        with pytest.raises(ValueError, match="virtual"):
+            spec.validate()
+
+    def test_error_target_times_real_crypto_now_allowed(self):
+        # the combination the pre-spec runtime guarded with
+        # NotImplementedError — now a supported round (wire-split anytime)
+        spec = ClusterSpec(
+            code=CodeSpec(scheme="spacdc", n_workers=6, k_blocks=3),
+            privacy=PrivacySpec(t_colluding=1, noise_scale=0.05),
+            crypto=CryptoSpec(encrypt="real"),
+            wait=WaitSpec(policy="error_target", eps=1e-2))
+        spec.validate()
+
+    def test_bad_enum_values_rejected_at_construction(self):
+        with pytest.raises(ValueError):
+            TransportSpec(backend="carrier_pigeon")
+        with pytest.raises(ValueError):
+            CryptoSpec(encrypt="quantum")
+        with pytest.raises(ValueError):
+            CryptoSpec(cipher_mode="ecb")
+        with pytest.raises(ValueError):
+            WaitSpec(policy="deadline")             # missing t_budget
+        with pytest.raises(ValueError):
+            WaitSpec(policy="first_k")              # missing k
+        with pytest.raises(ValueError):
+            WaitSpec(policy="error_target")         # missing eps
+        with pytest.raises(ValueError):
+            WaitSpec(policy="patience")
+        with pytest.raises(ValueError):
+            StragglerSpec(mode="quantum")
+        with pytest.raises(ValueError):
+            CodeSpec(n_workers=0)
+
+    def test_first_k_beyond_pool_rejected(self):
+        spec = ClusterSpec(code=CodeSpec(n_workers=4, k_blocks=2),
+                           wait=WaitSpec(policy="first_k", k=9))
+        with pytest.raises(ValueError, match="first_k"):
+            spec.validate()
+
+    def test_wait_spec_builds_policies(self):
+        assert isinstance(WaitSpec().build(), FixedQuantile)
+        assert WaitSpec(policy="first_k", k=3).build() == FirstK(3)
+        assert WaitSpec(policy="deadline", t_budget=0.1).build() == \
+            Deadline(0.1)
+        assert WaitSpec(policy="error_target", eps=1e-3,
+                        min_prefix=5).build() == \
+            ErrorTarget(1e-3, min_prefix=5)
+
+    def test_wait_spec_accepted_by_policy_surfaces(self):
+        # resolve_policy builds spec objects, so every legacy
+        # policy-taking surface accepts the declarative form too
+        p = resolve_policy(WaitSpec(policy="deadline", t_budget=0.2))
+        assert p == Deadline(0.2)
+        dist = DistributedMatmul("spacdc", 6, 3, t_colluding=1,
+                                 wait_policy=WaitSpec(policy="first_k", k=4))
+        assert dist.policy == FirstK(4)
+
+    def test_wait_spec_through_legacy_shim_keeps_fh_degree(self):
+        # the shim must keep a declarative WaitSpec verbatim — rebuilding
+        # it from the built policy object would lose fh_degree
+        dist = DistributedMatmul(
+            "spacdc", 8, 3, t_colluding=1,
+            wait_policy=WaitSpec(policy="error_target", eps=1e-2,
+                                 fh_degree=5))
+        assert dist.fh_degree == 5
+        assert dist.spec.wait.fh_degree == 5
+        assert dist.policy == ErrorTarget(1e-2)
+
+    def test_wait_spec_rejects_other_policies_parameters(self):
+        with pytest.raises(ValueError, match="error_target"):
+            WaitSpec(policy="deadline", t_budget=0.01, eps=1e-2)
+        with pytest.raises(ValueError, match="first_k"):
+            WaitSpec(k=6)                        # fixed_quantile with a k
+        with pytest.raises(ValueError, match="deadline"):
+            WaitSpec(policy="first_k", k=3, t_budget=0.1)
+        with pytest.raises(ValueError, match="fh_degree"):
+            # d=0 FH == Berrut: the embedded-pair proxy degenerates
+            WaitSpec(policy="error_target", eps=1e-3, fh_degree=0)
+
+
+# --------------------------------------------------------------------------
+# legacy shim ≡ spec'd session, bit for bit
+# --------------------------------------------------------------------------
+
+class TestOldNewParity:
+    def _legacy_kwargs(self, **over):
+        kw = dict(n_workers=10, k_blocks=4, t_colluding=1, noise_scale=0.05,
+                  n_stragglers=2, seed=3)
+        kw.update(over)
+        return kw
+
+    def _spec(self, **over):
+        base = dict(
+            code=CodeSpec(scheme="spacdc", n_workers=10, k_blocks=4,
+                          fused=over.pop("fused", None)),
+            privacy=PrivacySpec(t_colluding=1, noise_scale=0.05),
+            straggler=StragglerSpec(n_stragglers=2), seed=3)
+        base.update(over)
+        return ClusterSpec(**base)
+
+    def test_fused_path(self):
+        old = DistributedMatmul("spacdc", **self._legacy_kwargs())
+        o1, s1 = old.matmul(A, B, round_idx=1)
+        with Session(self._spec()) as s:
+            o2, s2 = s.matmul(A, B, round_idx=1)
+        np.testing.assert_array_equal(o1, o2)
+        assert s1.n_waited == s2.n_waited
+        # arrival ORDER is deterministic; the times embed each engine's
+        # measured per-worker compute seconds (wall clock)
+        assert [w for _, w in s1.arrivals] == [w for _, w in s2.arrivals]
+
+    def test_loop_path(self):
+        old = DistributedMatmul("spacdc", fused=False,
+                                **self._legacy_kwargs())
+        o1, _ = old.matmul(A, B, round_idx=1)
+        with Session(self._spec(fused=False)) as s:
+            o2, _ = s.matmul(A, B, round_idx=1)
+        np.testing.assert_array_equal(o1, o2)
+
+    def test_encrypted_path(self):
+        old = DistributedMatmul("spacdc", encrypt="real",
+                                **self._legacy_kwargs())
+        o1, s1 = old.matmul(A, B, round_idx=1)
+        with Session(self._spec(crypto=CryptoSpec(encrypt="real"))) as s:
+            o2, s2 = s.matmul(A, B, round_idx=1)
+        np.testing.assert_array_equal(o1, o2)
+        assert s1.crypto_s > 0 and s2.crypto_s > 0
+
+    def test_anytime_path(self):
+        a, b = smooth(240, 32), rng.standard_normal((32, 16)).astype(np.float32)
+        old = DistributedMatmul("spacdc", wait_policy=ErrorTarget(5e-2),
+                                **self._legacy_kwargs())
+        o1, s1 = old.matmul(a, b, round_idx=0)
+        with Session(self._spec(wait=WaitSpec(policy="error_target",
+                                              eps=5e-2))) as s:
+            o2, s2 = s.matmul(a, b, round_idx=0)
+        np.testing.assert_array_equal(o1, o2)
+        assert s1.n_waited == s2.n_waited
+        assert s1.policy == s2.policy == "error_target"
+
+    def test_anytime_curve_parity(self):
+        a, b = smooth(240, 32), rng.standard_normal((32, 16)).astype(np.float32)
+        old = DistributedMatmul("spacdc", **self._legacy_kwargs())
+        with Session(self._spec()) as s:
+            p1 = old.anytime_curve(a, b, round_idx=0)
+            p2 = s.anytime_curve(a, b, round_idx=0)
+        assert [(p.worker, p.rel_err) for p in p1] == \
+            [(p.worker, p.rel_err) for p in p2]
+
+    def test_legacy_kwargs_map_onto_spec_fields(self):
+        spec = ClusterSpec.from_legacy_kwargs(
+            "lcc", 12, 6, t_colluding=2, n_stragglers=3, encrypt=True,
+            seed=5, fused=False, cipher_mode="paper",
+            wait_policy=Deadline(0.01), pipeline_encode=True,
+            noise_scale=0.2, deg_f=1)
+        assert spec.code == CodeSpec(scheme="lcc", n_workers=12, k_blocks=6,
+                                     fused=False, extra={"deg_f": 1})
+        assert spec.privacy == PrivacySpec(t_colluding=2, noise_scale=0.2)
+        assert spec.crypto.encrypt == "modeled"        # True -> modeled
+        assert spec.crypto.cipher_mode == "paper"
+        assert spec.wait.policy == "deadline" and spec.wait.t_budget == 0.01
+        assert spec.straggler.n_stragglers == 3
+        assert spec.seed == 5 and spec.pipeline_encode
+        # and it round-trips
+        assert ClusterSpec.from_dict(spec.to_dict()) == spec
+
+    def test_coded_master_matches_session_train_step(self):
+        from repro.runtime.master_worker import CodedMaster
+        x = rng.standard_normal((64, 784)).astype(np.float32)
+        y = rng.integers(0, 10, 64)
+        old = DistributedMatmul("spacdc", n_workers=8, k_blocks=4,
+                                t_colluding=1, n_stragglers=1, seed=0)
+        m = CodedMaster((784, 32, 10), old, lr=0.1, seed=0)
+        loss1, _ = m.train_batch(x, y)
+        spec = ClusterSpec(
+            code=CodeSpec(scheme="spacdc", n_workers=8, k_blocks=4),
+            privacy=PrivacySpec(t_colluding=1),
+            straggler=StragglerSpec(n_stragglers=1), seed=0)
+        with Session(spec) as s:
+            s.init_mlp((784, 32, 10), lr=0.1, seed=0)
+            loss2, _ = s.train_step(x, y)
+            assert loss1 == loss2
+            for w1, w2 in zip(m.weights, s.mlp_weights):
+                np.testing.assert_array_equal(w1, w2)
+
+
+# --------------------------------------------------------------------------
+# ErrorTarget through the encrypted round (the unblocked combination)
+# --------------------------------------------------------------------------
+
+class TestErrorTargetRealCrypto:
+    @pytest.mark.parametrize("cipher_mode", ["stream", "paper"])
+    def test_bit_identical_and_measured(self, cipher_mode):
+        a, b = smooth(240, 32), rng.standard_normal((32, 16)).astype(np.float32)
+        kw = dict(n_workers=10, k_blocks=4, t_colluding=1, noise_scale=0.05,
+                  n_stragglers=2, seed=0, wait_policy=ErrorTarget(5e-2))
+        plain = DistributedMatmul("spacdc", **kw)
+        real = DistributedMatmul("spacdc", encrypt="real",
+                                 cipher_mode=cipher_mode, **kw)
+        o1, s1 = plain.matmul(a, b, round_idx=1)
+        o2, s2 = real.matmul(a, b, round_idx=1)
+        np.testing.assert_array_equal(o1, o2)
+        assert s1.n_waited == s2.n_waited
+        assert s2.policy == "error_target"
+        assert s1.crypto_s == 0.0
+        assert s2.crypto_s > 0.0                 # measured wall time
+        assert s2.crypto_modeled_s > 0.0         # cross-check rides along
+        assert s2.crypto_s != s2.crypto_modeled_s
+
+    def test_loop_path_with_real_crypto(self):
+        a, b = smooth(240, 32), rng.standard_normal((32, 16)).astype(np.float32)
+        kw = dict(n_workers=10, k_blocks=4, t_colluding=1, noise_scale=0.05,
+                  n_stragglers=2, seed=0, fused=False,
+                  wait_policy=ErrorTarget(5e-2))
+        plain = DistributedMatmul("spacdc", **kw)
+        real = DistributedMatmul("spacdc", encrypt="real", **kw)
+        o1, _ = plain.matmul(a, b, round_idx=1)
+        o2, s2 = real.matmul(a, b, round_idx=1)
+        np.testing.assert_array_equal(o1, o2)
+        assert s2.crypto_s > 0.0
+
+    def test_compiles_once_per_shape_class(self):
+        a, b = smooth(240, 32), rng.standard_normal((32, 16)).astype(np.float32)
+        real = DistributedMatmul("spacdc", n_workers=8, k_blocks=4,
+                                 t_colluding=1, noise_scale=0.05,
+                                 n_stragglers=1, seed=0, encrypt="real",
+                                 wait_policy=ErrorTarget(5e-2))
+        real.matmul(a, b, round_idx=0)
+        traces = real.trace_count
+        assert traces > 0
+        for r in range(1, 4):                    # straggler churn, same shapes
+            real.matmul(a, b, round_idx=r)
+        assert real.trace_count == traces
+
+
+# --------------------------------------------------------------------------
+# fh_degree as a first-class decode config
+# --------------------------------------------------------------------------
+
+class TestFhDegreeConfig:
+    def test_plumbed_from_wait_spec(self):
+        with Session(ClusterSpec(
+                code=CodeSpec(scheme="spacdc", n_workers=8, k_blocks=3),
+                privacy=PrivacySpec(t_colluding=1),
+                wait=WaitSpec(fh_degree=4))) as s:
+            assert s.engine.fh_degree == 4
+        assert WaitSpec().fh_degree == 2         # the documented default
+
+    def test_degree_changes_the_embedded_pair(self):
+        spec = dict(code=CodeSpec(scheme="spacdc", n_workers=10, k_blocks=4),
+                    privacy=PrivacySpec(t_colluding=1, noise_scale=0.05),
+                    straggler=StragglerSpec(n_stragglers=2))
+        from repro.runtime.scheduler import virtual_events
+        with Session(ClusterSpec(wait=WaitSpec(fh_degree=2), **spec)) as s2, \
+                Session(ClusterSpec(wait=WaitSpec(fh_degree=3), **spec)) as s3:
+            events = virtual_events(s2.engine.straggler.delays(0), 1e-4)
+            _, _, hi2, v2 = s2.engine._prefix_weight_stacks(events)
+            _, _, hi3, v3 = s3.engine._prefix_weight_stacks(events)
+            # a higher blending degree is a different proxy decoder (and
+            # needs one more node before it validates)
+            assert np.asarray(v3).sum() < np.asarray(v2).sum()
+            both = np.asarray(v2).astype(bool) & np.asarray(v3).astype(bool)
+            assert np.abs(np.asarray(hi2)[both] -
+                          np.asarray(hi3)[both]).max() > 0
+
+    def test_scheme_proxy_accepts_degree(self):
+        from repro.core import registry
+        scheme = registry.build("spacdc", n_workers=8, k_blocks=3,
+                                t_colluding=1)
+        w2, v2 = scheme.anytime_proxy_weights(list(range(8)), fh_degree=2)
+        w4, v4 = scheme.anytime_proxy_weights(list(range(8)), fh_degree=4)
+        assert v2.sum() > v4.sum()
+
+
+# --------------------------------------------------------------------------
+# lifecycle: the executor is torn down exactly once, never leaks
+# --------------------------------------------------------------------------
+
+class TestSessionLifecycle:
+    THREADS_SPEC = ClusterSpec(
+        code=CodeSpec(scheme="spacdc", n_workers=4, k_blocks=2),
+        privacy=PrivacySpec(t_colluding=1, noise_scale=0.05),
+        straggler=StragglerSpec(n_stragglers=1, delay_s=0.005,
+                                jitter_scale=1e-4),
+        transport=TransportSpec(backend="threads"))
+
+    def test_repeated_open_close_never_grows_thread_count(self):
+        baseline = threading.active_count()
+        for i in range(3):
+            with Session(self.THREADS_SPEC) as s:
+                out, _ = s.matmul(A[:64], B, round_idx=i)
+                assert np.all(np.isfinite(out))
+                assert s.engine.pool._executor is not None
+            assert s.engine.pool._executor is None
+            assert threading.active_count() <= baseline
+
+    def test_close_is_idempotent_and_blocks_use(self):
+        s = Session(self.THREADS_SPEC)
+        s.matmul(A[:64], B, round_idx=0)
+        s.close()
+        assert s.closed
+        s.close()                                # second close: no-op
+        with pytest.raises(RuntimeError, match="closed"):
+            s.matmul(A[:64], B, round_idx=1)
+        with pytest.raises(RuntimeError, match="closed"):
+            s.anytime_curve(A[:64], B)
+
+    def test_virtual_session_close_is_trivial(self):
+        with Session(SPEC) as s:
+            s.matmul(A, B, round_idx=0)
+        assert s.closed and s.engine.pool._executor is None
+
+
+# --------------------------------------------------------------------------
+# the transport seam
+# --------------------------------------------------------------------------
+
+class TestTransportSeam:
+    def test_build_transport_names(self):
+        st = StragglerModel(4, 1, seed=0)
+        assert isinstance(build_transport("virtual", 4, st),
+                          VirtualClockTransport)
+        assert isinstance(build_transport("threads", 4, st), ThreadTransport)
+        with pytest.raises(ValueError):
+            build_transport("sockets", 4, st)
+
+    def test_virtual_handle_runs_only_drained_work(self):
+        st = StragglerModel(6, 2, seed=0)
+        tr = VirtualClockTransport(st)
+        calls = []
+        handle = tr.submit_round(list(range(6)), lambda x: calls.append(x)
+                                 or x * 2, 0, t_compute=1e-4)
+        events = [e for _, e in zip(range(3), handle.events())]
+        for e in events:
+            assert handle.result(e.worker) == e.worker * 2
+        assert sorted(calls) == sorted(e.worker for e in events)
+        assert len(calls) == 3                   # stragglers never ran
+        assert handle.finish() == 0.0
+
+    def test_virtual_handle_budget_stops_stream(self):
+        st = StragglerModel(6, 3, delay_s=0.5, seed=1)
+        tr = VirtualClockTransport(st)
+        handle = tr.submit_round(list(range(6)), lambda x: x, 0,
+                                 t_compute=1e-4, budget=0.1, min_ready=1)
+        events = list(handle.events())
+        assert 1 <= len(events) <= 3             # the stragglers never came
+        assert all(e.t <= 0.1 for e in events[1:])
+
+    def test_swapping_backend_is_the_only_change(self):
+        base = dict(code=CodeSpec(scheme="spacdc", n_workers=6, k_blocks=3),
+                    privacy=PrivacySpec(t_colluding=1, noise_scale=0.05),
+                    wait=WaitSpec(policy="deadline", t_budget=0.02),
+                    straggler=StragglerSpec(n_stragglers=2, delay_s=0.05,
+                                            jitter_scale=1e-4))
+        outs = {}
+        for backend in ("virtual", "threads"):
+            spec = ClusterSpec(transport=TransportSpec(backend=backend),
+                               **base)
+            with Session(spec) as s:
+                out, st = s.matmul(A[:96], B, round_idx=0)
+                outs[backend] = (out, st)
+        for backend, (out, st) in outs.items():
+            assert np.all(np.isfinite(out)), backend
+            assert st.policy == "deadline"
+        # the threads round really cut the 50ms stragglers at the budget
+        assert outs["threads"][1].n_waited < 6
+
+
+# --------------------------------------------------------------------------
+# coded serving (Session.serve)
+# --------------------------------------------------------------------------
+
+class TestServe:
+    def test_deadline_bounded_coded_decode_end_to_end(self):
+        spec = ClusterSpec.serve_deadline(t_budget=0.008, n_workers=8,
+                                          k_blocks=4, n_stragglers=2)
+        with Session(spec) as s:
+            rep = s.serve(arch="qwen2-7b", tiny=True, batch=2,
+                          prompt_len=8, gen=4, seed=0)
+        assert rep.tokens.shape == (2, 4)
+        assert rep.tokens.dtype == np.int32
+        assert len(rep.step_stats) == 4          # one coded round per step
+        assert all(st.policy == "deadline" for st in rep.step_stats)
+        # every generation step's coded matmul decoded at/before the budget
+        assert rep.steps_within_budget == 4
+        assert all(st.decode_at_s <= 0.008 + 1e-12 for st in rep.step_stats)
+        assert all(1 <= st.n_waited <= 8 for st in rep.step_stats)
+        assert 0.0 <= rep.argmax_agreement <= 1.0
+        assert rep.t_budget == 0.008
+
+    def test_agreement_diagnostic_is_optional(self):
+        import math
+        spec = ClusterSpec.serve_deadline(t_budget=0.008, n_workers=4,
+                                          k_blocks=2, n_stragglers=1)
+        with Session(spec) as s:
+            rep = s.serve(arch="qwen2-7b", tiny=True, batch=1,
+                          prompt_len=4, gen=2, seed=0,
+                          check_agreement=False)
+            assert math.isnan(rep.argmax_agreement)
+            assert rep.tokens.shape == (1, 2)
+            # a second serve on the same session consumes fresh rounds
+            rep2 = s.serve(arch="qwen2-7b", tiny=True, batch=1,
+                           prompt_len=4, gen=2, seed=0,
+                           check_agreement=False)
+            assert s._round == 4 and len(rep2.step_stats) == 2
+
+    def test_serve_advances_the_session_round_counter(self):
+        # serve steps are session rounds: a later matmul (or a second
+        # serve) must see fresh straggler draws, not replay step 0's
+        spec = ClusterSpec.serve_deadline(t_budget=0.008, n_workers=6,
+                                          k_blocks=3, n_stragglers=1)
+        with Session(spec) as s:
+            s.serve(arch="qwen2-7b", tiny=True, batch=1, prompt_len=4,
+                    gen=3, seed=0)
+            assert s._round == 3
+            _, st = s.matmul(A[:96], B)          # consumes round_idx=3
+            served = [w for _, w in s.round_stats[0].arrivals]
+            assert [w for _, w in st.arrivals] != served or \
+                s.engine.straggler.delays(0).tolist() == \
+                s.engine.straggler.delays(3).tolist()
+
+    def test_serve_gen_zero_is_empty_not_a_crash(self):
+        spec = ClusterSpec.serve_deadline(t_budget=0.008, n_workers=4,
+                                          k_blocks=2, n_stragglers=1)
+        with Session(spec) as s:
+            rep = s.serve(arch="qwen2-7b", tiny=True, batch=2,
+                          prompt_len=4, gen=0, seed=0)
+        assert rep.tokens.shape == (2, 0)
+        assert rep.step_stats == [] and rep.steps_within_budget == 0
+
+    def test_transport_swap_needs_no_other_spec_change(self):
+        # identical spec except TransportSpec(backend=...)
+        for backend in ("virtual", "threads"):
+            spec = ClusterSpec.serve_deadline(
+                t_budget=0.05, n_workers=4, k_blocks=2, n_stragglers=1,
+                backend=backend)
+            with Session(spec) as s:
+                rep = s.serve(arch="qwen2-7b", tiny=True, batch=1,
+                              prompt_len=4, gen=2, seed=0)
+            assert rep.tokens.shape == (1, 2), backend
+            assert len(rep.step_stats) == 2
+            assert all(st.policy == "deadline" for st in rep.step_stats)
