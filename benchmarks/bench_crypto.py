@@ -120,13 +120,21 @@ def measure(smoke: bool = False) -> dict:
     }
 
 
-def run(rows, smoke: bool = False):
+def run(rows, smoke: bool = False, gates=None):
     """benchmarks.run entry point: append (name, us, derived) CSV rows."""
     report = measure(smoke=smoke)
     for r in report["results"]:
         rows.append((f"crypto_{r['name']}", r["transport_ms"] * 1e3,
                      f"transport {r['speedup_transport']}x vs legacy, "
                      f"{r['transport_mb_s']['encrypt']} MB/s enc"))
+    if gates is not None:
+        g = report["gate"]
+        entry = next(r for r in report["results"] if r["name"] == g["entry"])
+        gates.append({"benchmark": "crypto",
+                      "metric": f"{g['entry']}_{g['metric']}",
+                      "value": entry[g["metric"]], "direction": "higher",
+                      "kind": "ratio",
+                      "threshold": g["min"] if g["enforced"] else None})
     return rows
 
 

@@ -1,0 +1,73 @@
+"""CI perf-regression gate: fresh smoke gate metrics vs the checked-in
+reference.
+
+  PYTHONPATH=src python benchmarks/check_regression.py \
+      --ref BENCH_summary_smoke.json --fresh /tmp/BENCH_summary.json
+
+Compares the ``kind == "ratio"`` rows (speedups, overheads) of two
+``benchmarks.run`` summaries by ``(benchmark, metric)`` and fails if any
+regressed more than ``--tolerance`` (default 25%) in its ``direction``.
+Only ratios are compared: they are roughly machine-portable, while
+absolute wall times are not — a CI runner is not the quiet machine the
+checked-in numbers came from.  A ratio row present in the reference but
+missing from the fresh run is itself a failure (a silently-dropped gate
+reads as "no regression").
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def compare(ref: dict, fresh: dict, tolerance: float) -> list:
+    """Return a list of human-readable failure strings."""
+    fresh_rows = {(r["benchmark"], r["metric"]): r for r in fresh["rows"]}
+    failures = []
+    for row in ref["rows"]:
+        if row.get("kind") != "ratio":
+            continue
+        key = (row["benchmark"], row["metric"])
+        got = fresh_rows.get(key)
+        if got is None:
+            failures.append(f"{key[0]}.{key[1]}: missing from fresh run")
+            continue
+        ref_v, v = float(row["value"]), float(got["value"])
+        if row["direction"] == "higher":
+            floor = ref_v * (1.0 - tolerance)
+            if v < floor:
+                failures.append(f"{key[0]}.{key[1]}: {v} < {floor:.3g} "
+                                f"(ref {ref_v}, higher is better)")
+        else:
+            ceil = ref_v * (1.0 + tolerance)
+            if v > ceil:
+                failures.append(f"{key[0]}.{key[1]}: {v} > {ceil:.3g} "
+                                f"(ref {ref_v}, lower is better)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ref", required=True,
+                    help="checked-in reference BENCH_summary*.json")
+    ap.add_argument("--fresh", required=True,
+                    help="summary written by the fresh benchmarks.run")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional regression per ratio metric")
+    args = ap.parse_args()
+    ref = json.loads(Path(args.ref).read_text())
+    fresh = json.loads(Path(args.fresh).read_text())
+    failures = compare(ref, fresh, args.tolerance)
+    n = sum(1 for r in ref["rows"] if r.get("kind") == "ratio")
+    if failures:
+        for f in failures:
+            print(f"REGRESSION {f}", file=sys.stderr)
+        sys.exit(f"{len(failures)}/{n} gate metrics regressed "
+                 f">{args.tolerance:.0%}")
+    print(f"ok: {n} ratio metrics within {args.tolerance:.0%} of reference")
+
+
+if __name__ == "__main__":
+    main()

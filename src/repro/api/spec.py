@@ -130,9 +130,19 @@ class CryptoSpec:
     per-element rate) or ``"real"`` (genuine limb-vectorized ciphertexts on
     every master↔worker transfer, measured ``crypto_s``).  ``cipher_mode``:
     ``"stream"`` (per-message nonces — the hardened default) or ``"paper"``
-    (the paper-faithful single-mask construction)."""
+    (the paper-faithful single-mask construction).
+
+    ``fused``: whether a ``"real"`` round runs as ONE jitted dispatch
+    (keystream + mask-add inside the coded-matmul program — see
+    ``kernels.encrypted_round``) or as the staged path split at its wire
+    boundaries.  ``None`` (default) fuses whenever the round itself is
+    fused (``code.fused`` resolution + virtual transport); ``True``
+    demands it (validation rejects specs whose round can't fuse);
+    ``False`` keeps the staged path.  Outputs are bit-identical either
+    way."""
     encrypt: Optional[str] = None
     cipher_mode: str = "stream"
+    fused: Optional[bool] = None
 
     def __post_init__(self):
         # accept the legacy DistributedMatmul spellings at the boundary
@@ -144,6 +154,13 @@ class CryptoSpec:
         if self.cipher_mode not in _CIPHER_MODES:
             raise ValueError(f"crypto: cipher_mode must be one of "
                              f"{_CIPHER_MODES}, got {self.cipher_mode!r}")
+        if self.fused not in (None, True, False):
+            raise ValueError(f"crypto: fused must be None, True or False, "
+                             f"got {self.fused!r}")
+        if self.fused is not None and self.encrypt != "real":
+            raise ValueError(
+                "crypto: fused only applies to encrypt='real' (the modeled "
+                f"mode has no wire to fuse) — got encrypt={self.encrypt!r}")
 
     def to_dict(self):
         return _as_dict(self)
@@ -361,8 +378,29 @@ class ClusterSpec:
             raise ValueError(f"wait: first_k k={self.wait.k} exceeds "
                              f"n_workers={self.code.n_workers}")
         # NOTE: error_target × crypto "real" is a supported combination —
-        # the staged real round runs the 2-dispatch anytime pipeline split
-        # at its wire boundaries (see RoundEngine._matmul_anytime_real).
+        # the anytime pipeline runs over genuine ciphertexts (fused: two
+        # dispatches; staged: split at the wire boundaries).
+        if self.crypto.fused:
+            # crypto.fused=True demands the one-dispatch encrypted round,
+            # which lives inside the fused round program — reject specs
+            # whose round resolves to the loop path (mirrors the engine's
+            # use_fused resolution)
+            supports_fused = bool(getattr(scheme, "supports_fused", False))
+            stable = bool(getattr(scheme, "fused_decode_stable", False))
+            use_fused = ((supports_fused and stable)
+                         if self.code.fused is None else bool(self.code.fused))
+            if self.transport.backend == "threads":
+                raise ValueError(
+                    "crypto.fused=True needs the virtual-clock fused round; "
+                    "transport 'threads' runs the event-driven loop round — "
+                    "use transport 'virtual' or drop crypto.fused")
+            if not use_fused:
+                raise ValueError(
+                    "crypto.fused=True needs a fused round to fuse into, but "
+                    f"this spec resolves to the loop path ({self.code.scheme!r}"
+                    " unfused/unstable or code.fused=False) — set "
+                    "code.fused=True on a linear data-coded scheme or drop "
+                    "crypto.fused")
         return self
 
     def build_scheme(self):

@@ -421,52 +421,115 @@ def seed_words(secret_x, secret_y, nonce: int) -> np.ndarray:
 # encrypt/decrypt direction fuses into one elementwise XLA program.  Parity
 # with the numpy/legacy paths is asserted in tests/test_crypto.py.
 
-def stream_mask_traced(seed8, n_words: int, n_limbs: int):
-    """(8,) uint32 seed words -> (n_words, n_limbs) stream-mask limb planes.
+def _sha_round_step(carry, k):
+    """One SHA-256 compression round over a lane vector; scanned 64×.
 
-    In-trace batched SHA-256 counter PRF (counters from iota; < 2^32 blocks).
-    No modular reduction: the 64-bit mask words are < q for any modulus
-    wider than 64 bits (the caller falls back to the numpy path otherwise).
+    ``carry`` is the 16-slot message-schedule window (as a tuple, rotated
+    by static position — no dynamic indexing anywhere, which is what the
+    rolled ``fori_loop`` twin paid ~4× runtime for) followed by the 8-word
+    hash state.
+    """
+    w, (a, bb, c, d, e, f, g, h) = carry[:16], carry[16:]
+    wt = w[0]
+    S1 = _rotr(e, 6) ^ _rotr(e, 11) ^ _rotr(e, 25)
+    ch = (e & f) ^ (~e & g)
+    t1 = h + S1 + ch + k + wt
+    S0 = _rotr(a, 2) ^ _rotr(a, 13) ^ _rotr(a, 22)
+    maj = (a & bb) ^ (a & c) ^ (bb & c)
+    s0 = _rotr(w[1], 7) ^ _rotr(w[1], 18) ^ (w[1] >> np.uint32(3))
+    s1 = _rotr(w[14], 17) ^ _rotr(w[14], 19) ^ (w[14] >> np.uint32(10))
+    # slot 0 holds w[t]; the rotation drops it and appends w[t+16]
+    wn = wt + s0 + w[9] + s1
+    return w[1:] + (wn, t1 + S0 + maj, a, bb, c, d + t1, e, f, g), None
+
+
+# Lanes per inner SHA scan: the 24-array carry is lane_chunk*24*4 bytes
+# (384 KB at 4096), small enough to stay cache-resident across the 64
+# rounds.  One big scan over 100k+ lanes spills the carry to memory every
+# round and runs ~2.3× slower end to end (measured on the fig-3 wide
+# wire-back: 30 channels × 8192 blocks).
+_LANE_CHUNK = 4096
+
+
+def keystream_words_traced_batched(seeds, n_words: int,
+                                   lane_chunk: int = _LANE_CHUNK):
+    """(C, 8) uint32 seed-word channels -> ((C, n_words), (C, n_words))
+    uint32 mask word halves (lo, hi); channel i's u64 stream-mask word j is
+    ``hi[i, j] << 32 | lo[i, j]``.
+
+    In-trace batched SHA-256 counter PRF (per-channel counters from iota;
+    < 2^32 blocks), bit-exact with :func:`keystream_u64` per channel.  All
+    (channel, block) lanes are flattened into one lane axis and processed
+    ``lane_chunk`` at a time by an outer scan whose body runs the 64-round
+    compression scan — chunking keeps the 24-array round carry in cache
+    (see ``_LANE_CHUNK``), which is why this exists instead of
+    ``jax.vmap(keystream_words_traced)``.
     """
     import jax
     import jax.numpy as jnp
-    n_blocks = -(-n_words // 4)
-    lo = jnp.arange(n_blocks, dtype=jnp.uint32)
+    n_ch = seeds.shape[0]
+    n_blocks = max(-(-n_words // 4), 1)
+    lanes = n_ch * n_blocks
+    lo = jnp.tile(jnp.arange(n_blocks, dtype=jnp.uint32), n_ch)
     hi = jnp.zeros_like(lo)
-    w16 = [jnp.broadcast_to(jnp.asarray(w, jnp.uint32), (n_blocks,))
-           for w in _counter_schedule(seed8, lo, hi, jnp)]
-    # One fori_loop step per SHA round, extending the message schedule
-    # through a rolling 16-slot window: at step t slot t%16 holds w[t] and
-    # is overwritten with w[t+16] (which needs w[t], w[t+1], w[t+9],
-    # w[t+14] — all still live).  A rolled loop keeps the jit graph ~50 ops
-    # instead of ~1400, so new shard shapes compile in well under a second;
-    # runtime is memory-bound either way.
-    karr = jnp.asarray(_SHA_K)
-    h0 = [jnp.broadcast_to(jnp.uint32(v), (n_blocks,)) for v in _SHA_H0]
+    seed_lanes = tuple(jnp.repeat(seeds[:, i], n_blocks) for i in range(8))
+    w16 = tuple(jnp.broadcast_to(jnp.asarray(w, jnp.uint32), (lanes,))
+                for w in _counter_schedule(seed_lanes, lo, hi, jnp))
+    ks = jnp.asarray(_SHA_K)
 
-    def body(t, carry):
-        wwin, a, bb, c, d, e, f, g, h = carry
-        wt = wwin[t % 16]
-        S1 = _rotr(e, 6) ^ _rotr(e, 11) ^ _rotr(e, 25)
-        ch = (e & f) ^ (~e & g)
-        t1 = h + S1 + ch + karr[t] + wt
-        S0 = _rotr(a, 2) ^ _rotr(a, 13) ^ _rotr(a, 22)
-        maj = (a & bb) ^ (a & c) ^ (bb & c)
-        w15, w2 = wwin[(t + 1) % 16], wwin[(t + 14) % 16]
-        s0 = _rotr(w15, 7) ^ _rotr(w15, 18) ^ (w15 >> np.uint32(3))
-        s1 = _rotr(w2, 17) ^ _rotr(w2, 19) ^ (w2 >> np.uint32(10))
-        wwin = wwin.at[t % 16].set(wt + s0 + wwin[(t + 9) % 16] + s1)
-        return (wwin, t1 + S0 + maj, a, bb, c, d + t1, e, f, g)
+    if lanes <= lane_chunk:
+        h0 = tuple(jnp.broadcast_to(jnp.uint32(v), (lanes,)) for v in _SHA_H0)
+        carry, _ = jax.lax.scan(_sha_round_step, w16 + h0, ks)
+        digest = [v + jnp.uint32(h) for v, h in zip(carry[16:], _SHA_H0)]
+    else:
+        pad = -lanes % lane_chunk
+        n_chunks = (lanes + pad) // lane_chunk
+        w16c = tuple(jnp.pad(w, (0, pad)).reshape(n_chunks, lane_chunk)
+                     for w in w16)
+        h0 = tuple(jnp.broadcast_to(jnp.uint32(v), (lane_chunk,))
+                   for v in _SHA_H0)
 
-    carry = jax.lax.fori_loop(0, 64, body, (jnp.stack(w16), *h0))
-    digest = [v + jnp.uint32(h) for v, h in zip(carry[1:], _SHA_H0)]
-    # digest words pair big-endian into u64 mask words w = d0<<32 | d1:
-    # little-endian limbs are (d1, d0); high limbs are zero
-    word_lo = jnp.stack(digest[1::2], axis=1).reshape(-1)
-    word_hi = jnp.stack(digest[0::2], axis=1).reshape(-1)
+        def chunk_body(_, w16_chunk):
+            carry, _ = jax.lax.scan(_sha_round_step, w16_chunk + h0, ks)
+            return None, tuple(v + jnp.uint32(h)
+                               for v, h in zip(carry[16:], _SHA_H0))
+
+        _, digest = jax.lax.scan(chunk_body, None, w16c)
+        digest = [d.reshape(-1)[:lanes] for d in digest]
+    # digest words pair big-endian into u64 mask words w = d0<<32 | d1
+    word_lo = jnp.stack(digest[1::2], axis=1).reshape(n_ch, -1)
+    word_hi = jnp.stack(digest[0::2], axis=1).reshape(n_ch, -1)
+    return word_lo[:, :n_words], word_hi[:, :n_words]
+
+
+def keystream_words_traced(seed8, n_words: int):
+    """(8,) uint32 seed words -> ((n_words,), (n_words,)) uint32 mask word
+    halves (lo, hi): the u64 stream-mask word for payload word i is
+    ``hi[i] << 32 | lo[i]``.
+
+    Single-channel face of :func:`keystream_words_traced_batched` (same
+    scan, same cache-chunking, bit-exact with :func:`keystream_u64`).  The
+    scan keeps the jit graph ~50 ops (new shard shapes compile in well
+    under a second) while running within ~2× of the unrolled numpy batch.
+    """
+    import jax.numpy as jnp
+    lo, hi = keystream_words_traced_batched(
+        jnp.asarray(seed8, jnp.uint32)[None, :], n_words)
+    return lo[0], hi[0]
+
+
+def stream_mask_traced(seed8, n_words: int, n_limbs: int):
+    """(8,) uint32 seed words -> (n_words, n_limbs) stream-mask limb planes.
+
+    Limb form of :func:`keystream_words_traced`: little-endian limbs of the
+    u64 mask words are (lo, hi); high limbs are zero.  No modular
+    reduction: the 64-bit mask words are < q for any modulus wider than
+    64 bits (the caller falls back to the numpy path otherwise).
+    """
+    import jax.numpy as jnp
+    word_lo, word_hi = keystream_words_traced(seed8, n_words)
     zero = jnp.zeros_like(word_lo)
-    mask = jnp.stack([word_lo, word_hi] + [zero] * (n_limbs - 2), axis=-1)
-    return mask[:n_words]
+    return jnp.stack([word_lo, word_hi] + [zero] * (n_limbs - 2), axis=-1)
 
 
 def fixed_encode_traced(x, q: int, frac_bits: int, n_limbs: int):

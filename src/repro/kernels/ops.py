@@ -181,6 +181,67 @@ def mea_decrypt_core(payload, mask_material, *, q: int, frac_bits: int,
     return unmasked[:, 0]
 
 
+def encrypted_coded_matmul(weights, blocks, rhs, material_out, material_back,
+                           *, q: int, mode: str,
+                           force_kernel: bool | None = None,
+                           return_wire: bool = False):
+    """One-dispatch encrypted round with kernel dispatch.
+
+    encode -> MEA-ECC wire-out -> batched worker matmul -> MEA-ECC
+    wire-back, one traceable program (see ``kernels.encrypted_round``).
+    ``force_kernel`` is the usual tri-state: None = kernel on TPU only,
+    True = Pallas ``mask_add`` wires + ``coded_matmul`` kernel (interpret
+    mode off-TPU), False = pure XLA with the specialized bits-codec wires.
+    ``return_wire`` also returns the (N, W, L) out/back ciphertext limb
+    planes (parity tests against ``mea_encrypt_core``).
+
+    Per-round state (straggler mask is downstream; stream nonces arrive as
+    fresh seed words in ``material_*``) is runtime data, so churn never
+    retraces; shape classes cache like the plain fused round.  Standalone
+    host-side wires should go through :func:`fused_wire`, which pads to
+    the same pow2 buckets as the cipher cores.
+    """
+    from .encrypted_round import encrypted_coded_matmul as _impl
+    use_kernel = _on_tpu() if force_kernel is None else bool(force_kernel)
+    return _impl(weights, blocks, rhs, material_out, material_back, q=q,
+                 mode=mode, use_kernel=use_kernel, interpret=not _on_tpu(),
+                 return_wire=return_wire)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "mode", "use_kernel",
+                                             "interpret"))
+def _fused_wire_core(words, material, *, q, mode, use_kernel, interpret):
+    from .encrypted_round import wire_roundtrip
+    x = jax.lax.bitcast_convert_type(words, jnp.float32)
+    out = wire_roundtrip(x, material, q=q, mode=mode, use_kernel=use_kernel,
+                         interpret=interpret)
+    return jax.lax.bitcast_convert_type(out, jnp.uint32)
+
+
+def fused_wire(words, material, *, q: int, mode: str,
+               force_kernel: bool | None = None):
+    """Standalone wire round trip (encrypt + pinned ciphertext + decrypt)
+    over (N, W) uint32 payload words, jitted per pow2 bucket.
+
+    The word axis pads to the same ``_bucket`` sizes as
+    ``mea_encrypt_core`` — the counter PRF is prefix-stable and the pad
+    lanes mask zeros, so pad-then-slice is bit-identical — which keeps
+    host-side callers (timing probes, staged-path upgrades) at one
+    compiled program per bucket instead of one per shape.
+    """
+    from ..crypto.mea_ecc import _bucket
+    words = jnp.asarray(words, jnp.uint32)
+    n, w = words.shape
+    wb = _bucket(w)
+    padded = jnp.pad(words, ((0, 0), (0, wb - w)))
+    out = _fused_wire_core(padded, jnp.asarray(material, jnp.uint32), q=q,
+                           mode=mode,
+                           use_kernel=_on_tpu() if force_kernel is None
+                           else bool(force_kernel),
+                           interpret=not _on_tpu())
+    return out[:, :w]
+
+
 def flash_attention(q, k, v, *, causal=True, softcap=0.0,
                     force_kernel: bool | None = None):
     """Full-sequence attention with kernel dispatch (positions implicit)."""

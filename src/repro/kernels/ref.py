@@ -50,6 +50,49 @@ def mask_add(payload: jnp.ndarray, mask: jnp.ndarray, q_limbs,
     return op(payload, mask, q_limbs, xp=jnp)
 
 
+def encrypted_coded_matmul(weights, blocks, rhs, material_out, material_back,
+                           *, q: int, mode: str):
+    """Encrypted-round oracle, computed naively: encode, run every wire
+    through the *general* limb cipher (codec embed -> full-width
+    ``add_mod`` mask-add -> ``sub_mod``), worker matmuls, wire the results
+    back.  Same contractions/precision as :func:`coded_matmul`, so the
+    output must be bit-identical to the plain oracle — the cipher round
+    trips are lossless by construction.
+
+    weights (N, J); blocks (J, blk, d); rhs (d, n_out); ``material_out`` /
+    ``material_back`` are per-channel (N, 8) PRF seed words (stream) or
+    (N, L) Ψ limbs (paper).
+    """
+    from ..crypto import field as _field
+    n_limbs = max(-(-q.bit_length() // 32), 1)
+    q_limbs = jnp.asarray(_field.int_to_limbs(q, n_limbs), jnp.uint32)
+
+    def wire(x, material):
+        words = jax.lax.bitcast_convert_type(
+            x.reshape(x.shape[0], -1).astype(jnp.float32), jnp.uint32)
+        zero = jnp.zeros_like(words)
+        limbs = jnp.stack([words] + [zero] * (n_limbs - 1), axis=-1)
+        material_ = jnp.asarray(material, jnp.uint32)
+        if mode == "stream":
+            mask = jax.vmap(lambda s: _field.stream_mask_traced(
+                s, words.shape[1], n_limbs))(material_)
+        else:
+            mask = jnp.broadcast_to(material_[:, None, :], limbs.shape)
+        ct = _field.add_mod(limbs, mask, q_limbs, xp=jnp)
+        ct = jax.lax.optimization_barrier(ct)
+        out = _field.sub_mod(ct, mask, q_limbs, xp=jnp)[..., 0]
+        return jax.lax.bitcast_convert_type(out, jnp.float32).reshape(x.shape)
+
+    flat = blocks.reshape(blocks.shape[0], -1).astype(jnp.float32)
+    coded = jnp.dot(weights.astype(jnp.float32), flat,
+                    precision=jax.lax.Precision.HIGHEST)
+    coded = coded.reshape((weights.shape[0],) + blocks.shape[1:])
+    coded = wire(coded, material_out)
+    out = jnp.einsum("nij,jk->nik", coded, rhs.astype(jnp.float32),
+                     precision=jax.lax.Precision.HIGHEST)
+    return wire(out, material_back).astype(blocks.dtype)
+
+
 def mha_reference(q, k, v, *, causal: bool, softcap: float = 0.0):
     """Dense multi-head attention oracle.  q (B,Sq,H,hd) k/v (B,Skv,KV,hd)."""
     b, sq, h, hd = q.shape

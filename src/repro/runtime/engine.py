@@ -16,8 +16,13 @@ runtime, plus the encrypted anytime round):
 
 * **fused**: encode → all N worker matmuls → masked decode in ONE jitted
   dispatch, LRU-cached per shape class (virtual clock).
-* **staged real**: the same round split at its wire boundaries so genuine
-  MEA-ECC ciphertexts cross between three jitted stages.
+* **fused real** (the default for ``encrypt="real"`` on fused rounds):
+  the SAME one dispatch with the MEA-ECC wire fused in — keystream +
+  limb mask-add/sub run inside the round program
+  (``kernels.encrypted_round``); ``CryptoSpec.fused`` knob.
+* **staged real** (``crypto.fused=False`` or loop-path schemes): the
+  round split at its wire boundaries so genuine MEA-ECC ciphertexts
+  cross between three jitted stages.
 * **anytime** (proxy-driven policies): 2 jitted dispatches — stage 1
   worker results, stage 2 every responder prefix decoded + embedded-pair
   error proxies in one batched contraction.
@@ -64,6 +69,12 @@ class RoundStats:
     decode_at_s: float = 0.0         # virtual time the decode fired
     pipelined_s: float = 0.0         # encode wall time hidden in the
                                      # previous round's wait window
+    # jitted dispatches the master's pipeline issued this round (counted at
+    # the call sites, not asserted from structure): 1 for a fused round —
+    # plain OR encrypted — 2 for the anytime pipeline, 3 + 2·(N + |resp|)
+    # for the staged real round.  0 on the loop path (per-worker oracle
+    # calls aren't round dispatches).
+    dispatches: int = 0
 
     @property
     def total_s(self):
@@ -261,6 +272,23 @@ class RoundEngine:
             self._master_kp = generate_keypair()
             self._worker_kps = [generate_keypair() for _ in range(self.n)]
             self._nonce = itertools.count(1)
+            # one-dispatch encrypted rounds: the wire runs INSIDE the fused
+            # round program (kernels.encrypted_round).  ECDH is symmetric,
+            # so one cached shared point per worker covers both directions.
+            from ..crypto.ecc import shared_secret
+            self._shared_pts = [shared_secret(self._mea.curve,
+                                              self._master_kp, kp.pk)
+                                for kp in self._worker_kps]
+            cf = spec.crypto.fused
+            self._crypto_fused = self.use_fused if cf is None else bool(cf)
+            if spec.crypto.cipher_mode == "paper":
+                # paper mode: one static Ψ per channel (the mask the staged
+                # path derives), reused every round — precompute the stack
+                self._psi_limbs = np.stack(
+                    [self._mea._mask_material(pt, None, "paper")
+                     for pt in self._shared_pts])
+            self._fused_crypto_t = {}       # shapes -> measured wire seconds
+        self.dispatch_count = 0             # jitted dispatches, all rounds
 
     def close(self):
         """Release the pool's long-lived executor.  Idempotent — the
@@ -309,9 +337,58 @@ class RoundEngine:
         recipient's public key, decrypt with its private key at the other
         end.  The bits codec makes the round trip bit-identical; the static
         session keys make the per-message EC cost a cache lookup."""
+        self.dispatch_count += 2            # encrypt core + decrypt core
         ct = self._mea.encrypt(np.asarray(arr), recipient_kp.pk,
                                sender=sender_kp, nonce=next(self._nonce))
         return self._mea.decrypt(ct, recipient_kp)
+
+    def _fused_mask_material(self):
+        """Per-round mask material stacks for the one-dispatch encrypted
+        round: (material_out, material_back), each (N, 8) PRF seed words
+        (stream — fresh nonce per channel per direction, same nonce stream
+        the staged ``_wire`` draws from) or the static (N, L) Ψ limb stack
+        (paper).  Host-side numpy; everything downstream is traced."""
+        if self._mea.mode == "paper":
+            return self._psi_limbs, self._psi_limbs
+        from ..crypto.field import seed_words
+        out = np.stack([seed_words(pt.x, pt.y, next(self._nonce))
+                        for pt in self._shared_pts])
+        back = np.stack([seed_words(pt.x, pt.y, next(self._nonce))
+                         for pt in self._shared_pts])
+        return out, back
+
+    def _fused_crypto_time(self, blk: int, d: int, n_out: int) -> float:
+        """Measured wall seconds of the round's wire work alone — the two
+        in-trace cipher applications (shards out, results back) at this
+        round's payload shapes, timed once per shape class on a jitted
+        wire-only program and cached.  ``RoundStats.crypto_s`` attribution
+        for the fused timeline: the fused round has no wire boundary to
+        put a timer on, so the cost is measured where it can be isolated
+        and subtracted from the master's single-dispatch wall time."""
+        key = (blk, d, n_out)
+        if key not in self._fused_crypto_t:
+            from ..kernels.encrypted_round import wire_roundtrip
+            mode = self._mea.mode
+            q = self._mea.curve.q
+            kern = bool(self.scheme.use_kernel) \
+                if self.scheme.use_kernel is not None else False
+            mat_out, mat_back = self._fused_mask_material()
+
+            def _wires(x_out, x_back, mo, mb):
+                return (wire_roundtrip(x_out, mo, q=q, mode=mode,
+                                       use_kernel=kern),
+                        wire_roundtrip(x_back, mb, q=q, mode=mode,
+                                       use_kernel=kern))
+
+            fn = jax.jit(_wires)
+            args = (jnp.zeros((self.n, blk, d), jnp.float32),
+                    jnp.zeros((self.n, blk, n_out), jnp.float32),
+                    jnp.asarray(mat_out), jnp.asarray(mat_back))
+            jax.block_until_ready(fn(*args))           # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            self._fused_crypto_t[key] = time.perf_counter() - t0
+        return self._fused_crypto_t[key]
 
     # ------------------------------------------------------- fused pipeline
     def _fused_fn(self, a_shape, b_shape, dtype):
@@ -373,6 +450,42 @@ class RoundEngine:
         else:
             self._fused_cache.move_to_end(key)
         return fns
+
+    def _fused_real_fn(self, a_shape, b_shape, dtype):
+        """The ONE-dispatch encrypted round for one shape class, LRU-cached:
+        encode → MEA-ECC wire-out → batched worker matmul → wire-back →
+        masked decode, a single jitted program (``kernels.ops.
+        encrypted_coded_matmul`` + the scheme's masked decode).  The
+        straggler mask and the per-round mask material (stream nonces) are
+        runtime arguments, so responder churn and fresh nonces never
+        recompile.  The wire is the lossless bits codec, so the output is
+        bit-identical to both the plain fused round and the staged real
+        round (same contractions, same precision) — asserted in tests."""
+        key = ("real_fused", a_shape, b_shape, dtype)
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            scheme = self.scheme
+            m, n_out = a_shape[0], b_shape[-1]
+            from ..kernels.ops import encrypted_coded_matmul
+            enc = jnp.asarray(scheme.fused_encoder_matrix(), jnp.float32)
+            q, mode = self._mea.curve.q, self._mea.mode
+
+            def _round(a, b, mask, mat_out, mat_back):
+                self.trace_count += 1      # runs at trace time only
+                results = encrypted_coded_matmul(
+                    enc, scheme.fused_blocks(a), b, mat_out, mat_back,
+                    q=q, mode=mode, force_kernel=scheme.use_kernel)
+                dec = scheme._combine(scheme.decode_matrix_masked(mask),
+                                      results)
+                return scheme.reconstruct_matmul(dec, m, n_out)
+
+            fn = jax.jit(_round)
+            self._fused_cache[key] = fn
+            if len(self._fused_cache) > self._fused_cache_max:
+                self._fused_cache.popitem(last=False)
+        else:
+            self._fused_cache.move_to_end(key)
+        return fn
 
     def _worker_compute_time(self, lhs_shape, rhs_shape) -> float:
         """Virtual-clock per-worker latency: time ONE jitted batched matmul
@@ -448,6 +561,7 @@ class RoundEngine:
         # master math (encode + decode + reassembly): one dispatch
         t0 = time.perf_counter()
         out = fn(a, b, jnp.asarray(plan.mask))
+        self.dispatch_count += 1
         jax.block_until_ready(out)
         t_master = time.perf_counter() - t0
         crypto_s = self._crypto_overhead_elems(self.n * blk * a.shape[1],
@@ -457,6 +571,42 @@ class RoundEngine:
         stats = self._stats(plan.events, plan.wait_s, encode_s=t_master,
                             compute_wait_s=plan.wait_s, decode_s=0.0,
                             crypto_s=crypto_s, n_waited=len(plan.responders),
+                            dispatches=1,
+                            pipelined_s=self._account_encode(hideable,
+                                                             plan.wait_s))
+        return np.asarray(out), stats
+
+    def _matmul_real_fused(self, a: jnp.ndarray, b: jnp.ndarray,
+                           round_idx: int):
+        """The encrypted round as ONE dispatch: the wire runs inside the
+        fused round program (see :meth:`_fused_real_fn`), so an encrypted
+        round costs one jitted dispatch exactly like a plain round —
+        versus the staged path's three stages plus two cipher-core
+        dispatches per transfer.  ``crypto_s`` is attributed from the
+        fused timeline: the wire work is timed in isolation once per shape
+        class (:meth:`_fused_crypto_time`) and subtracted from the
+        master's single-dispatch wall time; the modeled estimate rides
+        along in ``crypto_modeled_s`` as a cross-check."""
+        fn = self._fused_real_fn(a.shape, b.shape, str(a.dtype))
+        blk, plan = self._virtual_round_plan(a.shape, b.shape, round_idx)
+        mat_out, mat_back = self._fused_mask_material()
+        t0 = time.perf_counter()
+        out = fn(a, b, jnp.asarray(plan.mask), jnp.asarray(mat_out),
+                 jnp.asarray(mat_back))
+        self.dispatch_count += 1
+        jax.block_until_ready(out)
+        t_master = time.perf_counter() - t0
+        crypto_s = min(self._fused_crypto_time(blk, a.shape[1], b.shape[-1]),
+                       t_master)
+        modeled = self._crypto_overhead_elems(self.n * blk * a.shape[1],
+                                              np.float32)
+        encode_s = t_master - crypto_s
+        hideable = (0.0 if self._pipeline is None else
+                    min(encode_s, self._encode_only_time(a.shape)))
+        stats = self._stats(plan.events, plan.wait_s, encode_s=encode_s,
+                            compute_wait_s=plan.wait_s, decode_s=0.0,
+                            crypto_s=crypto_s, n_waited=len(plan.responders),
+                            crypto_modeled_s=modeled, dispatches=1,
                             pipelined_s=self._account_encode(hideable,
                                                              plan.wait_s))
         return np.asarray(out), stats
@@ -469,6 +619,7 @@ class RoundEngine:
         writable numpy copy so responder slots can be overwritten with
         their decrypted wire payloads."""
         t0 = time.perf_counter()
+        self.dispatch_count += 1
         enc = np.asarray(enc_fn(a))                      # (N, blk, d)
         t_enc = time.perf_counter() - t0
         # wire out: each worker receives (and decrypts) its coded shard
@@ -478,6 +629,7 @@ class RoundEngine:
                            for i in range(self.n)])
         crypto_out = time.perf_counter() - t0
         t0 = time.perf_counter()
+        self.dispatch_count += 1
         results = np.array(worker_fn(jnp.asarray(shards), b))
         t_enc += time.perf_counter() - t0
         return results, t_enc, crypto_out
@@ -503,6 +655,7 @@ class RoundEngine:
                                                         str(a.dtype))
         blk, plan = self._virtual_round_plan(a.shape, b.shape, round_idx)
         resp, wait_s, mask = plan.responders, plan.wait_s, plan.mask
+        d0 = self.dispatch_count
         results, t_enc, crypto_s = self._staged_stage1(a, b, enc_fn,
                                                        worker_fn)
         # wire back: the responders' products return encrypted (stragglers
@@ -513,6 +666,7 @@ class RoundEngine:
                                     self._master_kp)
         crypto_s += time.perf_counter() - t0
         t0 = time.perf_counter()
+        self.dispatch_count += 1
         out = decode_fn(jnp.asarray(results), jnp.asarray(mask))
         jax.block_until_ready(out)
         t_dec = time.perf_counter() - t0
@@ -524,6 +678,7 @@ class RoundEngine:
                             compute_wait_s=wait_s, decode_s=t_dec,
                             crypto_s=crypto_s, n_waited=len(resp),
                             crypto_modeled_s=modeled,
+                            dispatches=self.dispatch_count - d0,
                             pipelined_s=self._account_encode(hideable,
                                                              wait_s))
         return np.asarray(out), stats
@@ -544,6 +699,35 @@ class RoundEngine:
                 self.trace_count += 1      # runs at trace time only
                 return coded_matmul(enc, scheme.fused_blocks(a), b,
                                     force_kernel=scheme.use_kernel)
+
+            fn = jax.jit(_results)
+            self._fused_cache[key] = fn
+            if len(self._fused_cache) > self._fused_cache_max:
+                self._fused_cache.popitem(last=False)
+        else:
+            self._fused_cache.move_to_end(key)
+        return fn
+
+    def _anytime_results_real_fn(self, a_shape, b_shape, dtype):
+        """Jitted stage 1 of the ENCRYPTED anytime round: encode + wire-out
+        + all N worker matmuls + wire-back, one dispatch (the encrypted
+        twin of :meth:`_anytime_results_fn`).  Every worker's product
+        crosses the wire in-dispatch — the one-dispatch tradeoff: the
+        arrivals past the stop prefix transmit too, where the staged path
+        wires back only what the policy consumed."""
+        key = ("any_results_real", a_shape, b_shape, dtype)
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            scheme = self.scheme
+            from ..kernels.ops import encrypted_coded_matmul
+            enc = jnp.asarray(scheme.fused_encoder_matrix(), jnp.float32)
+            q, mode = self._mea.curve.q, self._mea.mode
+
+            def _results(a, b, mat_out, mat_back):
+                self.trace_count += 1      # runs at trace time only
+                return encrypted_coded_matmul(
+                    enc, scheme.fused_blocks(a), b, mat_out, mat_back,
+                    q=q, mode=mode, force_kernel=scheme.use_kernel)
 
             fn = jax.jit(_results)
             self._fused_cache[key] = fn
@@ -634,8 +818,10 @@ class RoundEngine:
         _, t_comp = self._round_compute_time(a.shape, b.shape)
         events = virtual_events(self.straggler.delays(round_idx), t_comp)
         w_lo, ready, w_hi, valid = self._prefix_weight_stacks(events)
+        self.dispatch_count += 1
         results = self._anytime_results_fn(a.shape, b.shape,
                                            str(a.dtype))(a, b)
+        self.dispatch_count += 1
         out = self._anytime_curve_fn(a.shape, b.shape, str(a.dtype),
                                      with_ref=with_ref)(
             results, w_lo, w_hi, valid, a, b)
@@ -664,7 +850,52 @@ class RoundEngine:
                     min(t_master, self._encode_only_time(a.shape)))
         stats = self._stats(events, wait_s, encode_s=t_master,
                             compute_wait_s=wait_s, decode_s=0.0,
+                            crypto_s=crypto_s, n_waited=stop, dispatches=2,
+                            pipelined_s=self._account_encode(hideable,
+                                                             wait_s))
+        return out, stats
+
+    def _matmul_anytime_real_fused(self, a: jnp.ndarray, b: jnp.ndarray,
+                                   round_idx: int):
+        """The encrypted anytime round as TWO dispatches: stage 1 is the
+        one-dispatch encrypted pipeline (encode + wire-out + all worker
+        matmuls + wire-back, :meth:`_anytime_results_real_fn`), stage 2
+        the usual batched prefix decode + embedded-pair proxies.  The
+        bits-codec wire is lossless, so proxies, stop index and output are
+        bit-identical to the plain anytime round; ``crypto_s`` is
+        attributed from the fused timeline (:meth:`_fused_crypto_time`)."""
+        blk, t_comp = self._round_compute_time(a.shape, b.shape)
+        events = virtual_events(self.straggler.delays(round_idx), t_comp)
+        mat_out, mat_back = self._fused_mask_material()
+        d0 = self.dispatch_count
+        t0 = time.perf_counter()
+        self.dispatch_count += 1
+        results = self._anytime_results_real_fn(a.shape, b.shape,
+                                                str(a.dtype))(
+            a, b, jnp.asarray(mat_out), jnp.asarray(mat_back))
+        w_lo, ready, w_hi, valid = self._prefix_weight_stacks(events)
+        self.dispatch_count += 1
+        prod, prox = self._anytime_curve_fn(a.shape, b.shape, str(a.dtype),
+                                            with_ref=False)(
+            results, w_lo, w_hi, valid, a, b)
+        prox = self._prefix_postprocess(ready, prox, valid)
+        stop = self._proxy_stop(events, prox)
+        out = np.asarray(prod[stop - 1])
+        jax.block_until_ready(out)
+        t_master = time.perf_counter() - t0
+        crypto_s = min(self._fused_crypto_time(blk, a.shape[1], b.shape[-1]),
+                       t_master)
+        modeled = self._crypto_overhead_elems(self.n * blk * a.shape[1],
+                                              np.float32)
+        wait_s = float(events[stop - 1].t)
+        encode_s = t_master - crypto_s
+        hideable = (0.0 if self._pipeline is None else
+                    min(encode_s, self._encode_only_time(a.shape)))
+        stats = self._stats(events, wait_s, encode_s=encode_s,
+                            compute_wait_s=wait_s, decode_s=0.0,
                             crypto_s=crypto_s, n_waited=stop,
+                            crypto_modeled_s=modeled,
+                            dispatches=self.dispatch_count - d0,
                             pipelined_s=self._account_encode(hideable,
                                                              wait_s))
         return out, stats
@@ -688,6 +919,7 @@ class RoundEngine:
         enc_fn, worker_fn, _ = self._staged_fns(a.shape, b.shape,
                                                 str(a.dtype))
         events = virtual_events(self.straggler.delays(round_idx), t_comp)
+        d0 = self.dispatch_count
         results, t_enc, crypto_out_s = self._staged_stage1(a, b, enc_fn,
                                                            worker_fn)
         # stage 2: batched prefix decode + proxies.  The bits-codec wire is
@@ -697,6 +929,7 @@ class RoundEngine:
         # consumed pay (and charge) the return transfer.
         t0 = time.perf_counter()
         w_lo, ready, w_hi, valid = self._prefix_weight_stacks(events)
+        self.dispatch_count += 1
         prod, prox = self._anytime_curve_fn(a.shape, b.shape, str(a.dtype),
                                             with_ref=False)(
             jnp.asarray(results), w_lo, w_hi, valid, a, b)
@@ -723,6 +956,7 @@ class RoundEngine:
                             compute_wait_s=wait_s, decode_s=t_dec,
                             crypto_s=crypto_s, n_waited=stop,
                             crypto_modeled_s=modeled,
+                            dispatches=self.dispatch_count - d0,
                             pipelined_s=self._account_encode(hideable,
                                                              wait_s))
         return out, stats
@@ -764,9 +998,14 @@ class RoundEngine:
         if self.use_fused:
             if self.policy.needs_proxy:
                 if real:
+                    if self._crypto_fused:
+                        return self._matmul_anytime_real_fused(a, b,
+                                                               round_idx)
                     return self._matmul_anytime_real(a, b, round_idx)
                 return self._matmul_anytime(a, b, round_idx)
             if real:
+                if self._crypto_fused:
+                    return self._matmul_real_fused(a, b, round_idx)
                 return self._matmul_real(a, b, round_idx)
             return self._matmul_fused(a, b, round_idx)
         t0 = time.perf_counter()

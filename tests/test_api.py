@@ -589,3 +589,109 @@ class TestServe:
             assert rep.tokens.shape == (1, 2), backend
             assert len(rep.step_stats) == 2
             assert all(st.policy == "deadline" for st in rep.step_stats)
+
+
+# --------------------------------------------------------------------------
+# one-dispatch encrypted rounds (CryptoSpec.fused, kernels.encrypted_round)
+# --------------------------------------------------------------------------
+
+class TestOneDispatchEncryptedRounds:
+    def _spec(self, **over):
+        base = dict(
+            code=CodeSpec(scheme="spacdc", n_workers=10, k_blocks=4),
+            privacy=PrivacySpec(t_colluding=1, noise_scale=0.05),
+            straggler=StragglerSpec(n_stragglers=2), seed=3)
+        base.update(over)
+        return ClusterSpec(**base)
+
+    @pytest.mark.parametrize("cipher_mode", ["stream", "paper"])
+    def test_one_dispatch_bit_identical_to_staged(self, cipher_mode):
+        """An encrypted round is ONE jitted dispatch — same as a plain
+        round — and its output is bit-identical to both the plain round
+        and the staged (wire-split) path, in both cipher modes."""
+        crypto = CryptoSpec(encrypt="real", cipher_mode=cipher_mode)
+        staged = dataclasses.replace(crypto, fused=False)
+        with Session(self._spec()) as p, \
+                Session(self._spec(crypto=crypto)) as f, \
+                Session(self._spec(crypto=staged)) as st:
+            o1, s1 = p.matmul(A, B, round_idx=1)
+            o2, s2 = f.matmul(A, B, round_idx=1)
+            o3, s3 = st.matmul(A, B, round_idx=1)
+        np.testing.assert_array_equal(o1, o2)
+        np.testing.assert_array_equal(o2, o3)
+        assert s1.dispatches == 1
+        assert s2.dispatches == 1                # the tentpole
+        # staged: 3 stages + encrypt/decrypt cores per transfer
+        assert s3.dispatches == 3 + 2 * (10 + s3.n_waited)
+        assert s2.crypto_s > 0 and s2.crypto_modeled_s > 0
+        assert s2.crypto_s != s2.crypto_modeled_s
+
+    @pytest.mark.parametrize("cipher_mode", ["stream", "paper"])
+    def test_anytime_encrypted_two_dispatches(self, cipher_mode):
+        a, b = smooth(240, 32), rng.standard_normal((32, 16)).astype(np.float32)
+        wait = WaitSpec(policy="error_target", eps=5e-2)
+        crypto = CryptoSpec(encrypt="real", cipher_mode=cipher_mode)
+        with Session(self._spec(wait=wait)) as p, \
+                Session(self._spec(wait=wait, crypto=crypto)) as f:
+            o1, s1 = p.matmul(a, b, round_idx=1)
+            o2, s2 = f.matmul(a, b, round_idx=1)
+        np.testing.assert_array_equal(o1, o2)
+        assert s1.n_waited == s2.n_waited
+        assert s1.dispatches == 2 and s2.dispatches == 2
+        assert s2.crypto_s > 0
+
+    def test_encrypted_serve_compiles_once_per_shape_class(self):
+        """encrypt="real" + Session.serve: the fused encrypted round
+        compiles once per shape class; straggler churn across decode
+        steps (fresh rounds → fresh draws) never retraces (the encrypted
+        twin of TestErrorTargetRealCrypto.test_compiles_once...)."""
+        spec = dataclasses.replace(
+            ClusterSpec.serve_deadline(t_budget=0.008, n_workers=6,
+                                       k_blocks=3, n_stragglers=1),
+            crypto=CryptoSpec(encrypt="real"))
+        with Session(spec) as s:
+            rep = s.serve(arch="qwen2-7b", tiny=True, batch=1,
+                          prompt_len=4, gen=3, seed=0,
+                          check_agreement=False)
+            assert all(st.crypto_s > 0 for st in rep.step_stats)
+            assert all(st.dispatches == 1 for st in rep.step_stats)
+            traces = s.engine.trace_count
+            assert traces > 0
+            # second serve: session rounds advanced → different straggler
+            # draws per step, same shape classes → zero new traces
+            rep2 = s.serve(arch="qwen2-7b", tiny=True, batch=1,
+                           prompt_len=4, gen=3, seed=0,
+                           check_agreement=False)
+            assert s.engine.trace_count == traces
+            assert all(st.dispatches == 1 for st in rep2.step_stats)
+
+    def test_fused_knob_validation(self):
+        with pytest.raises(ValueError, match="encrypt='real'"):
+            CryptoSpec(fused=True)
+        with pytest.raises(ValueError, match="encrypt='real'"):
+            CryptoSpec(encrypt="modeled", fused=False)
+        with pytest.raises(ValueError, match="loop path"):
+            self._spec(code=CodeSpec(scheme="spacdc", n_workers=10,
+                                     k_blocks=4, fused=False),
+                       crypto=CryptoSpec(encrypt="real",
+                                         fused=True)).validate()
+        with pytest.raises(ValueError, match="virtual"):
+            self._spec(transport=TransportSpec(backend="threads"),
+                       crypto=CryptoSpec(encrypt="real",
+                                         fused=True)).validate()
+
+    def test_staged_fallback_on_loop_path(self):
+        # crypto.fused=None on an unfused round silently falls back to the
+        # per-worker wire (no error, still encrypted, bit-identical)
+        crypto = CryptoSpec(encrypt="real")
+        with Session(self._spec(code=CodeSpec(scheme="spacdc", n_workers=10,
+                                              k_blocks=4, fused=False))) as p, \
+                Session(self._spec(code=CodeSpec(scheme="spacdc",
+                                                 n_workers=10, k_blocks=4,
+                                                 fused=False),
+                                   crypto=crypto)) as f:
+            o1, _ = p.matmul(A, B, round_idx=1)
+            o2, s2 = f.matmul(A, B, round_idx=1)
+        np.testing.assert_array_equal(o1, o2)
+        assert s2.crypto_s > 0
+        assert s2.dispatches == 0                # loop path: not tracked

@@ -267,6 +267,37 @@ class TestVectorizedKeystream:
         b = F.keystream_u64(1, 2, 4, 16, Q)
         assert (np.asarray(a) != np.asarray(b)).any()
 
+    # ---- block-boundary coverage: each SHA-256 block yields 4 u64 words,
+    # so every n_words % 4 != 0 exercises a trailing partial block ----
+    @pytest.mark.parametrize("n", [1, 2, 3, 5, 6, 7, 9, 11, 41])
+    def test_partial_block_matches_hashlib_oracle(self, n):
+        x, y, nonce = 111, 222, 333
+        seed = hashlib.sha256(f"{x}:{y}:{nonce}".encode()).digest()
+        want = []
+        for c in range(-(-n // 4)):              # trailing block included
+            d = hashlib.sha256(seed + c.to_bytes(8, "big")).digest()
+            for j in range(4):                   # w = digest_hi32<<32|lo32
+                want.append(int.from_bytes(d[8 * j:8 * j + 8], "big"))
+        got = F.keystream_u64(x, y, nonce, n, Q)
+        assert got.shape == (n,)
+        np.testing.assert_array_equal(got, np.asarray(want[:n], np.uint64))
+
+    @pytest.mark.parametrize("n", [0, 1, 3, 5, 37, 63])
+    def test_traced_twin_partial_blocks(self, n):
+        seed8 = F.seed_words(7, 8, 9)
+        got = np.asarray(F.stream_mask_traced(seed8, n, 8))
+        want = F.LimbField(Q).from_u64(F.keystream_u64(7, 8, 9, n, Q))
+        assert got.shape == (n, 8)
+        np.testing.assert_array_equal(got, want.reshape(n, 8))
+
+    def test_prefix_stable_across_block_boundary(self):
+        # pad-to-bucket-then-slice (the cipher cores' convention) is only
+        # sound because the counter PRF is a prefix-stable stream
+        long = F.keystream_u64(5, 6, 7, 23, Q)
+        for n in (1, 3, 4, 5, 8, 19, 23):
+            np.testing.assert_array_equal(F.keystream_u64(5, 6, 7, n, Q),
+                                          long[:n])
+
 
 class TestMEAECC:
     @pytest.mark.parametrize("mode", ["paper", "stream"])
