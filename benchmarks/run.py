@@ -28,6 +28,8 @@ BENCHES = {
     "crypto":    ("bench_crypto", "MEA-ECC cipher throughput", True),
     "anytime":   ("bench_anytime", "anytime decoding error curves", True),
     "serve":     ("bench_serve", "deadline serving quality", True),
+    "faults":    ("bench_faults",
+                  "fault-injected rounds: defended vs undefended", True),
     "roofline":  ("roofline", "kernel arithmetic-intensity report", False),
 }
 ALIASES = {"fig5": "table2", "fig6": "table2", "fig7": "table2"}

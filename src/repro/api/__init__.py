@@ -14,12 +14,12 @@ See README "Public API" for the spec schema and the migration table from
 the legacy ``DistributedMatmul`` kwargs.
 """
 
-from .spec import (ClusterSpec, CodeSpec, CryptoSpec, PrivacySpec,
-                   StragglerSpec, TransportSpec, WaitSpec)
+from .spec import (ClusterSpec, CodeSpec, CryptoSpec, FaultSpec,
+                   PrivacySpec, StragglerSpec, TransportSpec, WaitSpec)
 from .session import ServeReport, Session, coded_mlp_init, coded_mlp_step
 
 __all__ = [
-    "ClusterSpec", "CodeSpec", "CryptoSpec", "PrivacySpec", "StragglerSpec",
-    "TransportSpec", "WaitSpec", "Session", "ServeReport",
+    "ClusterSpec", "CodeSpec", "CryptoSpec", "FaultSpec", "PrivacySpec",
+    "StragglerSpec", "TransportSpec", "WaitSpec", "Session", "ServeReport",
     "coded_mlp_init", "coded_mlp_step",
 ]

@@ -169,6 +169,13 @@ class Session:
     def closed(self) -> bool:
         return self._closed
 
+    @property
+    def health(self):
+        """The engine's :class:`~repro.runtime.faults.WorkerHealth`
+        tracker (None unless the spec's ``FaultSpec`` is active) — EWMA
+        latency, crash/drop/corrupt counts, quarantine state per worker."""
+        return self.engine.health
+
     def _check_open(self):
         if self._closed:
             raise RuntimeError("Session is closed")

@@ -36,13 +36,14 @@ from ..runtime.straggler import StragglerModel
 
 __all__ = [
     "CodeSpec", "PrivacySpec", "CryptoSpec", "WaitSpec", "StragglerSpec",
-    "TransportSpec", "ClusterSpec",
+    "TransportSpec", "FaultSpec", "ClusterSpec",
 ]
 
 _TRANSPORT_BACKENDS = ("virtual", "threads")
 _CIPHER_MODES = ("stream", "paper")
 _ENCRYPT_MODES = (None, "modeled", "real")
 _WAIT_POLICIES = ("fixed_quantile", "first_k", "deadline", "error_target")
+_CORRUPT_MODES = ("scale", "bitflip")
 
 
 def _as_dict(obj) -> Dict[str, Any]:
@@ -327,6 +328,109 @@ class TransportSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Fault *injection* and fault *handling*, both seeded and declarative.
+
+    Injection (consumed by ``runtime.faults.FaultInjectingTransport``,
+    which wraps either backend behind the unchanged transport protocol):
+    per round, each worker independently crashes (no event ever arrives),
+    drops (event arrives, ``result()`` raises), suffers a delay spike, or
+    returns a corrupted payload — ``"scale"`` garbage or ``"bitflip"``
+    sign/exponent flips, applied to the ciphertext limbs on
+    ``encrypt="real"`` rounds.  ``seed=None`` follows the cluster seed;
+    the fault plan for a given (seed, round) is reproducible across
+    backends and runs.
+
+    Handling (consumed by the engine's defended round runner when
+    ``handle=True``): per-round worker deadline → re-dispatch of missing
+    shard assignments to healthy workers with capped exponential backoff
+    (``max_retries``, ``backoff_s``/``backoff_cap_s``); Byzantine
+    screening — gross norm outliers (result norm > ``norm_factor ×``
+    median responder norm, robust to many simultaneous corrupters) plus
+    leave-one-out decode residuals (a responder whose result disagrees
+    with the interpolation through the others by more than
+    ``max(residual_threshold, residual_factor × median)`` is cleared
+    from the decode mask); a ``WorkerHealth`` tracker quarantining
+    repeat offenders (``quarantine_after`` strikes → ``quarantine_rounds``
+    rounds out, doubling per relapse).
+    """
+    # --- injection rates (all 0.0 = no injection) ---
+    crash_rate: float = 0.0
+    drop_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    delay_spike_rate: float = 0.0
+    delay_spike_s: float = 0.1
+    corrupt_mode: str = "scale"
+    corrupt_scale: float = 1e3
+    seed: Optional[int] = None
+    # --- handling ---
+    handle: bool = False
+    max_retries: int = 2
+    backoff_s: float = 0.005
+    backoff_cap_s: float = 0.08
+    worker_timeout_s: Optional[float] = None   # None = timeout_factor rule
+    timeout_factor: float = 3.0
+    screen: bool = True
+    residual_threshold: float = 2.0
+    residual_factor: float = 8.0
+    norm_factor: float = 30.0
+    quarantine_after: int = 2
+    quarantine_rounds: int = 4
+
+    def __post_init__(self):
+        for name in ("crash_rate", "drop_rate", "corrupt_rate",
+                     "delay_spike_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"fault: {name} must be in [0, 1], "
+                                 f"got {v!r}")
+        if self.delay_spike_s < 0:
+            raise ValueError("fault: delay_spike_s must be >= 0")
+        if self.corrupt_mode not in _CORRUPT_MODES:
+            raise ValueError(f"fault: corrupt_mode must be one of "
+                             f"{_CORRUPT_MODES}, got {self.corrupt_mode!r}")
+        if self.corrupt_scale <= 0:
+            raise ValueError("fault: corrupt_scale must be > 0")
+        if self.max_retries < 0:
+            raise ValueError("fault: max_retries must be >= 0")
+        if self.backoff_s < 0 or self.backoff_cap_s < self.backoff_s:
+            raise ValueError("fault: need 0 <= backoff_s <= backoff_cap_s")
+        if self.worker_timeout_s is not None and self.worker_timeout_s <= 0:
+            raise ValueError("fault: worker_timeout_s must be > 0 (or None "
+                             "for the timeout_factor rule)")
+        if self.timeout_factor <= 0:
+            raise ValueError("fault: timeout_factor must be > 0")
+        if self.residual_threshold <= 0 or self.residual_factor <= 0:
+            raise ValueError("fault: residual_threshold and residual_factor "
+                             "must be > 0")
+        if self.norm_factor <= 1:
+            raise ValueError("fault: norm_factor must be > 1 (clean coded "
+                             "rows already spread above the median norm)")
+        if self.quarantine_after < 1 or self.quarantine_rounds < 1:
+            raise ValueError("fault: quarantine_after and quarantine_rounds "
+                             "must be >= 1")
+
+    @property
+    def injects(self) -> bool:
+        """True when any fault is actually injected."""
+        return (self.crash_rate > 0 or self.drop_rate > 0 or
+                self.corrupt_rate > 0 or self.delay_spike_rate > 0)
+
+    @property
+    def active(self) -> bool:
+        """True when this spec changes round behavior at all — either
+        injecting faults or running the defended round path."""
+        return self.injects or self.handle
+
+    def to_dict(self):
+        return _as_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "FaultSpec":
+        return _from_dict(cls, d, "fault")
+
+
+@dataclasses.dataclass(frozen=True)
 class ClusterSpec:
     """Everything a :class:`repro.api.Session` needs, in one frozen value.
 
@@ -343,6 +447,7 @@ class ClusterSpec:
         default_factory=StragglerSpec)
     transport: TransportSpec = dataclasses.field(
         default_factory=TransportSpec)
+    fault: FaultSpec = dataclasses.field(default_factory=FaultSpec)
     seed: int = 0
     pipeline_encode: bool = False
 
@@ -377,6 +482,26 @@ class ClusterSpec:
                 self.wait.k > self.code.n_workers):
             raise ValueError(f"wait: first_k k={self.wait.k} exceeds "
                              f"n_workers={self.code.n_workers}")
+        if self.fault.active:
+            # the fault paths (envelope dispatch, LOO residual screening,
+            # slot-indexed re-dispatch) ride on the linear fused-encoder
+            # stack; pair-coded schemes have no per-worker encoder rows
+            # to screen against
+            if not supports_fused:
+                raise ValueError(
+                    f"fault: {self.code.scheme!r} is pair-coded (no "
+                    "per-worker encoder rows) — the fault injection/"
+                    "handling paths need a linear data-coded scheme")
+            if self.wait.policy == "error_target":
+                raise ValueError(
+                    "fault: error_target's batched prefix pipeline does "
+                    "not compose with injected/handled faults — use "
+                    "fixed_quantile, first_k or deadline")
+            if self.crypto.fused:
+                raise ValueError(
+                    "fault: crypto.fused=True runs the round as ONE "
+                    "dispatch with no per-worker results to screen or "
+                    "retry — drop crypto.fused or fault handling")
         # NOTE: error_target × crypto "real" is a supported combination —
         # the anytime pipeline runs over genuine ciphertexts (fused: two
         # dispatches; staged: split at the wire boundaries).
@@ -432,7 +557,8 @@ class ClusterSpec:
                              f"valid keys: {sorted(known)}")
         nested = {"code": CodeSpec, "privacy": PrivacySpec,
                   "crypto": CryptoSpec, "wait": WaitSpec,
-                  "straggler": StragglerSpec, "transport": TransportSpec}
+                  "straggler": StragglerSpec, "transport": TransportSpec,
+                  "fault": FaultSpec}
         kw = {}
         for key, val in d.items():
             sub = nested.get(key)

@@ -93,6 +93,11 @@ class CodingScheme(Protocol):
         """Decode an arbitrary in-flight responder prefix, or report
         ``ready=False`` when the prefix is below the scheme's minimum."""
 
+    def decode_residuals(self, results, mask):
+        """(N,) leave-one-out consistency scores for Byzantine screening:
+        how much responder i's result disagrees with the decode predicted
+        from the other responders (0 for non-responders / unscoreable)."""
+
     def wait_policy(self, n_stragglers: int = 0) -> int:
         """How many responders a master should wait for per round."""
 
@@ -273,6 +278,53 @@ class SchemeDefaults:
         their prefixes 0 (ready) / inf (not).
         """
         return None
+
+    # -- Byzantine screening ---------------------------------------------
+    def decode_residuals(self, results, mask):
+        """Leave-one-out consistency score per responder: (N,) float64.
+
+        For each responder i, predict its result from the OTHER responders
+        through the encoder's row space (f64 masked pinv — the same stack
+        the anytime prefix decode uses) and score the disagreement
+        ``||r_i − pred_i||`` relative to the MEDIAN responder norm.  The
+        median denominator is what keeps the screen robust to several
+        simultaneous corrupters: each corrupter pollutes every OTHER
+        responder's prediction too, and a per-prediction denominator
+        would saturate all scores near 1 (masking); the median norm stays
+        at signal scale while corrupters' residuals sit at corruption
+        scale.  Responders whose leave-one-out subset falls below
+        ``min_responders`` score 0 (unscoreable — never evicted on this
+        basis).  Non-responder slots score 0.
+        """
+        enc = self.fused_encoder_matrix()
+        if enc is None:
+            raise NotImplementedError(
+                f"{self.name}: no linear encoder — no leave-one-out "
+                "residual screen")
+        enc = np.asarray(enc, np.float64)
+        mask = np.asarray(mask, dtype=bool)
+        with np.errstate(invalid="ignore"):
+            # masked-out rows may hold NaN garbage (tampered ciphertexts)
+            flat = np.asarray(results, np.float64).reshape(mask.size, -1)
+        # the masked pinv has exactly-zero columns for masked rows, but
+        # 0 × NaN is still NaN — zero the rows so garbage can't leak in
+        flat = flat.copy()
+        flat[~mask] = 0.0
+        scores = np.zeros(mask.size, np.float64)
+        resp = np.flatnonzero(mask)
+        if resp.size == 0:
+            return scores
+        den = max(float(np.median(np.linalg.norm(flat[resp], axis=1))),
+                  1e-12)
+        for i in resp:
+            loo = mask.copy()
+            loo[i] = False
+            if int(loo.sum()) < self.min_responders:
+                continue
+            w = np.linalg.pinv(enc * loo[:, None])
+            pred = enc[i] @ (w @ flat)
+            scores[i] = float(np.linalg.norm(flat[i] - pred)) / den
+        return scores
 
     # -- runtime contract ------------------------------------------------
     def wait_policy(self, n_stragglers: int = 0) -> int:

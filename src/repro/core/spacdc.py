@@ -88,6 +88,8 @@ class SPACDCCode(registry.SchemeDefaults):
         # (bound per instance so the cache dies with the code object)
         self._decode_matrix_cached = functools.lru_cache(maxsize=256)(
             self._decode_matrix)
+        self._loo_weights_cached = functools.lru_cache(maxsize=1024)(
+            self._loo_weights)
 
     # ---------------------------------------------------------------- encode
     def make_noise(self, block_shape, dtype=jnp.float32, key: Optional[jax.Array] = None):
@@ -221,6 +223,47 @@ class SPACDCCode(registry.SchemeDefaults):
             weights[p - 1, :, resp] = mat.T[: len(resp)]
             valid[p - 1] = True
         return weights, valid
+
+    # ------------------------------------------------- Byzantine screening
+    def _loo_weights(self, i: int, others: tuple) -> np.ndarray:
+        """(|others|,) f64 Berrut interpolation weights predicting worker
+        i's value at alpha_i from the other responders' nodes (alternating
+        sign by sorted rank — the same construction as the decode matrix,
+        evaluated at alpha_i instead of the betas)."""
+        others_np = np.asarray(others, dtype=np.int64)
+        nodes = np.asarray(self.alphas, np.float64)[others_np]
+        rank = np.argsort(np.argsort(nodes))
+        signs = jnp.asarray(np.where(rank % 2 == 0, 1.0, -1.0),
+                            dtype=jnp.float32)
+        row = berrut.berrut_weight_matrix(
+            jnp.asarray(np.asarray(self.alphas, np.float64)[[i]]),
+            jnp.asarray(nodes), signs)
+        return np.asarray(row, np.float64)[0]
+
+    def decode_residuals(self, results, mask) -> np.ndarray:
+        """Leave-one-out Berrut residuals (see ``SchemeDefaults``): worker
+        i's result vs the rational interpolant through the other responders
+        evaluated at alpha_i.  Reuses the instance-cached weight rows —
+        responder sets recur every round."""
+        mask = np.asarray(mask, dtype=bool)
+        with np.errstate(invalid="ignore"):
+            # masked-out rows may hold NaN garbage (tampered ciphertexts)
+            flat = np.asarray(results, np.float64).reshape(mask.size, -1)
+        scores = np.zeros(mask.size, np.float64)
+        resp = np.flatnonzero(mask)
+        if resp.size < 3:    # LOO prediction from < 2 nodes says nothing
+            return scores
+        # normalise by the MEDIAN responder norm, not each prediction's
+        # own norm: multiple corrupters inflate every LOO prediction, and
+        # a per-prediction denominator would mask them all at score ~1
+        den = max(float(np.median(np.linalg.norm(flat[resp], axis=1))),
+                  1e-12)
+        for i in resp:
+            others = tuple(int(j) for j in resp if j != i)
+            w = self._loo_weights_cached(int(i), others)
+            pred = w @ flat[list(others)]
+            scores[i] = float(np.linalg.norm(flat[i] - pred)) / den
+        return scores
 
     # ------------------------------------------------------------ end-to-end
     def run(self, x: jnp.ndarray, f: Callable[[jnp.ndarray], jnp.ndarray],

@@ -2,9 +2,12 @@ from .straggler import StragglerModel
 from .wait_policy import (ArrivalEvent, Deadline, ErrorTarget, FirstK,
                           FixedQuantile, WaitPolicy, resolve_policy)
 from .scheduler import (AnytimePoint, EncodePipeline, RoundPlan,
-                        plan_round, policy_mask_fn, virtual_events)
+                        plan_round, policy_mask_fn, retry_backoff,
+                        screen_responders, virtual_events)
 from .transport import (ThreadTransport, Transport, VirtualClockTransport,
                         build_transport)
+from .faults import (DegradedRoundError, FaultInjectingTransport,
+                     ResultDropped, WorkerHealth, plan_faults)
 from .engine import RoundEngine, RoundStats
 from .master_worker import CodedMaster, WorkerPool
 
@@ -13,7 +16,10 @@ __all__ = [
     "ArrivalEvent", "Deadline", "ErrorTarget", "FirstK", "FixedQuantile",
     "WaitPolicy", "resolve_policy",
     "AnytimePoint", "EncodePipeline", "RoundPlan", "plan_round",
-    "policy_mask_fn", "virtual_events",
+    "policy_mask_fn", "retry_backoff", "screen_responders",
+    "virtual_events",
     "Transport", "VirtualClockTransport", "ThreadTransport",
     "build_transport", "RoundEngine", "RoundStats",
+    "DegradedRoundError", "FaultInjectingTransport", "ResultDropped",
+    "WorkerHealth", "plan_faults",
 ]

@@ -45,7 +45,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .scheduler import EncodePipeline, assemble_curve, plan_round, virtual_events
+from .faults import (DegradedRoundError, FaultInjectingTransport,
+                     ResultDropped, WorkerHealth, retry_round_index)
+from .scheduler import (EncodePipeline, assemble_curve, plan_round,
+                        retry_backoff, screen_responders, virtual_events)
 from .transport import ThreadTransport, VirtualClockTransport
 from .wait_policy import (RoundContext, WaitPolicy, resolve_policy,
                           scheme_min_responders)
@@ -75,6 +78,14 @@ class RoundStats:
     # for the staged real round.  0 on the loop path (per-worker oracle
     # calls aren't round dispatches).
     dispatches: int = 0
+    # --- fault-tolerant round (runtime.faults; FaultSpec.handle) ---------
+    retries: int = 0                 # re-dispatch attempts this round
+    excluded: tuple = ()             # workers evicted by residual screening
+    quarantined: tuple = ()          # workers quarantined at round start
+    degraded: bool = False           # decoded below the policy's target
+    achieved_rel_err: Optional[float] = None   # embedded-pair estimate of
+                                     # a degraded decode's error (rateless)
+    decode_mask: tuple = ()          # (N,) 0/1 — slots that entered decode
 
     @property
     def total_s(self):
@@ -245,6 +256,23 @@ class RoundEngine:
         stable = bool(getattr(self.scheme, "fused_decode_stable", False))
         self.use_fused = (supports and stable) if fused is None else bool(fused)
         if spec.transport.backend == "threads":
+            self.use_fused = False
+        # fault injection / handling (runtime.faults): the injecting
+        # transport wraps whichever backend the pool selected — protocol
+        # unchanged — and the defended round runs the slot-envelope path
+        # (per-worker results are what screening and re-dispatch operate
+        # on, so the one-dispatch fused round cannot carry it)
+        self.fault = spec.fault
+        self.health: Optional[WorkerHealth] = None
+        self._fault_transport = None
+        if self.fault.active:
+            fseed = (self.fault.seed if self.fault.seed is not None
+                     else spec.seed)
+            self._fault_transport = FaultInjectingTransport(
+                self.pool.transport, self.fault, fseed)
+            self.health = WorkerHealth(
+                self.n, quarantine_after=self.fault.quarantine_after,
+                quarantine_rounds=self.fault.quarantine_rounds)
             self.use_fused = False
         self.trace_count = 0                # jit traces of the fused round
         self._fused_cache = collections.OrderedDict()   # shapes -> jitted fn
@@ -995,6 +1023,8 @@ class RoundEngine:
         a = jnp.asarray(a, jnp.float32)
         b = jnp.asarray(b, jnp.float32)
         real = self.encrypt == "real"
+        if self.fault.active:
+            return self._matmul_faulted(a, b, round_idx)
         if self.use_fused:
             if self.policy.needs_proxy:
                 if real:
@@ -1060,6 +1090,259 @@ class RoundEngine:
                                           for e in plan) if plan else (),
                            decode_at_s=wait_s,
                            pipelined_s=self._account_encode(t_enc, wait_s))
+        return out, stats
+
+    # ------------------------------------------------- fault-tolerant path
+    def _fault_policy_target(self) -> int:
+        """Clean-responder count the defended round drives toward (the
+        count-based policies' target; Deadline rounds are budget-bounded
+        instead and only need the scheme's minimum decodable prefix)."""
+        min_ready = scheme_min_responders(self.scheme)
+        ctx = RoundContext(scheme=self.scheme,
+                           n_stragglers=self.straggler.n_stragglers,
+                           events=[], min_ready=min_ready)
+        try:
+            tgt = int(self.policy.target(ctx))
+        except NotImplementedError:
+            tgt = min_ready
+        return max(min(tgt, self.n), min_ready)
+
+    def _degraded_rel_err(self, slots, stack) -> Optional[float]:
+        """Embedded-pair estimate of a degraded decode's error: the
+        disagreement between the scheme's decode and its higher-order
+        proxy decode over the surviving slots (rateless schemes; None
+        when the pair is unavailable at this prefix)."""
+        order = list(slots)
+        proxy = getattr(self.scheme, "anytime_proxy_weights", None)
+        if proxy is None:
+            return None
+        hi = proxy(order, fh_degree=self.fh_degree)
+        if hi is None:
+            return None
+        w_lo, ready = self.scheme.prefix_decode_weights(order)
+        if not bool(np.asarray(hi[1])[-1]) or not bool(np.asarray(ready)[-1]):
+            return None
+        full = np.zeros((self.n, int(np.prod(stack.shape[1:]))), np.float64)
+        for i, s in enumerate(order):
+            full[s] = np.asarray(stack[i], np.float64).reshape(-1)
+        lo_d = np.asarray(w_lo[-1], np.float64) @ full
+        hi_d = np.asarray(hi[0][-1], np.float64) @ full
+        den = max(float(np.linalg.norm(hi_d)), 1e-12)
+        return float(np.linalg.norm(lo_d - hi_d) / den)
+
+    def _matmul_faulted(self, a: jnp.ndarray, b: jnp.ndarray,
+                        round_idx: int):
+        """The fault round: injected faults (via the wrapping transport)
+        and/or engine-side defenses (``FaultSpec.handle``).
+
+        Work travels in ``(worker, slot, payload)`` envelopes — slot s is
+        encoder row s, so a re-dispatch hands the SAME coded shard to a
+        different worker and the decode stays slot-indexed.  Defended
+        rounds drain arrivals, screen the accumulated clean set with
+        leave-one-out residuals (corrupted responders' mask bits are
+        cleared, their producers recorded in ``WorkerHealth``), and
+        re-dispatch missing slots to the healthiest workers with capped
+        exponential backoff until the policy's target is met, the retry
+        budget runs out, or no healthy workers remain.  Exhausted rateless
+        rounds decode the surviving prefix (``degraded=True`` with the
+        embedded-pair ``achieved_rel_err``); exhausted threshold rounds
+        raise :class:`~repro.runtime.faults.DegradedRoundError` carrying
+        the partial state.  Undefended rounds (injection only) dispatch
+        once and decode whatever arrives — corrupt results included.
+        """
+        scheme, fault = self.scheme, self.fault
+        real = self.encrypt == "real"
+        handle_faults = fault.handle
+        min_ready = scheme_min_responders(scheme)
+        budget = getattr(self.policy, "t_budget", None)
+        needed = min_ready if budget is not None else \
+            self._fault_policy_target()
+
+        t0 = time.perf_counter()
+        enc = np.asarray(scheme.encode(a))            # (N, blk, d)
+        self.dispatch_count += 1
+        t_enc = time.perf_counter() - t0
+        blk, t_comp = self._round_compute_time(a.shape, b.shape)
+        n_out = int(b.shape[-1])
+        crypto_s = 0.0
+        transport, health = self._fault_transport, self.health
+
+        def worker_fn(env):
+            if env is None:                # worker not targeted this round
+                return None
+            w, slot, payload = env
+            if real:
+                x = self._mea.decrypt(payload, self._worker_kps[w])
+                r = np.asarray(jnp.asarray(x) @ b)
+                return (slot, self._mea.encrypt(
+                    r, self._master_kp.pk, sender=self._worker_kps[w],
+                    nonce=next(self._nonce)))
+            return (slot, np.asarray(jnp.asarray(payload) @ b))
+
+        def dispatch(assign: dict, attempt: int):
+            nonlocal crypto_s
+            envs = [None] * self.n
+            if real:
+                tw = time.perf_counter()
+                for w, slot in assign.items():
+                    envs[w] = (w, slot, self._mea.encrypt(
+                        enc[slot], self._worker_kps[w].pk,
+                        sender=self._master_kp, nonce=next(self._nonce)))
+                self.dispatch_count += 2 * len(assign)
+                crypto_s += time.perf_counter() - tw
+            else:
+                for w, slot in assign.items():
+                    envs[w] = (w, slot, enc[slot])
+            rid = retry_round_index(round_idx, attempt)
+            return transport.submit_round(envs, worker_fn, rid,
+                                          t_compute=t_comp, budget=budget,
+                                          min_ready=min_ready)
+
+        clean: dict = {}                   # slot -> (worker, result array)
+        arrivals: list = []                # (cumulative t, worker)
+        excluded_workers: list = []
+        offenders: set = set()
+        quarantined0 = tuple(health.quarantined(round_idx)) \
+            if (handle_faults and health is not None) else ()
+        wait_total, retries, attempt = 0.0, 0, 0
+        if handle_faults and health is not None:
+            avail = [w for w in range(self.n)
+                     if not health.is_quarantined(w, round_idx)]
+        else:
+            avail = list(range(self.n))
+        assign = {w: w for w in avail}
+
+        while True:
+            handle = dispatch(assign, attempt)
+            targets = set(assign)
+            seen: set = set()
+            observed_t = 0.0
+            try:
+                for ev in handle.events():
+                    if ev.worker not in targets:
+                        continue           # stray slot from an earlier plan
+                    seen.add(ev.worker)
+                    observed_t = max(observed_t, float(ev.t))
+                    try:
+                        slot, payload = handle.result(ev.worker)
+                    except ResultDropped:
+                        offenders.add(ev.worker)
+                        if handle_faults and health is not None:
+                            health.record_drop(ev.worker, round_idx)
+                        continue
+                    if real:
+                        tw = time.perf_counter()
+                        try:
+                            arr = np.asarray(self._mea.decrypt(
+                                payload, self._master_kp), np.float32)
+                        except Exception:
+                            # a tampered ciphertext that fails to decode at
+                            # all is still a response — screening evicts
+                            # the non-finite row before scoring
+                            arr = np.full((blk, n_out), np.nan, np.float32)
+                        self.dispatch_count += 2
+                        crypto_s += time.perf_counter() - tw
+                    else:
+                        arr = np.asarray(payload, np.float32)
+                    if arr.shape != (blk, n_out):
+                        arr = np.full((blk, n_out), np.nan, np.float32)
+                    clean[int(slot)] = (int(ev.worker), arr)
+                    arrivals.append((wait_total + float(ev.t),
+                                     int(ev.worker)))
+                    if handle_faults and health is not None:
+                        health.record_ok(ev.worker, float(ev.t))
+                    if budget is None and len(clean) >= needed:
+                        break
+            finally:
+                handle.finish()
+            if handle_faults and fault.screen and clean:
+                slots = sorted(clean)
+                results_arr = np.zeros((self.n, blk, n_out), np.float32)
+                mask = np.zeros(self.n, np.float32)
+                for s in slots:
+                    results_arr[s] = clean[s][1]
+                    mask[s] = 1.0
+                _, evicted, _ = screen_responders(
+                    scheme, results_arr, mask,
+                    threshold=fault.residual_threshold,
+                    factor=fault.residual_factor,
+                    norm_factor=fault.norm_factor,
+                    max_exclude=max(0, len(slots) - min_ready))
+                for s in evicted:
+                    w = clean[s][0]
+                    excluded_workers.append(w)
+                    offenders.add(w)
+                    if health is not None:
+                        health.record_corrupt(w, round_idx)
+                    del clean[s]
+            if len(clean) >= needed:
+                wait_total += observed_t
+                break
+            # target missed: charge what the master actually waited — the
+            # deadline budget, or the per-worker timeout on the crashed
+            # assignments (the stream exhausted without them)
+            if budget is not None:
+                wait_total += float(budget)
+            else:
+                timeout = (fault.worker_timeout_s
+                           if fault.worker_timeout_s is not None
+                           else fault.timeout_factor * max(observed_t,
+                                                           t_comp))
+                wait_total += max(observed_t, timeout)
+                if handle_faults and health is not None:
+                    for w in sorted(targets - seen):
+                        offenders.add(w)
+                        health.record_crash(w, round_idx)
+            attempt += 1
+            if not handle_faults or attempt > fault.max_retries:
+                break
+            missing = [s for s in range(self.n) if s not in clean]
+            cands = (health.ranked(round_idx, exclude=offenders)
+                     if health is not None else
+                     [w for w in range(self.n) if w not in offenders])
+            if not cands:
+                break
+            wait_total += retry_backoff(attempt, fault.backoff_s,
+                                        fault.backoff_cap_s)
+            retries += 1
+            assign = dict(zip(cands, missing))
+
+        slots = sorted(clean)
+        degraded = len(clean) < needed
+        achieved = None
+        if degraded:
+            stack = (np.stack([clean[s][1] for s in slots])
+                     if slots else None)
+            if not slots or len(slots) < min_ready:
+                raise DegradedRoundError(
+                    f"round {round_idx}: {len(slots)} clean result(s) "
+                    f"after {retries} re-dispatch(es), scheme needs "
+                    f"{min_ready} (policy target {needed})",
+                    clean_slots=slots, results=stack,
+                    excluded=excluded_workers, retries=retries,
+                    needed=needed)
+            achieved = self._degraded_rel_err(slots, stack)
+        t0 = time.perf_counter()
+        stack = np.stack([clean[s][1] for s in slots])
+        dec = scheme.decode(jnp.asarray(stack), list(slots))
+        out = np.asarray(scheme.reconstruct_matmul(dec, a.shape[0],
+                                                   b.shape[-1]))
+        self.dispatch_count += 1
+        t_dec = time.perf_counter() - t0
+        modeled = self._crypto_overhead_elems(self.n * blk * a.shape[1],
+                                              np.float32)
+        stats = RoundStats(
+            encode_s=t_enc, compute_wait_s=wait_total, decode_s=t_dec,
+            crypto_s=crypto_s if real else modeled, n_waited=len(slots),
+            crypto_modeled_s=modeled if real else 0.0,
+            policy=self.policy.name, arrivals=tuple(arrivals),
+            decode_at_s=wait_total,
+            pipelined_s=self._account_encode(t_enc, wait_total),
+            retries=retries, excluded=tuple(excluded_workers),
+            quarantined=quarantined0, degraded=degraded,
+            achieved_rel_err=achieved,
+            decode_mask=tuple(1 if s in clean else 0
+                              for s in range(self.n)))
         return out, stats
 
     def _loop_round(self, shards, f, round_idx: int, t_comp: float):

@@ -1,0 +1,432 @@
+"""Fault injection and fault bookkeeping for coded rounds.
+
+The paper's runtime story tolerates *slow* workers; a production coded
+system must also survive *failed* and *adversarial* ones (LCC / GLCC
+frame Byzantine resiliency as a property of the code itself — the N−K
+surplus shards are raw material for detecting and routing around bad
+results).  This module supplies the moving parts:
+
+* :func:`plan_faults` — the seeded, per-round-reproducible fault draw:
+  which workers crash / drop / corrupt / spike this round, deterministic
+  per ``(seed, round_idx)`` exactly like ``StragglerModel.delays``.
+* :class:`FaultInjectingTransport` — wraps ANY ``Transport`` (virtual
+  clock or threads; the protocol is unchanged, so the engine needs no
+  backend special-casing) and injects the planned faults:
+
+  - **crash**: the worker's completion event never arrives;
+  - **drop**: the event arrives but ``result()`` raises
+    :class:`ResultDropped`;
+  - **delay spike**: the worker's injected latency gains a spike (flows
+    through the wrapped transport's own ``StragglerModel``, so both the
+    virtual timeline and the real thread sleeps see it);
+  - **corrupt**: the returned shard is perturbed — scaled garbage or
+    sign/exponent bit-flips on float arrays, bit-flipped payload limbs on
+    MEA-ECC ``Ciphertext``s (``encrypt="real"`` rounds are tampered on
+    the wire, where a real adversary would).
+
+* :class:`WorkerHealth` — per-worker EWMA latency + crash/drop/corrupt
+  counts with quarantine and probation re-admission; the engine feeds it
+  and the adaptive-redundancy controller (ROADMAP) will consume it.
+* :class:`DegradedRoundError` — the structured failure a threshold
+  scheme raises when too few clean results survive (instead of an opaque
+  ``LinAlgError``), carrying the partial state a caller can still use.
+
+Injection and handling are configured together by
+``repro.api.FaultSpec``; the engine-side defenses (re-dispatch, residual
+screening, graceful degradation) live in ``runtime.engine``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from .wait_policy import ArrivalEvent
+
+__all__ = [
+    "FaultPlan", "plan_faults", "retry_round_index", "corrupt_value",
+    "ResultDropped", "WorkerCrashed", "DegradedRoundError",
+    "FaultInjectingTransport", "WorkerHealth",
+]
+
+# fault draws use a stream index distinct from the straggler model's
+# ([seed, round]) and the markov-state ([seed, round, 1]) streams
+_FAULT_STREAM = 2
+_CORRUPT_STREAM = 3
+
+
+class ResultDropped(RuntimeError):
+    """The worker completed but its result was lost in transit (drop
+    fault): the arrival event exists, ``result()`` raises this."""
+
+
+class WorkerCrashed(RuntimeError):
+    """Internal guard: ``result()`` was called for a worker whose round
+    crashed — its event was never delivered, so a correct consumer can
+    only hit this through a bookkeeping bug."""
+
+
+class DegradedRoundError(RuntimeError):
+    """A round ended below the scheme's minimum decodable clean prefix.
+
+    Structured degradation for threshold schemes (and fully-failed
+    rateless rounds): instead of an opaque ``LinAlgError`` deep in a
+    decode, the caller gets the partial state — which shard slots have
+    clean results, what was excluded, and how many retries ran — so it
+    can re-drive the round or fall back.
+    """
+
+    def __init__(self, msg: str, *, clean_slots: Sequence[int] = (),
+                 results: Optional[np.ndarray] = None,
+                 excluded: Sequence[int] = (), retries: int = 0,
+                 needed: int = 0):
+        super().__init__(msg)
+        self.clean_slots = tuple(int(s) for s in clean_slots)
+        self.results = results
+        self.excluded = tuple(int(w) for w in excluded)
+        self.retries = int(retries)
+        self.needed = int(needed)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """One round's fault assignment: per-worker boolean draws + spike
+    seconds.  Crash/drop/corrupt are mutually exclusive per worker (a
+    crashed worker has no result to drop or corrupt)."""
+    crash: np.ndarray       # (n,) bool — no completion event ever arrives
+    drop: np.ndarray        # (n,) bool — event arrives, result() raises
+    corrupt: np.ndarray     # (n,) bool — result perturbed in transit
+    spike_s: np.ndarray     # (n,) float64 — extra injected latency
+
+    @property
+    def any_fault(self) -> bool:
+        return bool(self.crash.any() or self.drop.any() or
+                    self.corrupt.any() or (self.spike_s > 0).any())
+
+
+def plan_faults(fault, seed: int, round_idx: int, n: int) -> FaultPlan:
+    """The deterministic fault draw for one round.
+
+    ``fault`` is a ``repro.api.FaultSpec`` (anything with the rate
+    fields).  Same ``(seed, round_idx)`` → identical plan, on any
+    backend — the property every reproducibility test and the shared
+    defended/undefended benchmark trace rely on.
+    """
+    rng = np.random.default_rng(
+        np.random.SeedSequence([int(seed), int(round_idx), _FAULT_STREAM]))
+    # fixed draw order so adding a fault type never reshuffles the others
+    u_crash = rng.random(n)
+    u_drop = rng.random(n)
+    u_corrupt = rng.random(n)
+    u_spike = rng.random(n)
+    crash = u_crash < fault.crash_rate
+    drop = ~crash & (u_drop < fault.drop_rate)
+    corrupt = ~crash & ~drop & (u_corrupt < fault.corrupt_rate)
+    spike = np.where(u_spike < fault.delay_spike_rate,
+                     float(fault.delay_spike_s), 0.0)
+    return FaultPlan(crash=crash, drop=drop, corrupt=corrupt, spike_s=spike)
+
+
+def retry_round_index(round_idx: int, attempt: int) -> int:
+    """Synthetic round index for re-dispatch attempt ``attempt`` ≥ 1 of
+    ``round_idx``: a fresh, deterministic draw for both the straggler
+    model and the fault plan (retries are NOT fault-free — a re-dispatch
+    can crash too), far outside the range of real round indices."""
+    if attempt == 0:
+        return int(round_idx)
+    return (int(round_idx) + 1) * 1_000_003 + int(attempt)
+
+
+# --------------------------------------------------------------------------
+# corruption
+# --------------------------------------------------------------------------
+
+def _corrupt_array(arr: np.ndarray, rng: np.random.Generator, mode: str,
+                   scale: float) -> np.ndarray:
+    out = np.array(arr, copy=True)
+    if mode == "scale":
+        # decisively wrong but finite: scaled plus dense garbage
+        noise = rng.standard_normal(out.shape).astype(out.dtype, copy=False)
+        return (out * scale + scale * noise).astype(arr.dtype, copy=False)
+    # "bitflip": flip sign + one mid-exponent bit on a random ~25% subset
+    # of elements — large, finite perturbations (0x84000000: sign plus a
+    # ×2^±8-ish exponent shift for f32)
+    flat = out.reshape(-1)
+    if flat.dtype == np.float32 and flat.size:
+        k = max(1, flat.size // 4)
+        idx = rng.choice(flat.size, size=k, replace=False)
+        bits = flat.view(np.uint32)
+        bits[idx] ^= np.uint32(0x84000000)
+    else:                                    # non-f32 fallback: sign flips
+        flat *= -1
+    return out
+
+
+def _corrupt_ciphertext(ct, rng: np.random.Generator):
+    """Tamper an MEA-ECC ``Ciphertext`` on the wire: xor random bits into
+    a subset of its payload limbs.  The bits codec decodes the mangled
+    field elements into garbage floats — exactly what residual screening
+    must catch on ``encrypt="real"`` rounds."""
+    payload = np.array(ct.payload, copy=True)
+    flat = payload.reshape(-1)
+    k = max(1, flat.size // 8)
+    idx = rng.choice(flat.size, size=k, replace=False)
+    flat[idx] ^= rng.integers(1, np.iinfo(np.uint32).max, size=k,
+                              dtype=np.uint32)
+    return dataclasses.replace(ct, payload=payload)
+
+
+def corrupt_value(value, rng: np.random.Generator, mode: str = "scale",
+                  scale: float = 1e3):
+    """Corrupt one worker result in transit.
+
+    Handles the shapes the engine moves: float ndarrays (plain results),
+    MEA-ECC ``Ciphertext``s (``encrypt="real"`` results — payload limbs
+    bit-flipped), and tuples (the engine's ``(slot, payload)`` envelope —
+    the payload is corrupted, the routing metadata is not).  Unknown
+    types pass through unchanged.
+    """
+    if isinstance(value, tuple):
+        if not value:
+            return value
+        return value[:-1] + (corrupt_value(value[-1], rng, mode, scale),)
+    if hasattr(value, "payload") and hasattr(value, "ephemeral"):
+        return _corrupt_ciphertext(value, rng)
+    if isinstance(value, np.ndarray) and np.issubdtype(value.dtype,
+                                                       np.floating):
+        return _corrupt_array(value, rng, mode, scale)
+    try:
+        arr = np.asarray(value)
+    except Exception:                         # pragma: no cover - exotic type
+        return value
+    if np.issubdtype(arr.dtype, np.floating):
+        return _corrupt_array(arr, rng, mode, scale)
+    return value
+
+
+# --------------------------------------------------------------------------
+# the injecting transport
+# --------------------------------------------------------------------------
+
+class _SpikedStraggler:
+    """A ``StragglerModel`` wrapper adding the fault plan's delay spikes.
+
+    Spikes must flow through the wrapped transport's OWN latency source —
+    the virtual clock builds its timeline from ``straggler.delays`` and
+    the thread backend sleeps them — so injecting here keeps both
+    backends' spike timing identical and deterministic."""
+
+    def __init__(self, base, fault, seed: int):
+        self._base = base
+        self._fault = fault
+        self._seed = int(seed)
+
+    def __getattr__(self, name):
+        return getattr(self._base, name)
+
+    def delays(self, round_idx: int) -> np.ndarray:
+        d = np.array(self._base.delays(round_idx), copy=True)
+        plan = plan_faults(self._fault, self._seed, round_idx,
+                           self._base.n_workers)
+        return d + plan.spike_s[: d.size]
+
+
+class _FaultyRoundHandle:
+    """Wraps an inner ``RoundHandle``, applying one round's fault plan:
+    crashed workers' events are swallowed, dropped workers' ``result()``
+    raises, corrupted workers' results are perturbed deterministically."""
+
+    def __init__(self, inner, plan: FaultPlan, fault, seed: int,
+                 round_idx: int):
+        self._inner = inner
+        self._plan = plan
+        self._fault = fault
+        self._seed = int(seed)
+        self._round_idx = int(round_idx)
+        self._cache: Dict[int, object] = {}
+
+    def events(self) -> Iterator[ArrivalEvent]:
+        crash = self._plan.crash
+        for ev in self._inner.events():
+            if ev.worker < crash.size and crash[ev.worker]:
+                continue                      # no event ever arrives
+            yield ev
+
+    def result(self, worker: int):
+        plan = self._plan
+        if worker < plan.crash.size and plan.crash[worker]:
+            raise WorkerCrashed(
+                f"worker {worker} crashed in round {self._round_idx} — "
+                "its completion event was never delivered")
+        if worker < plan.drop.size and plan.drop[worker]:
+            raise ResultDropped(
+                f"worker {worker}'s result of round {self._round_idx} "
+                "was lost in transit")
+        if worker in self._cache:
+            return self._cache[worker]
+        res = self._inner.result(worker)
+        if worker < plan.corrupt.size and plan.corrupt[worker]:
+            rng = np.random.default_rng(np.random.SeedSequence(
+                [self._seed, self._round_idx, _CORRUPT_STREAM, int(worker)]))
+            res = corrupt_value(res, rng, self._fault.corrupt_mode,
+                                self._fault.corrupt_scale)
+        self._cache[worker] = res
+        return res
+
+    def finish(self) -> float:
+        return self._inner.finish()
+
+
+class FaultInjectingTransport:
+    """A ``Transport`` decorator injecting seeded faults (see module
+    docstring).  Protocol-identical to the wrapped backend, so any round
+    consumer works unchanged; ``close()`` delegates."""
+
+    def __init__(self, inner, fault, seed: int):
+        self.inner = inner
+        self.fault = fault
+        self.seed = int(seed)
+        self.name = f"faulty+{inner.name}"
+        if fault.delay_spike_rate > 0:
+            # route spikes through the inner transport's own latency model
+            inner.straggler = _SpikedStraggler(inner.straggler, fault, seed)
+
+    @property
+    def straggler(self):
+        return self.inner.straggler
+
+    def submit_round(self, shards, f, round_idx, *, t_compute=None,
+                     budget=None, min_ready=1) -> _FaultyRoundHandle:
+        plan = plan_faults(self.fault, self.seed, round_idx, len(shards))
+        handle = self.inner.submit_round(shards, f, round_idx,
+                                         t_compute=t_compute, budget=budget,
+                                         min_ready=min_ready)
+        return _FaultyRoundHandle(handle, plan, self.fault, self.seed,
+                                  round_idx)
+
+    def close(self) -> None:
+        self.inner.close()
+
+
+# --------------------------------------------------------------------------
+# worker health
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WorkerState:
+    """One worker's health record (see :class:`WorkerHealth`)."""
+    ewma_latency_s: float = float("nan")
+    n_ok: int = 0
+    n_crash: int = 0
+    n_drop: int = 0
+    n_corrupt: int = 0
+    strikes: int = 0                 # offenses since last quarantine/reset
+    n_quarantines: int = 0
+    quarantined_until: int = -1      # round index (exclusive); -1 = never
+    ok_streak: int = 0               # clean results since release
+
+
+class WorkerHealth:
+    """Per-worker health: EWMA latency, fault counters, quarantine with
+    probation re-admission.
+
+    ``quarantine_after`` offenses (crash / drop / corrupt) quarantine a
+    worker for ``quarantine_rounds`` rounds, doubling per quarantine
+    (capped at 16×).  A released worker is on *probation*: one offense
+    before ``probation_ok`` clean results re-quarantines it immediately.
+    The engine feeds this tracker and excludes quarantined workers from
+    dispatch; the ROADMAP's adaptive-redundancy controller consumes the
+    same signals.
+    """
+
+    def __init__(self, n_workers: int, *, quarantine_after: int = 2,
+                 quarantine_rounds: int = 4, ewma_alpha: float = 0.3,
+                 probation_ok: int = 2):
+        self.n = int(n_workers)
+        self.quarantine_after = max(int(quarantine_after), 1)
+        self.quarantine_rounds = max(int(quarantine_rounds), 1)
+        self.ewma_alpha = float(ewma_alpha)
+        self.probation_ok = max(int(probation_ok), 1)
+        self.workers: List[WorkerState] = [WorkerState()
+                                           for _ in range(self.n)]
+
+    # ---------------------------------------------------------- recording
+    def record_ok(self, worker: int, latency_s: float) -> None:
+        st = self.workers[worker]
+        st.n_ok += 1
+        st.ok_streak += 1
+        lat = float(latency_s)
+        if np.isnan(st.ewma_latency_s):
+            st.ewma_latency_s = lat
+        else:
+            a = self.ewma_alpha
+            st.ewma_latency_s = a * lat + (1.0 - a) * st.ewma_latency_s
+
+    def _on_probation(self, st: WorkerState, round_idx: int) -> bool:
+        return (st.quarantined_until >= 0 and
+                round_idx >= st.quarantined_until and
+                st.ok_streak < self.probation_ok)
+
+    def _offense(self, worker: int, round_idx: int) -> None:
+        st = self.workers[worker]
+        st.strikes += 1
+        if (st.strikes >= self.quarantine_after or
+                self._on_probation(st, round_idx)):
+            dur = min(self.quarantine_rounds * (2 ** st.n_quarantines),
+                      16 * self.quarantine_rounds)
+            st.quarantined_until = int(round_idx) + dur
+            st.n_quarantines += 1
+            st.strikes = 0
+            st.ok_streak = 0
+
+    def record_crash(self, worker: int, round_idx: int) -> None:
+        self.workers[worker].n_crash += 1
+        self._offense(worker, round_idx)
+
+    def record_drop(self, worker: int, round_idx: int) -> None:
+        self.workers[worker].n_drop += 1
+        self._offense(worker, round_idx)
+
+    def record_corrupt(self, worker: int, round_idx: int) -> None:
+        self.workers[worker].n_corrupt += 1
+        self._offense(worker, round_idx)
+
+    # ----------------------------------------------------------- querying
+    def is_quarantined(self, worker: int, round_idx: int) -> bool:
+        return round_idx < self.workers[worker].quarantined_until
+
+    def quarantined(self, round_idx: int) -> List[int]:
+        return [w for w in range(self.n)
+                if self.is_quarantined(w, round_idx)]
+
+    def ranked(self, round_idx: int,
+               exclude: Sequence[int] = ()) -> List[int]:
+        """Healthy workers best-first: not quarantined, not excluded,
+        sorted by EWMA latency (never-measured workers after measured
+        ones — unknown beats known-bad, but known-good beats unknown)."""
+        skip = set(int(w) for w in exclude)
+        cands = [w for w in range(self.n)
+                 if w not in skip and not self.is_quarantined(w, round_idx)]
+
+        def key(w):
+            lat = self.workers[w].ewma_latency_s
+            return (1, 0.0) if np.isnan(lat) else (0, lat)
+
+        return sorted(cands, key=key)
+
+    def snapshot(self) -> dict:
+        """JSON-able health summary (benchmarks / RoundStats feeds)."""
+        return {
+            "ewma_latency_s": [None if np.isnan(st.ewma_latency_s)
+                               else round(st.ewma_latency_s, 6)
+                               for st in self.workers],
+            "n_ok": [st.n_ok for st in self.workers],
+            "n_crash": [st.n_crash for st in self.workers],
+            "n_drop": [st.n_drop for st in self.workers],
+            "n_corrupt": [st.n_corrupt for st in self.workers],
+            "n_quarantines": [st.n_quarantines for st in self.workers],
+            "quarantined_until": [st.quarantined_until
+                                  for st in self.workers],
+        }

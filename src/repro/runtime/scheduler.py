@@ -32,6 +32,7 @@ from .wait_policy import (ArrivalEvent, RoundContext, WaitPolicy,
 __all__ = [
     "RoundPlan", "AnytimePoint", "EncodePipeline", "virtual_events",
     "plan_round", "assemble_curve", "policy_mask_fn",
+    "screen_responders", "retry_backoff",
 ]
 
 
@@ -148,6 +149,81 @@ class EncodePipeline:
         hidden = min(max(float(encode_s), 0.0), self._window)
         self._window = 0.0
         return float(encode_s) - hidden, hidden
+
+
+def screen_responders(scheme, results, mask, *, threshold: float = 2.0,
+                      factor: float = 8.0, norm_factor: float = 30.0,
+                      max_exclude: int = 0):
+    """Byzantine screening over one round's responder set, three stages:
+
+    1. **Non-finite pre-screen** — rows with NaN/inf (e.g. a tampered
+       ciphertext that decrypted to garbage) can't be interpolated
+       against at all and are evicted first.
+    2. **Robust norm screen** — rows whose norm exceeds ``norm_factor ×``
+       the median responder norm are evicted (worst-first).  The median
+       is robust up to 50% corrupters, so this stage kills gross
+       corruption (scale/bitflip inflate norms ~100–1000×) no matter how
+       MANY responders are corrupted — the regime where leave-one-out
+       alone fails, because every LOO prediction is polluted by the
+       other corrupters.  Clean coded rows spread well under 2× median
+       (measured ~1.4× for Berrut/SPACDC), so 30× has wide margin.  Only
+       the high side is screened: legitimately tiny rows (far-edge
+       alphas) occur in clean rounds.
+    3. **Leave-one-out residuals** — the scheme's ``decode_residuals``
+       (residual vs the decode predicted from the other responders,
+       normalised by the median responder norm) catches subtle
+       tampering that keeps norms in range.  Iteratively evicts the
+       worst scorer until every survivor is below
+       ``max(threshold, factor × median(scores))``.
+
+    The eviction budget ``max_exclude`` caps total evictions across all
+    stages.  Returns ``(clean_mask, excluded, scores)``: the float32 mask
+    with offenders cleared, evicted worker indices in eviction order, and
+    the final residual scores.
+    """
+    mask = np.asarray(mask, dtype=np.float32).copy()
+    results = np.asarray(results)
+    flat = results.reshape(mask.size, -1)
+    excluded: List[int] = []
+    # stage 1: non-finite rows
+    for i in np.flatnonzero(mask):
+        if len(excluded) >= max_exclude:
+            break
+        if not np.all(np.isfinite(flat[i])):
+            mask[i] = 0.0
+            excluded.append(int(i))
+    # stage 2: gross norm outliers (robust to many corrupters)
+    while len(excluded) < max_exclude:
+        resp = np.flatnonzero(mask)
+        if resp.size < 3:
+            break
+        norms = np.linalg.norm(flat[resp].astype(np.float64), axis=1)
+        cut = float(norm_factor) * max(float(np.median(norms)), 1e-12)
+        worst = int(np.argmax(norms))
+        if norms[worst] <= cut:
+            break
+        mask[resp[worst]] = 0.0
+        excluded.append(int(resp[worst]))
+    scores = np.zeros(mask.size, np.float64)
+    while len(excluded) < max_exclude:
+        resp = np.flatnonzero(mask)
+        if resp.size < 3:   # LOO says nothing below 3 responders
+            break
+        scores = np.asarray(scheme.decode_residuals(results, mask),
+                            np.float64)
+        med = float(np.median(scores[resp]))
+        cut = max(float(threshold), float(factor) * med)
+        worst = resp[int(np.argmax(scores[resp]))]
+        if scores[worst] <= cut:
+            break
+        mask[worst] = 0.0
+        excluded.append(int(worst))
+    return mask, excluded, scores
+
+
+def retry_backoff(attempt: int, base: float, cap: float) -> float:
+    """Capped exponential backoff before re-dispatch ``attempt`` (1-based)."""
+    return float(min(base * (2.0 ** max(attempt - 1, 0)), cap))
 
 
 def policy_mask_fn(scheme, straggler, policy=None, t_compute: float = 0.0,

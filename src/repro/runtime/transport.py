@@ -18,7 +18,8 @@ module factors it into a backend protocol so a socket or
 * :class:`ThreadTransport` — real threads sleeping real injected delays
   behind ONE long-lived executor; completions are consumed as they land,
   and unconsumed stragglers keep running in the background with their
-  results dropped (a late failure surfaces on the next round).
+  results dropped (a late failure is tagged with its originating round
+  and surfaces on that round's ``finish()`` or the next submit).
 
 ``TransportSpec(backend=...)`` selects the class; ``build_transport``
 maps the name.
@@ -26,6 +27,7 @@ maps the name.
 
 from __future__ import annotations
 
+import functools
 import time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from typing import Callable, Iterator, List, Optional, Protocol, Sequence
@@ -138,10 +140,12 @@ class VirtualClockTransport:
 
 class _ThreadRoundHandle:
     def __init__(self, transport: "ThreadTransport", shards, f,
-                 delays: np.ndarray, budget, min_ready):
+                 delays: np.ndarray, budget, min_ready,
+                 round_idx: int = -1):
         self._tr = transport
         self._budget = budget
         self._min_ready = max(int(min_ready), 1)
+        self._round_idx = int(round_idx)
         self._done = {}
         self._consumed = 0
         self._finished_at: Optional[float] = None
@@ -184,10 +188,16 @@ class _ThreadRoundHandle:
             self._finished_at = time.perf_counter() - self._t0
             for fu in self._pending:
                 # queued-but-unstarted work is dropped; a running straggler
-                # that fails later is recorded and raised next round
+                # that fails later is recorded — tagged with THIS round's
+                # index — and surfaced on this round's next finish()/submit
                 if not fu.cancel():
-                    fu.add_done_callback(self._tr._stray)
+                    fu.add_done_callback(
+                        functools.partial(self._tr._stray, self._round_idx))
             self._pending = set()
+        # a worker of THIS round that already failed points at the real
+        # culprit here, not at whatever round submits next
+        self._tr._raise_stray("a worker failed during its round",
+                              round_idx=self._round_idx)
         return self._finished_at
 
 
@@ -215,15 +225,28 @@ class ThreadTransport:
             self._executor = ThreadPoolExecutor(max_workers=2 * self.n)
         return self._executor
 
-    def _stray(self, fu):
+    def _stray(self, round_idx, fu):
         if not fu.cancelled() and fu.exception() is not None:
-            self._stray_errors.append(fu.exception())
+            self._stray_errors.append((int(round_idx), fu.exception()))
 
-    def _raise_stray(self, msg: str):
-        if self._stray_errors:
-            err = self._stray_errors[0]
-            self._stray_errors.clear()
-            raise RuntimeError(msg) from err
+    def _raise_stray(self, msg: str,
+                     round_idx: Optional[int] = None) -> None:
+        """Surface recorded stray failures.  With ``round_idx``, only
+        failures originating in that round raise (a round's ``finish()``
+        should not steal a later round's error); without, any recorded
+        failure raises.  The raised message names the originating round."""
+        if not self._stray_errors:
+            return
+        if round_idx is not None:
+            hits = [(r, e) for r, e in self._stray_errors if r == round_idx]
+            if not hits:
+                return
+        else:
+            hits = self._stray_errors
+        rid, err = hits[0]
+        self._stray_errors.clear()
+        tag = f" (originating round {rid})" if rid >= 0 else ""
+        raise RuntimeError(msg + tag) from err
 
     def submit_round(self, shards, f, round_idx, *, t_compute=None,
                      budget=None, min_ready=1) -> _ThreadRoundHandle:
@@ -232,15 +255,29 @@ class ThreadTransport:
         self._raise_stray("a straggler worker of an earlier round failed "
                           "after its round decoded")
         delays = self.straggler.delays(round_idx)
-        return _ThreadRoundHandle(self, shards, f, delays, budget, min_ready)
+        return _ThreadRoundHandle(self, shards, f, delays, budget, min_ready,
+                                  round_idx=round_idx)
+
+    # bounded close: how long close() waits for in-flight worker threads
+    # before abandoning them (a crashed/never-arriving future must not
+    # deadlock Session shutdown)
+    join_timeout_s: float = 2.0
 
     def close(self) -> None:
-        """Shut the executor down (stragglers of the last round included);
-        surfaces any failure an unconsumed straggler hit after its round.
-        Idempotent — a second close is a no-op."""
+        """Shut the executor down without deadlocking on stragglers:
+        cancel queued work, then join worker threads with a bounded
+        per-close deadline (``join_timeout_s``) — a thread still sleeping
+        or blocked past the deadline is abandoned (daemonic from the
+        process's point of view: its result was never going to be
+        consumed).  Surfaces any failure an unconsumed straggler hit
+        after its round.  Idempotent — a second close is a no-op."""
         if self._executor is not None:
-            self._executor.shutdown(wait=True)
+            ex = self._executor
             self._executor = None
+            ex.shutdown(wait=False, cancel_futures=True)
+            deadline = time.perf_counter() + float(self.join_timeout_s)
+            for th in list(getattr(ex, "_threads", ())):
+                th.join(max(deadline - time.perf_counter(), 0.0))
         self._raise_stray("a straggler worker failed after its round "
                           "decoded")
 
