@@ -30,6 +30,8 @@ BENCHES = {
     "serve":     ("bench_serve", "deadline serving quality", True),
     "faults":    ("bench_faults",
                   "fault-injected rounds: defended vs undefended", True),
+    "transport": ("bench_transport",
+                  "socket mesh vs threads + live SIGKILL round", True),
     "roofline":  ("roofline", "kernel arithmetic-intensity report", False),
 }
 ALIASES = {"fig5": "table2", "fig6": "table2", "fig7": "table2"}

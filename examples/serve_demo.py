@@ -4,11 +4,18 @@ step's output projection is a coded round that decodes at (or before) the
 budget, whatever the stragglers do.
 
   PYTHONPATH=src python examples/serve_demo.py
+
+Extra arguments pass straight through to ``repro.launch.serve`` (argparse
+last-wins), so the same demo runs on any registered transport backend:
+
+  PYTHONPATH=src python examples/serve_demo.py --transport socket
 """
+
+import sys
 
 from repro.launch.serve import main
 
 if __name__ == "__main__":
     main(["--arch", "deepseek-v2-lite-16b", "--tiny",
           "--batch", "4", "--prompt-len", "12", "--gen", "24",
-          "--deadline-ms", "8"])
+          "--deadline-ms", "8"] + sys.argv[1:])

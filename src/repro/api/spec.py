@@ -39,7 +39,15 @@ __all__ = [
     "TransportSpec", "FaultSpec", "ClusterSpec",
 ]
 
-_TRANSPORT_BACKENDS = ("virtual", "threads")
+def _transport_backends() -> tuple:
+    """Registered transport backends, enumerated from the runtime's
+    registry — a new transport registered in ``runtime.transport``
+    is immediately a valid spec value (and CLI choice) with no spec
+    edit."""
+    from ..runtime.transport import available_backends
+    return available_backends()
+
+
 _CIPHER_MODES = ("stream", "paper")
 _ENCRYPT_MODES = (None, "modeled", "real")
 _WAIT_POLICIES = ("fixed_quantile", "first_k", "deadline", "error_target")
@@ -308,16 +316,61 @@ class TransportSpec:
 
     ``"virtual"`` — the analytic virtual clock (benchmarks; Fig-3 sweeps
     in seconds).  ``"threads"`` — real thread workers with sleep()-injected
-    delays behind the same event API (validates the clock).  A socket /
-    ``jax.distributed`` backend is a drop-in third class implementing
-    ``runtime.transport.Transport``.
+    delays behind the same event API (validates the clock).  ``"socket"``
+    — a localhost TCP mesh of real worker *processes*
+    (``runtime.socket_transport``): framed CRC-checked messages, per-worker
+    heartbeats with liveness deadlines, automatic respawn/reconnect, and
+    OS-level fault injection (``FaultSpec.os_level``).  Valid names come
+    off the ``runtime.transport.TRANSPORTS`` registry.
+
+    The socket knobs (ignored by the in-process backends):
+
+    * ``heartbeat_s`` — worker PING period;
+    * ``liveness_timeout_s`` — heartbeat silence after which a pending
+      worker is written off for the round (must exceed ``heartbeat_s``);
+    * ``connect_timeout_s`` — mesh start-up / worker-dial deadline;
+    * ``max_respawns`` — relaunch budget per crashed worker;
+    * ``bind`` — master listen address (``"127.0.0.1:0"`` = any port;
+      bind a routable address to accept workers started by hand);
+    * ``spawn_workers`` — False = only listen, workers are launched
+      externally (``python -m repro.launch.worker``).
     """
     backend: str = "virtual"
+    heartbeat_s: float = 0.2
+    liveness_timeout_s: float = 1.5
+    connect_timeout_s: float = 60.0
+    max_respawns: int = 3
+    bind: str = "127.0.0.1:0"
+    spawn_workers: bool = True
 
     def __post_init__(self):
-        if self.backend not in _TRANSPORT_BACKENDS:
+        backends = _transport_backends()
+        if self.backend not in backends:
             raise ValueError(f"transport: backend must be one of "
-                             f"{_TRANSPORT_BACKENDS}, got {self.backend!r}")
+                             f"{backends}, got {self.backend!r}")
+        if self.heartbeat_s <= 0 or self.liveness_timeout_s <= 0:
+            raise ValueError("transport: heartbeat_s and liveness_timeout_s "
+                             "must be > 0")
+        if self.liveness_timeout_s <= self.heartbeat_s:
+            raise ValueError("transport: liveness_timeout_s must exceed "
+                             "heartbeat_s (a healthy worker must be able "
+                             "to beat before its deadline)")
+        if self.connect_timeout_s <= 0:
+            raise ValueError("transport: connect_timeout_s must be > 0")
+        if self.max_respawns < 0:
+            raise ValueError("transport: max_respawns must be >= 0")
+
+    def backend_options(self) -> Dict[str, Any]:
+        """The backend-specific factory kwargs (socket mesh knobs; empty
+        for the in-process backends)."""
+        if self.backend != "socket":
+            return {}
+        return {"heartbeat_s": self.heartbeat_s,
+                "liveness_timeout_s": self.liveness_timeout_s,
+                "connect_timeout_s": self.connect_timeout_s,
+                "max_respawns": self.max_respawns,
+                "bind": self.bind,
+                "spawn_workers": self.spawn_workers}
 
     def to_dict(self):
         return _as_dict(self)
@@ -363,6 +416,13 @@ class FaultSpec:
     corrupt_mode: str = "scale"
     corrupt_scale: float = 1e3
     seed: Optional[int] = None
+    # OS-level injection (socket backend only): the SAME seeded plan is
+    # realized physically — crash → SIGKILL the worker PID mid-round,
+    # delay spike → SIGSTOP/SIGCONT, drop → frame bytes tampered after
+    # the CRC is computed (caught by the master's CRC check), corrupt →
+    # the worker process perturbs its result with the simulated
+    # injector's exact rng stream (screened by the Byzantine stages)
+    os_level: bool = False
     # --- handling ---
     handle: bool = False
     max_retries: int = 2
@@ -467,17 +527,24 @@ class ClusterSpec:
             raise ValueError(
                 f"{self.code.scheme!r} has no fused round path (pair-coded "
                 "or non-linear encode) — drop code.fused=True")
-        if self.transport.backend == "threads":
+        if self.transport.backend != "virtual":
+            # every real backend (threads, socket) runs the event-driven
+            # loop round
             if self.code.fused:
                 raise ValueError(
-                    "transport 'threads' runs the event-driven loop round; "
-                    "the fused single-dispatch path is virtual-clock only — "
-                    "drop code.fused=True")
+                    f"transport {self.transport.backend!r} runs the "
+                    "event-driven loop round; the fused single-dispatch "
+                    "path is virtual-clock only — drop code.fused=True")
             if self.wait.policy == "error_target":
                 raise ValueError(
                     "error_target needs the virtual clock's batched prefix "
-                    "pipeline (real-thread mode validates the clock) — use "
+                    "pipeline (real backends validate the clock) — use "
                     "transport 'virtual'")
+        if self.fault.os_level and self.transport.backend != "socket":
+            raise ValueError(
+                "fault: os_level=True needs real worker processes to "
+                "signal — use transport 'socket' (the in-process backends "
+                "simulate the same seeded plan with os_level=False)")
         if (self.wait.policy == "first_k" and
                 self.wait.k > self.code.n_workers):
             raise ValueError(f"wait: first_k k={self.wait.k} exceeds "
@@ -514,11 +581,12 @@ class ClusterSpec:
             stable = bool(getattr(scheme, "fused_decode_stable", False))
             use_fused = ((supports_fused and stable)
                          if self.code.fused is None else bool(self.code.fused))
-            if self.transport.backend == "threads":
+            if self.transport.backend != "virtual":
                 raise ValueError(
                     "crypto.fused=True needs the virtual-clock fused round; "
-                    "transport 'threads' runs the event-driven loop round — "
-                    "use transport 'virtual' or drop crypto.fused")
+                    f"transport {self.transport.backend!r} runs the "
+                    "event-driven loop round — use transport 'virtual' or "
+                    "drop crypto.fused")
             if not use_fused:
                 raise ValueError(
                     "crypto.fused=True needs a fused round to fuse into, but "

@@ -5,7 +5,9 @@ each generation step's output projection runs as a coded round under a
 ``Deadline`` wait policy (fixed latency budget, best-effort accuracy —
 the deadline-bounded coded inference the ROADMAP asks for).  The whole
 serving configuration is one declarative ``repro.api.ClusterSpec``;
-``--transport threads`` swaps the round backend with no other change.
+``--transport threads`` (real threads) or ``--transport socket`` (real
+worker processes on a localhost TCP mesh) swaps the round backend with
+no other change — the choices enumerate the transport registry.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --tiny \
       --batch 4 --prompt-len 16 --gen 32 --deadline-ms 8
@@ -75,8 +77,11 @@ def main(argv=None):
     ap.add_argument("--stragglers", type=int, default=2)
     ap.add_argument("--deadline-ms", type=float, default=8.0,
                     help="per-step coded decode budget (virtual ms)")
+    from ..runtime.transport import available_backends
     ap.add_argument("--transport", default="virtual",
-                    choices=("virtual", "threads"))
+                    choices=available_backends(),
+                    help="round backend (from the transport registry); "
+                    "'socket' spawns real worker processes on localhost")
     args = ap.parse_args(argv)
 
     if args.uncoded:

@@ -1,0 +1,199 @@
+"""Worker process for the socket transport mesh.
+
+``python -m repro.launch.worker --connect HOST:PORT --worker-id I``
+
+One process = one coded worker: it dials the master, registers with a
+HELLO frame, heartbeats on a dedicated thread (PINGs keep flowing while
+a matmul runs — only a frozen or dead process misses its liveness
+deadline), and executes TASK frames as they arrive.  Each TASK carries
+the round's pickled callable, this worker's shard (raw array bytes or
+genuine MEA-ECC ciphertext limbs, see ``runtime.wire``), an optional
+straggler delay to honour, and an optional fault-injection directive:
+
+* ``corrupt`` — perturb the *result* with the exact seeded rng stream
+  the simulated injector uses, so Byzantine screening faces the same
+  garbage bits on a real mesh as in-process;
+* ``tamper`` — flip payload bytes after the frame CRC is computed: the
+  master's CRC check fails and the result counts as dropped in transit.
+
+If the connection drops while the master is still there (transient
+socket failure), the worker reconnects with capped-exponential-backoff
++ full-jitter retries and re-registers under the same worker id; the
+master bumps its generation and keeps routing.  A SHUTDOWN frame (or a
+permanently unreachable master) ends the process.
+
+jax is imported lazily inside the task callables themselves
+(``runtime.tasks``), so a worker that never receives work never pays
+the import.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pickle
+import socket
+import sys
+import threading
+import time
+import traceback
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.runtime import wire
+from repro.runtime.scheduler import retry_backoff
+
+_TAMPER_STREAM = 6       # rng stream for tamper byte positions (worker-side)
+
+
+class _Connection:
+    """One live connection to the master: socket + send lock + heartbeat."""
+
+    def __init__(self, sock: socket.socket, worker_id: int,
+                 heartbeat_s: float):
+        self.sock = sock
+        self.worker_id = worker_id
+        self.heartbeat_s = heartbeat_s
+        self.lock = threading.Lock()
+        self.broken = threading.Event()
+
+    def send(self, data: bytes) -> None:
+        try:
+            with self.lock:
+                self.sock.sendall(data)
+        except OSError:
+            self.broken.set()
+            raise
+
+    def start_heartbeat(self) -> None:
+        def _beat():
+            ping = wire.pack_frame(wire.PING, self.worker_id, 0)
+            while not self.broken.is_set():
+                time.sleep(self.heartbeat_s)
+                try:
+                    self.send(ping)
+                except OSError:
+                    return
+        threading.Thread(target=_beat, daemon=True,
+                         name="worker-heartbeat").start()
+
+
+def _connect(host: str, port: int, worker_id: int, timeout_s: float,
+             rng: np.random.Generator) -> socket.socket:
+    """Dial the master with jittered capped-exponential backoff until
+    ``timeout_s`` runs out."""
+    deadline = time.perf_counter() + timeout_s
+    attempt = 0
+    while True:
+        attempt += 1
+        try:
+            sock = socket.create_connection((host, port), timeout=5.0)
+            sock.settimeout(None)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            return sock
+        except OSError:
+            if time.perf_counter() >= deadline:
+                raise
+            time.sleep(retry_backoff(attempt, 0.05, 1.0, rng=rng))
+
+
+def _apply_inject(result, inject: dict, worker_id: int):
+    """The ``corrupt`` directive: same value corruption, same seeded rng
+    stream as the in-process injector (``runtime.faults``)."""
+    from repro.runtime.faults import _CORRUPT_STREAM, corrupt_value
+    rng = np.random.default_rng(np.random.SeedSequence(
+        [int(inject["seed"]), int(inject["round"]), _CORRUPT_STREAM,
+         int(worker_id)]))
+    return corrupt_value(result, rng, mode=inject.get("mode", "scale"),
+                         scale=float(inject.get("scale", 1e3)))
+
+
+def _run_task(conn: _Connection, frame: wire.Frame) -> None:
+    """Execute one TASK frame and send RESULT/ERROR back (runs on the
+    compute executor so the receive loop keeps draining frames)."""
+    wid = conn.worker_id
+    try:
+        msg = wire.loads(frame.payload)
+        delay = float(msg.get("delay") or 0.0)
+        if delay > 0.0:
+            time.sleep(delay)       # the straggler model's injected latency
+        f = pickle.loads(msg["task"])
+        result = f(msg["shard"])
+        inject = msg.get("inject")
+        if inject and inject.get("kind") == "corrupt":
+            result = _apply_inject(result, inject, wid)
+        data = wire.pack_frame(wire.RESULT, wid, frame.sub,
+                               wire.dumps(result))
+        if inject and inject.get("kind") == "tamper":
+            rng = np.random.default_rng(np.random.SeedSequence(
+                [int(inject["seed"]), int(inject["round"]),
+                 _TAMPER_STREAM, wid]))
+            data = wire.tamper_frame(data, rng)
+    except Exception:
+        err = traceback.format_exc(limit=8).encode("utf-8")
+        data = wire.pack_frame(wire.ERROR, wid, frame.sub, err)
+    try:
+        conn.send(data)
+    except OSError:
+        pass        # reconnect loop takes over; the master reaps the round
+
+
+def serve(host: str, port: int, worker_id: int, *,
+          heartbeat_s: float = 0.2, connect_timeout_s: float = 60.0,
+          max_reconnects: int = 100) -> int:
+    """Worker main loop: (re)connect, register, execute until SHUTDOWN."""
+    rng = np.random.default_rng(np.random.SeedSequence(
+        [_TAMPER_STREAM + 1, int(worker_id)]))
+    executor = ThreadPoolExecutor(max_workers=1,
+                                  thread_name_prefix=f"w{worker_id}-compute")
+    reconnects = 0
+    while True:
+        try:
+            sock = _connect(host, port, worker_id, connect_timeout_s, rng)
+        except OSError:
+            return 1                # master permanently unreachable
+        conn = _Connection(sock, worker_id, heartbeat_s)
+        try:
+            conn.send(wire.pack_frame(wire.HELLO, worker_id, 0))
+            conn.start_heartbeat()
+            while True:
+                frame = wire.read_frame(sock)
+                if frame.type == wire.SHUTDOWN:
+                    return 0
+                if frame.type == wire.TASK and frame.crc_ok:
+                    executor.submit(_run_task, conn, frame)
+        except (EOFError, OSError, wire.FrameError):
+            conn.broken.set()
+            try:
+                sock.close()
+            except OSError:
+                pass
+            reconnects += 1
+            if reconnects > max_reconnects:
+                return 1
+            # transient drop: back off with jitter, redial, re-HELLO
+            time.sleep(retry_backoff(min(reconnects, 6), 0.05, 1.0,
+                                     rng=rng))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.worker",
+        description="SPACDC socket-mesh worker process")
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT",
+                    help="master's listen address")
+    ap.add_argument("--worker-id", required=True, type=int,
+                    help="this worker's index in the coded pool")
+    ap.add_argument("--heartbeat-s", type=float, default=0.2,
+                    help="liveness PING period (default 0.2s)")
+    ap.add_argument("--connect-timeout-s", type=float, default=60.0,
+                    help="give up dialing the master after this long")
+    args = ap.parse_args(argv)
+    host, _, port = args.connect.rpartition(":")
+    return serve(host or "127.0.0.1", int(port), args.worker_id,
+                 heartbeat_s=args.heartbeat_s,
+                 connect_timeout_s=args.connect_timeout_s)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

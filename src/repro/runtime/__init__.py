@@ -4,10 +4,13 @@ from .wait_policy import (ArrivalEvent, Deadline, ErrorTarget, FirstK,
 from .scheduler import (AnytimePoint, EncodePipeline, RoundPlan,
                         plan_round, policy_mask_fn, retry_backoff,
                         screen_responders, virtual_events)
-from .transport import (ThreadTransport, Transport, VirtualClockTransport,
+from .transport import (TRANSPORTS, ThreadTransport, Transport,
+                        VirtualClockTransport, available_backends,
                         build_transport)
 from .faults import (DegradedRoundError, FaultInjectingTransport,
                      ResultDropped, WorkerHealth, plan_faults)
+from .tasks import (EnvelopeMatmulTask, MatmulTask, PairMatmulTask,
+                    SealedMatmulTask)
 from .engine import RoundEngine, RoundStats
 from .master_worker import CodedMaster, WorkerPool
 
@@ -19,7 +22,10 @@ __all__ = [
     "policy_mask_fn", "retry_backoff", "screen_responders",
     "virtual_events",
     "Transport", "VirtualClockTransport", "ThreadTransport",
+    "TRANSPORTS", "available_backends",
     "build_transport", "RoundEngine", "RoundStats",
+    "MatmulTask", "PairMatmulTask", "EnvelopeMatmulTask",
+    "SealedMatmulTask",
     "DegradedRoundError", "FaultInjectingTransport", "ResultDropped",
     "WorkerHealth", "plan_faults",
 ]

@@ -46,10 +46,14 @@ import jax
 import jax.numpy as jnp
 
 from .faults import (DegradedRoundError, FaultInjectingTransport,
-                     ResultDropped, WorkerHealth, retry_round_index)
+                     ResultDropped, WorkerHealth, retry_round_index,
+                     _BACKOFF_STREAM)
 from .scheduler import (EncodePipeline, assemble_curve, plan_round,
                         retry_backoff, screen_responders, virtual_events)
-from .transport import ThreadTransport, VirtualClockTransport
+from .tasks import (EnvelopeMatmulTask, MatmulTask, PairMatmulTask,
+                    SealedMatmulTask)
+from .transport import (ThreadTransport, VirtualClockTransport,
+                        build_transport)
 from .wait_policy import (RoundContext, WaitPolicy, resolve_policy,
                           scheme_min_responders)
 
@@ -96,24 +100,55 @@ class RoundStats:
 class WorkerPool:
     """N simulated workers behind the event-driven round API.
 
-    The pool is a facade over the two in-tree transports (see
-    ``runtime.transport``): the analytic virtual clock and the
-    real-thread backend with one long-lived executor.  ``real_threads``
-    stays a plain attribute consulted per round, so callers can flip a
-    pool between backends mid-life (the tests validating the clock do).
+    The pool is a facade over the registered transports (see
+    ``runtime.transport``): the analytic virtual clock, the real-thread
+    backend with one long-lived executor, and the socket process mesh.
+    ``real_threads`` survives as a flippable property consulted per
+    round, so callers can still flip a pool between the virtual clock
+    and real backends mid-life (the tests validating the clock do).
     """
 
-    def __init__(self, n_workers: int, straggler, real_threads: bool = False):
+    def __init__(self, n_workers: int, straggler, real_threads: bool = False,
+                 *, backend: Optional[str] = None, transport_options=None):
         self.n = n_workers
         self.straggler = straggler
-        self.real_threads = real_threads
+        self._backend = backend if backend is not None else \
+            ("threads" if real_threads else "virtual")
+        self._options = dict(transport_options or {})
         self._virtual = VirtualClockTransport(straggler)
         self._threads = ThreadTransport(n_workers, straggler)
+        self._socket = None     # the process mesh is built (and its
+                                # workers spawned) only when first used
+
+    @property
+    def backend(self) -> str:
+        return self._backend
+
+    @property
+    def real_threads(self) -> bool:
+        """True when rounds run on a real (non-virtual) backend."""
+        return self._backend != "virtual"
+
+    @real_threads.setter
+    def real_threads(self, value) -> None:
+        # legacy flip: True selects threads (never silently the mesh),
+        # False returns to the virtual clock
+        if bool(value):
+            if self._backend == "virtual":
+                self._backend = "threads"
+        else:
+            self._backend = "virtual"
 
     @property
     def transport(self):
         """The backend the next round runs on."""
-        return self._threads if self.real_threads else self._virtual
+        if self._backend == "socket":
+            if self._socket is None:
+                self._socket = build_transport("socket", self.n,
+                                               self.straggler,
+                                               **self._options)
+            return self._socket
+        return self._threads if self._backend == "threads" else self._virtual
 
     @property
     def _executor(self):
@@ -122,10 +157,13 @@ class WorkerPool:
         return self._threads._executor
 
     def close(self):
-        """Shut the thread transport down (stragglers of the last round
-        included); surfaces any failure an unconsumed straggler hit after
+        """Shut the real transports down (stragglers of the last round
+        included, worker processes terminated within their bounded
+        deadline); surfaces any failure an unconsumed straggler hit after
         its round.  Idempotent."""
         self._threads.close()
+        if self._socket is not None:
+            self._socket.close()
 
     def __del__(self):
         try:
@@ -183,9 +221,13 @@ class WorkerPool:
                 "clock (real-thread mode validates the clock)")
         budget = getattr(policy, "t_budget", None)
         min_ready = scheme_min_responders(scheme) if scheme is not None else 1
-        handle = self._threads.submit_round(shards, f, round_idx,
-                                            budget=budget,
-                                            min_ready=min_ready)
+        # the pool's selected real backend (threads or the socket mesh);
+        # direct callers on a virtual pool get the thread transport, the
+        # pre-mesh behaviour
+        transport = self.transport if self.real_threads else self._threads
+        handle = transport.submit_round(shards, f, round_idx,
+                                        budget=budget,
+                                        min_ready=min_ready)
         events = []
         try:
             for ev in handle.events():
@@ -228,7 +270,8 @@ class RoundEngine:
             spec.straggler.build(self.n, spec.seed)
         self.pool = WorkerPool(
             self.n, self.straggler,
-            real_threads=spec.transport.backend == "threads")
+            backend=spec.transport.backend,
+            transport_options=spec.transport.backend_options())
         self.scheme = spec.build_scheme()
         spec.validate(scheme=self.scheme)
         # the decode point is a pluggable WaitPolicy; the default
@@ -255,7 +298,9 @@ class RoundEngine:
         # real-thread transport always runs the event-driven loop round.
         stable = bool(getattr(self.scheme, "fused_decode_stable", False))
         self.use_fused = (supports and stable) if fused is None else bool(fused)
-        if spec.transport.backend == "threads":
+        if spec.transport.backend != "virtual":
+            # every real backend (threads, socket mesh) runs the
+            # event-driven loop round
             self.use_fused = False
         # fault injection / handling (runtime.faults): the injecting
         # transport wraps whichever backend the pool selected — protocol
@@ -268,6 +313,7 @@ class RoundEngine:
         if self.fault.active:
             fseed = (self.fault.seed if self.fault.seed is not None
                      else spec.seed)
+            self._fault_seed = fseed        # jittered-backoff rng root
             self._fault_transport = FaultInjectingTransport(
                 self.pool.transport, self.fault, fseed)
             self.health = WorkerHealth(
@@ -1039,26 +1085,33 @@ class RoundEngine:
                 return self._matmul_real(a, b, round_idx)
             return self._matmul_fused(a, b, round_idx)
         t0 = time.perf_counter()
+        # the round's work is a picklable task object (runtime.tasks), the
+        # SAME object on every backend — in-process rounds call it
+        # directly, the socket mesh ships it to worker processes; the
+        # math runs through jnp either way, so the bits cannot diverge
         if self.scheme.pair_coded:
             ea, eb = self.scheme.encode_pair(a, b)
             jax.block_until_ready((ea, eb))
             shards = [(ea[i], eb[i]) for i in range(self.n)]
-            # jnp.asarray: no-op on the plain path's device arrays, converts
-            # the real path's decrypted numpy shards — both modes compute
-            # the worker product with the same jnp matmul on the same bits
-            f = lambda ab: np.asarray(jnp.asarray(ab[0]) @ jnp.asarray(ab[1]))
+            f = PairMatmulTask()
             lhs_shape, rhs_shape = ea.shape[1:], eb.shape[1:]
         else:
             enc = self.scheme.encode(a)
             jax.block_until_ready(enc)
             shards = [np.asarray(enc[i]) for i in range(self.n)]
-            f = lambda s: np.asarray(jnp.asarray(s) @ b)
+            f = MatmulTask(b)
             lhs_shape, rhs_shape = enc.shape[1:], b.shape
         t_enc = time.perf_counter() - t0
+        if self.pool.backend == "socket" and self.scheme.pair_coded:
+            # pair shards cross a process boundary: host arrays on the wire
+            shards = [(np.asarray(sa), np.asarray(sb)) for sa, sb in shards]
 
         crypto_s = 0.0
-        if real:
-            # wire out: every worker decrypts bit-identical shard bytes
+        plain_shards = shards       # shapes for the modeled-crypto estimate
+        sealed = real and self.pool.backend == "socket"
+        if real and not sealed:
+            # in-process wire: every worker decrypts bit-identical shard
+            # bytes, round-tripped master-side
             t0 = time.perf_counter()
             shards = [
                 tuple(self._wire(part, self._master_kp, self._worker_kps[i])
@@ -1066,11 +1119,39 @@ class RoundEngine:
                 else self._wire(s, self._master_kp, self._worker_kps[i])
                 for i, s in enumerate(shards)]
             crypto_s += time.perf_counter() - t0
+        elif sealed:
+            # socket wire: shards leave the master SEALED — genuine
+            # MEA-ECC ciphertext limbs cross the socket (zero re-encode,
+            # see runtime.wire), the worker process decrypts, multiplies,
+            # and encrypts the product back under a dispatch-time nonce
+            t0 = time.perf_counter()
+            f = SealedMatmulTask(self._mea, self._worker_kps,
+                                 self._master_kp.pk,
+                                 b=None if self.scheme.pair_coded
+                                 else np.asarray(b))
+            shards = [
+                (i,
+                 tuple(self._mea.encrypt(np.asarray(part),
+                                         self._worker_kps[i].pk,
+                                         sender=self._master_kp,
+                                         nonce=next(self._nonce))
+                       for part in (s if isinstance(s, tuple) else (s,))),
+                 next(self._nonce))          # the worker's reply nonce
+                for i, s in enumerate(shards)]
+            self.dispatch_count += self.n       # one encrypt core each
+            crypto_s += time.perf_counter() - t0
 
         t_comp = self._worker_compute_time(lhs_shape, rhs_shape)
         resp, results, wait_s, plan = self._loop_round(shards, f, round_idx,
                                                        t_comp)
-        if real:
+        if sealed:
+            # responders' products arrive as ciphertext to the master key
+            t0 = time.perf_counter()
+            results = [np.asarray(self._mea.decrypt(ct, self._master_kp))
+                       for ct in results]
+            self.dispatch_count += len(results)
+            crypto_s += time.perf_counter() - t0
+        elif real:
             # wire back: responders encrypt their products to the master
             t0 = time.perf_counter()
             results = [self._wire(r, self._worker_kps[i], self._master_kp)
@@ -1081,7 +1162,7 @@ class RoundEngine:
         out = np.asarray(self.scheme.reconstruct_matmul(dec, a.shape[0],
                                                         b.shape[-1]))
         t_dec = time.perf_counter() - t0
-        modeled = self._crypto_overhead(shards)
+        modeled = self._crypto_overhead(plain_shards)
         stats = RoundStats(t_enc, wait_s, t_dec,
                            crypto_s if real else modeled, len(resp),
                            crypto_modeled_s=modeled if real else 0.0,
@@ -1167,17 +1248,14 @@ class RoundEngine:
         crypto_s = 0.0
         transport, health = self._fault_transport, self.health
 
-        def worker_fn(env):
-            if env is None:                # worker not targeted this round
-                return None
-            w, slot, payload = env
-            if real:
-                x = self._mea.decrypt(payload, self._worker_kps[w])
-                r = np.asarray(jnp.asarray(x) @ b)
-                return (slot, self._mea.encrypt(
-                    r, self._master_kp.pk, sender=self._worker_kps[w],
-                    nonce=next(self._nonce)))
-            return (slot, np.asarray(jnp.asarray(payload) @ b))
+        # the envelope task is picklable (runtime.tasks) so the SAME
+        # defended round runs on the socket mesh — the reply nonce is
+        # drawn at dispatch and travels in the envelope, because a shared
+        # nonce counter cannot cross a process boundary
+        worker_fn = EnvelopeMatmulTask(
+            b, mea=self._mea if real else None,
+            worker_kps=self._worker_kps if real else None,
+            master_pk=self._master_kp.pk if real else None)
 
         def dispatch(assign: dict, attempt: int):
             nonlocal crypto_s
@@ -1187,7 +1265,8 @@ class RoundEngine:
                 for w, slot in assign.items():
                     envs[w] = (w, slot, self._mea.encrypt(
                         enc[slot], self._worker_kps[w].pk,
-                        sender=self._master_kp, nonce=next(self._nonce)))
+                        sender=self._master_kp, nonce=next(self._nonce)),
+                        next(self._nonce))
                 self.dispatch_count += 2 * len(assign)
                 crypto_s += time.perf_counter() - tw
             else:
@@ -1205,6 +1284,10 @@ class RoundEngine:
         quarantined0 = tuple(health.quarantined(round_idx)) \
             if (handle_faults and health is not None) else ()
         wait_total, retries, attempt = 0.0, 0, 0
+        # full-jitter backoff, seeded off the round's fault SeedSequence:
+        # retries never thundering-herd, yet the trace stays reproducible
+        backoff_rng = np.random.default_rng(np.random.SeedSequence(
+            [int(self._fault_seed), int(round_idx), _BACKOFF_STREAM]))
         if handle_faults and health is not None:
             avail = [w for w in range(self.n)
                      if not health.is_quarantined(w, round_idx)]
@@ -1303,7 +1386,8 @@ class RoundEngine:
             if not cands:
                 break
             wait_total += retry_backoff(attempt, fault.backoff_s,
-                                        fault.backoff_cap_s)
+                                        fault.backoff_cap_s,
+                                        rng=backoff_rng)
             retries += 1
             assign = dict(zip(cands, missing))
 

@@ -55,6 +55,7 @@ __all__ = [
 # ([seed, round]) and the markov-state ([seed, round, 1]) streams
 _FAULT_STREAM = 2
 _CORRUPT_STREAM = 3
+_BACKOFF_STREAM = 4     # the engine's jittered re-dispatch backoff draws
 
 
 class ResultDropped(RuntimeError):
@@ -289,7 +290,12 @@ class FaultInjectingTransport:
         self.fault = fault
         self.seed = int(seed)
         self.name = f"faulty+{inner.name}"
-        if fault.delay_spike_rate > 0:
+        # OS-level mode: the inner transport realizes the plan physically
+        # (SIGKILL / SIGSTOP+SIGCONT / worker-side corrupt + frame tamper)
+        # instead of this wrapper simulating it on the event stream
+        self.os_level = (bool(getattr(fault, "os_level", False)) and
+                         hasattr(inner, "schedule_os_faults"))
+        if fault.delay_spike_rate > 0 and not self.os_level:
             # route spikes through the inner transport's own latency model
             inner.straggler = _SpikedStraggler(inner.straggler, fault, seed)
 
@@ -298,8 +304,18 @@ class FaultInjectingTransport:
         return self.inner.straggler
 
     def submit_round(self, shards, f, round_idx, *, t_compute=None,
-                     budget=None, min_ready=1) -> _FaultyRoundHandle:
+                     budget=None, min_ready=1):
         plan = plan_faults(self.fault, self.seed, round_idx, len(shards))
+        if self.os_level:
+            # same seeded plan, real consequences: arm the mesh and return
+            # the RAW handle — crashes are dead PIDs, drops are CRC
+            # failures, corruption happens inside the worker process
+            self.inner.schedule_os_faults(round_idx, plan, self.fault,
+                                          self.seed)
+            return self.inner.submit_round(shards, f, round_idx,
+                                           t_compute=t_compute,
+                                           budget=budget,
+                                           min_ready=min_ready)
         handle = self.inner.submit_round(shards, f, round_idx,
                                          t_compute=t_compute, budget=budget,
                                          min_ready=min_ready)
@@ -429,4 +445,33 @@ class WorkerHealth:
             "n_quarantines": [st.n_quarantines for st in self.workers],
             "quarantined_until": [st.quarantined_until
                                   for st in self.workers],
+        }
+
+    def to_dict(self) -> dict:
+        """Fully JSON-serializable health snapshot, one record per worker
+        — what a multi-host run logs (and asserts on) across process
+        boundaries.  Everything is a plain int/float/None, never a numpy
+        scalar; ``json.dumps(health.to_dict())`` always succeeds."""
+        return {
+            "n_workers": int(self.n),
+            "quarantine_after": int(self.quarantine_after),
+            "quarantine_rounds": int(self.quarantine_rounds),
+            "ewma_alpha": float(self.ewma_alpha),
+            "probation_ok": int(self.probation_ok),
+            "workers": [
+                {
+                    "worker": int(w),
+                    "ewma_latency_s": (None if np.isnan(st.ewma_latency_s)
+                                       else float(st.ewma_latency_s)),
+                    "n_ok": int(st.n_ok),
+                    "n_crash": int(st.n_crash),
+                    "n_drop": int(st.n_drop),
+                    "n_corrupt": int(st.n_corrupt),
+                    "strikes": int(st.strikes),
+                    "n_quarantines": int(st.n_quarantines),
+                    "quarantined_until": int(st.quarantined_until),
+                    "ok_streak": int(st.ok_streak),
+                }
+                for w, st in enumerate(self.workers)
+            ],
         }

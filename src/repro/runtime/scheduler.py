@@ -221,9 +221,23 @@ def screen_responders(scheme, results, mask, *, threshold: float = 2.0,
     return mask, excluded, scores
 
 
-def retry_backoff(attempt: int, base: float, cap: float) -> float:
-    """Capped exponential backoff before re-dispatch ``attempt`` (1-based)."""
-    return float(min(base * (2.0 ** max(attempt - 1, 0)), cap))
+def retry_backoff(attempt: int, base: float, cap: float,
+                  rng: Optional[np.random.Generator] = None) -> float:
+    """Capped exponential backoff before re-dispatch ``attempt`` (1-based).
+
+    With ``rng``, applies *full jitter* (AWS-style): a uniform draw in
+    ``[0, min(base·2^(attempt-1), cap)]`` — retrying parties never
+    thundering-herd onto the same instant, yet fully reproducible when
+    the generator is seeded (the engine seeds one per round off its
+    fault SeedSequence; the socket transport seeds per-worker streams
+    for connect/send retries).  Without ``rng`` the deterministic cap
+    itself is returned — the pre-jitter behaviour, kept for analytic
+    accounting paths.
+    """
+    ceil = float(min(base * (2.0 ** max(attempt - 1, 0)), cap))
+    if rng is None:
+        return ceil
+    return float(rng.uniform(0.0, ceil))
 
 
 def policy_mask_fn(scheme, straggler, policy=None, t_compute: float = 0.0,

@@ -1,0 +1,125 @@
+"""Picklable per-worker task callables for coded rounds.
+
+The transport protocol hands each worker an opaque callable ``f`` plus
+its shard.  On the in-process backends (virtual clock, threads) a lambda
+closing over the engine's state is fine; the socket backend ships ``f``
+to *worker processes*, so the round's work must be a module-level object
+that pickles.  These classes are those objects — used uniformly on every
+backend so the math (and therefore the bits) cannot diverge between
+transports:
+
+* :class:`MatmulTask` — the data-coded loop round's ``shard @ B``.
+* :class:`PairMatmulTask` — the pair-coded round's ``A_i @ B_i``.
+* :class:`EnvelopeMatmulTask` — the fault path's slot envelope
+  ``(worker, slot, payload[, nonce]) -> (slot, result)``, including the
+  ``encrypt="real"`` decrypt → matmul → encrypt-back leg (reply nonces
+  are drawn by the master at dispatch and travel in the envelope — a
+  shared nonce counter cannot cross process boundaries).
+* :class:`SealedMatmulTask` — the socket backend's ``encrypt="real"``
+  loop round: the shard arrives as genuine MEA-ECC ciphertext(s), the
+  worker decrypts, multiplies, and encrypts the product back, so real
+  ciphertext bytes cross the wire in both directions.
+
+Every matmul goes through ``jnp`` exactly like the engine's original
+closures, so outputs stay bit-identical across backends (asserted in
+``tests/test_transport_socket.py``).  jax is imported lazily inside the
+calls: worker processes only pay the import when work actually arrives.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+__all__ = ["MatmulTask", "PairMatmulTask", "EnvelopeMatmulTask",
+           "SealedMatmulTask"]
+
+
+def _jnp():
+    import jax.numpy as jnp
+    return jnp
+
+
+class MatmulTask:
+    """Data-coded loop round: ``shard -> np.asarray(jnp(shard) @ B)``."""
+
+    def __init__(self, b):
+        self.b = np.asarray(b)
+
+    def __call__(self, shard):
+        if shard is None:
+            return None
+        jnp = _jnp()
+        return np.asarray(jnp.asarray(shard) @ jnp.asarray(self.b))
+
+
+class PairMatmulTask:
+    """Pair-coded loop round: ``(ea_i, eb_i) -> np(jnp(ea_i) @ jnp(eb_i))``."""
+
+    def __call__(self, ab):
+        if ab is None:
+            return None
+        jnp = _jnp()
+        return np.asarray(jnp.asarray(ab[0]) @ jnp.asarray(ab[1]))
+
+
+class EnvelopeMatmulTask:
+    """The defended round's slot envelope.
+
+    Plain rounds: ``(w, slot, shard)`` → ``(slot, shard @ B)``.  Real
+    rounds: ``(w, slot, ciphertext, nonce)`` → decrypt with worker ``w``'s
+    key, multiply, encrypt the product back to the master under the
+    dispatch-time ``nonce``.
+    """
+
+    def __init__(self, b, mea=None, worker_kps: Optional[Sequence] = None,
+                 master_pk=None):
+        self.b = np.asarray(b)
+        self.mea = mea
+        self.worker_kps = list(worker_kps) if worker_kps is not None else None
+        self.master_pk = master_pk
+
+    def __call__(self, env):
+        if env is None:                 # worker not targeted this round
+            return None
+        w, slot, payload = env[0], env[1], env[2]
+        nonce = env[3] if len(env) > 3 else None
+        jnp = _jnp()
+        if self.mea is not None and hasattr(payload, "ephemeral"):
+            x = self.mea.decrypt(payload, self.worker_kps[w])
+            r = np.asarray(jnp.asarray(x) @ jnp.asarray(self.b))
+            return (slot, self.mea.encrypt(r, self.master_pk,
+                                           sender=self.worker_kps[w],
+                                           nonce=nonce))
+        return (slot, np.asarray(jnp.asarray(payload) @ jnp.asarray(self.b)))
+
+
+class SealedMatmulTask:
+    """The socket backend's ``encrypt="real"`` loop round.
+
+    Shards arrive sealed: ``(worker, (ct, ...), reply_nonce)`` — one
+    ciphertext for data-coded rounds (the task multiplies by its stored
+    ``B``), two for pair-coded rounds (the task multiplies the decrypted
+    pair).  The product returns as a ciphertext to the master's public
+    key, so both legs of the round move genuine MEA-ECC bytes.
+    """
+
+    def __init__(self, mea, worker_kps: Sequence, master_pk, b=None):
+        self.mea = mea
+        self.worker_kps = list(worker_kps)
+        self.master_pk = master_pk
+        self.b = None if b is None else np.asarray(b)
+
+    def __call__(self, sealed):
+        if sealed is None:
+            return None
+        w, cts, nonce = sealed
+        jnp = _jnp()
+        parts = [self.mea.decrypt(ct, self.worker_kps[w]) for ct in cts]
+        if len(parts) == 2:
+            r = np.asarray(jnp.asarray(parts[0]) @ jnp.asarray(parts[1]))
+        else:
+            r = np.asarray(jnp.asarray(parts[0]) @ jnp.asarray(self.b))
+        return self.mea.encrypt(r, self.master_pk,
+                                sender=self.worker_kps[w], nonce=nonce)

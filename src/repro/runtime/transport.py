@@ -38,7 +38,8 @@ from .straggler import StragglerModel
 from .wait_policy import ArrivalEvent
 
 __all__ = ["RoundHandle", "Transport", "VirtualClockTransport",
-           "ThreadTransport", "build_transport", "virtual_timeline"]
+           "ThreadTransport", "build_transport", "available_backends",
+           "TRANSPORTS", "virtual_timeline"]
 
 
 def virtual_timeline(delays: np.ndarray, t_compute: float) -> List[ArrivalEvent]:
@@ -282,12 +283,38 @@ class ThreadTransport:
                           "decoded")
 
 
+def _build_socket(n_workers: int, straggler: StragglerModel,
+                  **options) -> Transport:
+    # lazy import: the process mesh (and its subprocess machinery) only
+    # loads when a socket backend is actually requested
+    from .socket_transport import SocketTransport
+    return SocketTransport(n_workers, straggler, **options)
+
+
+#: backend name -> factory(n_workers, straggler, **options).  Registering
+#: here is all a new transport needs: spec validation and the CLI
+#: ``--transport`` choices enumerate this dict.
+TRANSPORTS = {
+    "virtual": lambda n, straggler, **options: VirtualClockTransport(
+        straggler),
+    "threads": lambda n, straggler, **options: ThreadTransport(n, straggler),
+    "socket": _build_socket,
+}
+
+
+def available_backends() -> tuple:
+    """Sorted names of every registered transport backend."""
+    return tuple(sorted(TRANSPORTS))
+
+
 def build_transport(backend: str, n_workers: int,
-                    straggler: StragglerModel) -> Transport:
-    """``TransportSpec.backend`` -> transport instance."""
-    if backend == "virtual":
-        return VirtualClockTransport(straggler)
-    if backend == "threads":
-        return ThreadTransport(n_workers, straggler)
-    raise ValueError(f"unknown transport backend {backend!r} "
-                     f"(virtual | threads)")
+                    straggler: StragglerModel, **options) -> Transport:
+    """``TransportSpec.backend`` -> transport instance.  ``options`` are
+    backend-specific knobs (the socket mesh's heartbeat/liveness/bind
+    configuration); the in-process backends accept and ignore them."""
+    factory = TRANSPORTS.get(backend)
+    if factory is None:
+        raise ValueError(f"unknown transport backend {backend!r} "
+                         f"(expected one of: "
+                         f"{' | '.join(available_backends())})")
+    return factory(n_workers, straggler, **options)

@@ -1,0 +1,319 @@
+"""The socket transport's wire format: framed messages + a typed payload
+codec that ships coded shards and MEA-ECC ciphertexts without re-encoding.
+
+Two layers, both deliberately boring:
+
+* **Frames** — every message on a mesh connection is one length-prefixed
+  frame: a fixed 23-byte header (magic, frame type, worker id, submission
+  id, payload length, CRC-32 of the payload) followed by the payload
+  bytes.  The CRC is the transport's integrity line: a tampered or
+  truncated payload is detected at :func:`read_frame` and surfaces as a
+  dropped result, never as silently-wrong floats (the Byzantine screening
+  stages only ever see payloads that *decoded* — CRC kills byte-level
+  wire tampering one layer below them).
+* **Values** — :func:`dump_value` / :func:`load_value` serialize the
+  objects coded rounds actually move: numpy arrays travel as raw
+  C-contiguous bytes after a tiny dtype/shape header (for float32 shards
+  this is byte-for-byte the layout ``crypto.field.BitsCodec`` packs —
+  the array's own little-endian words), and MEA-ECC ``Ciphertext``s
+  travel as their ``(n, L)`` uint32 limb plane *directly*: the limbs ARE
+  the lossless wire encoding, so an ``encrypt="real"`` round pays zero
+  extra serialization between cipher and socket.  Everything else
+  (tuples, ints including 256-bit EC coordinates, floats, strings,
+  dicts) has a compact tag; arbitrary callables (the round's task
+  function) fall back to pickle, tagged so the reader knows.
+
+The codec is self-contained and dependency-light on purpose: worker
+processes import it before they import jax.
+"""
+
+from __future__ import annotations
+
+import pickle
+import struct
+import zlib
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "FrameError", "Frame", "HELLO", "TASK", "RESULT", "ERROR", "PING",
+    "SHUTDOWN", "pack_frame", "read_frame", "tamper_frame",
+    "dump_value", "load_value", "dumps", "loads",
+]
+
+MAGIC = b"SPC1"
+_HEADER = struct.Struct(">4sBHqII")      # magic, type, worker, sub, len, crc
+HEADER_SIZE = _HEADER.size
+
+# frame types
+HELLO = 1        # worker -> master: registration (payload: worker id dict)
+TASK = 2         # master -> worker: one round's work for this worker
+RESULT = 3       # worker -> master: (slot-tagged) task output
+ERROR = 4        # worker -> master: the task raised (payload: message)
+PING = 5         # worker -> master: heartbeat (empty payload)
+SHUTDOWN = 6     # master -> worker: exit cleanly (empty payload)
+
+
+class FrameError(RuntimeError):
+    """The stream is unreadable as frames (bad magic / truncated header).
+    Distinct from a CRC mismatch, which is a per-frame payload integrity
+    failure and is reported on the frame, not raised."""
+
+
+class Frame:
+    """One decoded frame.  ``crc_ok=False`` means the payload bytes did
+    not match their checksum — the payload is kept (callers may want its
+    length for accounting) but must not be deserialized."""
+
+    __slots__ = ("type", "worker", "sub", "payload", "crc_ok")
+
+    def __init__(self, type: int, worker: int, sub: int, payload: bytes,
+                 crc_ok: bool = True):
+        self.type = type
+        self.worker = worker
+        self.sub = sub
+        self.payload = payload
+        self.crc_ok = crc_ok
+
+
+def pack_frame(ftype: int, worker: int, sub: int,
+               payload: bytes = b"") -> bytes:
+    """One wire frame: header + payload, CRC-32 over the payload."""
+    crc = zlib.crc32(payload) & 0xFFFFFFFF
+    return _HEADER.pack(MAGIC, ftype, worker & 0xFFFF, sub,
+                        len(payload), crc) + payload
+
+
+def tamper_frame(frame: bytes, rng: np.random.Generator) -> bytes:
+    """Flip bytes in a frame's payload AFTER its CRC was computed — the
+    byte-level wire tampering the fault injector's ``drop`` mode performs
+    on a real mesh.  The receiver's CRC check fails and the result is
+    reported dropped.  Header bytes are left alone so the frame still
+    routes (a mangled header would look like a dead connection instead)."""
+    out = bytearray(frame)
+    if len(out) <= HEADER_SIZE:
+        return bytes(out)
+    body = len(out) - HEADER_SIZE
+    k = max(1, body // 64)
+    idx = HEADER_SIZE + rng.integers(0, body, size=k)
+    for i in idx:
+        out[int(i)] ^= 0xFF
+    return bytes(out)
+
+
+def _read_exact(sock, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise EOFError("connection closed mid-frame"
+                           if buf else "connection closed")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def read_frame(sock) -> Frame:
+    """Read exactly one frame off a blocking socket.  Raises ``EOFError``
+    on a closed connection, :class:`FrameError` on an unframeable stream;
+    a payload whose CRC mismatches comes back with ``crc_ok=False``."""
+    head = _read_exact(sock, HEADER_SIZE)
+    magic, ftype, worker, sub, length, crc = _HEADER.unpack(head)
+    if magic != MAGIC:
+        raise FrameError(f"bad frame magic {magic!r}")
+    payload = _read_exact(sock, length) if length else b""
+    ok = (zlib.crc32(payload) & 0xFFFFFFFF) == crc
+    return Frame(ftype, worker, sub, payload, crc_ok=ok)
+
+
+# --------------------------------------------------------------------------
+# value codec
+# --------------------------------------------------------------------------
+
+_U32 = struct.Struct(">I")
+_I64 = struct.Struct(">q")
+_F64 = struct.Struct(">d")
+
+
+def _put_bytes(out: list, b: bytes) -> None:
+    out.append(_U32.pack(len(b)))
+    out.append(b)
+
+
+def _put_str(out: list, s: str) -> None:
+    _put_bytes(out, s.encode("utf-8"))
+
+
+def dump_value(value, out: list) -> None:
+    """Append ``value``'s wire encoding to ``out`` (a list of bytes)."""
+    if value is None:
+        out.append(b"N")
+    elif value is True or value is False:
+        out.append(b"b" + (b"\x01" if value else b"\x00"))
+    elif isinstance(value, int):
+        if -(2 ** 63) <= value < 2 ** 63:
+            out.append(b"I")
+            out.append(_I64.pack(value))
+        else:
+            # EC coordinates are ~256-bit: sign byte + magnitude bytes
+            out.append(b"J")
+            mag = abs(value)
+            raw = mag.to_bytes((mag.bit_length() + 7) // 8 or 1, "big")
+            out.append(b"\x01" if value < 0 else b"\x00")
+            _put_bytes(out, raw)
+    elif isinstance(value, float):
+        out.append(b"F")
+        out.append(_F64.pack(value))
+    elif isinstance(value, str):
+        out.append(b"S")
+        _put_str(out, value)
+    elif isinstance(value, bytes):
+        out.append(b"B")
+        _put_bytes(out, value)
+    elif isinstance(value, np.ndarray):
+        arr = np.ascontiguousarray(value)
+        out.append(b"A")
+        _put_str(out, arr.dtype.str)
+        out.append(bytes([arr.ndim]))
+        for d in arr.shape:
+            out.append(_U32.pack(d))
+        # raw array bytes — for f32 shards this is exactly the word layout
+        # BitsCodec packs, so there is nothing left to encode
+        _put_bytes(out, arr.tobytes())
+    elif hasattr(value, "payload") and hasattr(value, "ephemeral"):
+        # MEA-ECC Ciphertext: small header + the uint32 limb plane verbatim
+        # (the limbs ARE the lossless wire format — zero re-serialization)
+        out.append(b"C")
+        dump_value(value.ephemeral.x, out)
+        dump_value(value.ephemeral.y, out)
+        dump_value(tuple(int(d) for d in value.shape), out)
+        _put_str(out, value.mode)
+        _put_str(out, value.codec)
+        _put_str(out, value.dtype)
+        dump_value(value.nonce, out)
+        limbs = np.ascontiguousarray(value.payload)
+        out.append(bytes([limbs.ndim]))
+        for d in limbs.shape:
+            out.append(_U32.pack(d))
+        _put_bytes(out, limbs.tobytes())
+    elif isinstance(value, tuple):
+        out.append(b"T")
+        out.append(_U32.pack(len(value)))
+        for v in value:
+            dump_value(v, out)
+    elif isinstance(value, list):
+        out.append(b"L")
+        out.append(_U32.pack(len(value)))
+        for v in value:
+            dump_value(v, out)
+    elif isinstance(value, dict):
+        out.append(b"D")
+        out.append(_U32.pack(len(value)))
+        for k, v in value.items():
+            _put_str(out, str(k))
+            dump_value(v, out)
+    else:
+        # opaque objects (the round's task callable) fall back to pickle
+        out.append(b"P")
+        _put_bytes(out, pickle.dumps(value))
+
+
+class _Reader:
+    __slots__ = ("buf", "pos")
+
+    def __init__(self, buf: bytes):
+        self.buf = buf
+        self.pos = 0
+
+    def take(self, n: int) -> bytes:
+        b = self.buf[self.pos:self.pos + n]
+        if len(b) != n:
+            raise FrameError("truncated wire value")
+        self.pos += n
+        return b
+
+    def take_bytes(self) -> bytes:
+        (n,) = _U32.unpack(self.take(4))
+        return self.take(n)
+
+    def take_str(self) -> str:
+        return self.take_bytes().decode("utf-8")
+
+
+def _load(r: _Reader):
+    tag = r.take(1)
+    if tag == b"N":
+        return None
+    if tag == b"b":
+        return r.take(1) == b"\x01"
+    if tag == b"I":
+        return _I64.unpack(r.take(8))[0]
+    if tag == b"J":
+        neg = r.take(1) == b"\x01"
+        mag = int.from_bytes(r.take_bytes(), "big")
+        return -mag if neg else mag
+    if tag == b"F":
+        return _F64.unpack(r.take(8))[0]
+    if tag == b"S":
+        return r.take_str()
+    if tag == b"B":
+        return r.take_bytes()
+    if tag == b"A":
+        dtype = np.dtype(r.take_str())
+        ndim = r.take(1)[0]
+        shape = tuple(_U32.unpack(r.take(4))[0] for _ in range(ndim))
+        raw = r.take_bytes()
+        return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
+    if tag == b"C":
+        from ..crypto.ecc import ECPoint
+        from ..crypto.mea_ecc import Ciphertext
+        x = _load(r)
+        y = _load(r)
+        shape = _load(r)
+        mode = r.take_str()
+        codec = r.take_str()
+        dtype = r.take_str()
+        nonce = _load(r)
+        ndim = r.take(1)[0]
+        lshape = tuple(_U32.unpack(r.take(4))[0] for _ in range(ndim))
+        limbs = np.frombuffer(r.take_bytes(),
+                              dtype=np.uint32).reshape(lshape).copy()
+        return Ciphertext(ephemeral=ECPoint(x, y), payload=limbs,
+                          shape=tuple(shape), mode=mode, codec=codec,
+                          dtype=dtype, nonce=nonce)
+    if tag == b"T":
+        (n,) = _U32.unpack(r.take(4))
+        return tuple(_load(r) for _ in range(n))
+    if tag == b"L":
+        (n,) = _U32.unpack(r.take(4))
+        return [_load(r) for _ in range(n)]
+    if tag == b"D":
+        (n,) = _U32.unpack(r.take(4))
+        return {r.take_str(): _load(r) for _ in range(n)}
+    if tag == b"P":
+        return pickle.loads(r.take_bytes())
+    raise FrameError(f"unknown wire tag {tag!r}")
+
+
+def load_value(buf: bytes):
+    return _load(_Reader(buf))
+
+
+def dumps(value) -> bytes:
+    """Serialize one value to wire bytes."""
+    out: list = []
+    dump_value(value, out)
+    return b"".join(out)
+
+
+def loads(buf: bytes):
+    """Inverse of :func:`dumps`."""
+    return load_value(buf)
+
+
+def ciphertext_wire_overhead(ct) -> Tuple[int, int]:
+    """(encoded_bytes, limb_bytes) for one ciphertext — the no-double-
+    serialization property in measurable form: the wire encoding is the
+    limb plane plus a small constant header, never a re-encode."""
+    encoded = len(dumps(ct))
+    return encoded, int(np.asarray(ct.payload).nbytes)

@@ -1,0 +1,447 @@
+"""Socket transport: wire codec, process mesh robustness, cross-backend
+parity (tiered to stay fast on one core — mesh tests use N=3-6 workers)."""
+
+import json
+import signal
+import socket
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import ClusterSpec, FaultSpec, Session, TransportSpec
+from repro.runtime import wire
+from repro.runtime.faults import (FaultInjectingTransport, FaultPlan,
+                                  ResultDropped, WorkerHealth)
+from repro.runtime.scheduler import retry_backoff
+from repro.runtime.socket_transport import SocketTransport
+from repro.runtime.straggler import StragglerModel
+from repro.runtime.tasks import MatmulTask
+from repro.runtime.transport import available_backends, build_transport
+
+
+# --------------------------------------------------------------------------
+# wire codec (no processes)
+# --------------------------------------------------------------------------
+
+class TestWireCodec:
+    def test_value_roundtrip(self):
+        vals = [
+            None, True, False, 0, -7, 2 ** 62,
+            2 ** 255 + 12345, -(2 ** 200),          # EC-coordinate scale
+            1.5, -0.0, "héllo", b"\x00\xff",
+            (1, "a", None), [1.0, 2.0], {"k": (1, 2), "n": None},
+            np.arange(12, dtype=np.float32).reshape(3, 4),
+            np.asarray([], dtype=np.float64),
+        ]
+        for v in vals:
+            got = wire.loads(wire.dumps(v))
+            if isinstance(v, np.ndarray):
+                assert got.dtype == v.dtype and np.array_equal(got, v)
+            else:
+                assert got == v and type(got) is type(v)
+
+    def test_array_bits_exact(self):
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal((7, 5)).astype(np.float32)
+        got = wire.loads(wire.dumps(a))
+        assert got.tobytes() == a.tobytes()
+
+    def test_ciphertext_roundtrip_no_double_serialization(self):
+        from repro.crypto import MEAECC, generate_keypair
+        mea = MEAECC(codec="bits")
+        kp = generate_keypair()
+        x = np.random.default_rng(1).standard_normal((16, 8)) \
+            .astype(np.float32)
+        ct = mea.encrypt(x, kp.pk, sender=kp, nonce=5)
+        got = wire.loads(wire.dumps(ct))
+        # the limb plane crosses verbatim: decrypt of the wire copy is
+        # bit-identical to decrypt of the original
+        assert got.payload.tobytes() == np.asarray(ct.payload).tobytes()
+        assert np.array_equal(mea.decrypt(got, kp), mea.decrypt(ct, kp))
+        # no re-encode: wire size = limb bytes + a small constant header
+        encoded, limb_bytes = wire.ciphertext_wire_overhead(ct)
+        assert encoded - limb_bytes < 256
+
+    def test_frame_roundtrip_over_socketpair(self):
+        a, b = socket.socketpair()
+        payload = wire.dumps({"x": np.ones(3, np.float32)})
+        a.sendall(wire.pack_frame(wire.RESULT, 3, 42, payload))
+        fr = wire.read_frame(b)
+        assert (fr.type, fr.worker, fr.sub, fr.crc_ok) == \
+            (wire.RESULT, 3, 42, True)
+        assert np.array_equal(wire.loads(fr.payload)["x"],
+                              np.ones(3, np.float32))
+        a.close(), b.close()
+
+    def test_tampered_frame_fails_crc_not_routing(self):
+        a, b = socket.socketpair()
+        frame = wire.pack_frame(wire.RESULT, 1, 7, wire.dumps(
+            np.arange(64, dtype=np.float32)))
+        a.sendall(wire.tamper_frame(frame,
+                                    np.random.default_rng(0)))
+        fr = wire.read_frame(b)
+        # header intact (the frame still routes), payload integrity gone
+        assert (fr.type, fr.worker, fr.sub) == (wire.RESULT, 1, 7)
+        assert fr.crc_ok is False
+        a.close(), b.close()
+
+    def test_bad_magic_raises(self):
+        a, b = socket.socketpair()
+        a.sendall(b"XXXX" + bytes(wire.HEADER_SIZE - 4))
+        with pytest.raises(wire.FrameError):
+            wire.read_frame(b)
+        a.close(), b.close()
+
+    def test_unknown_tag_raises(self):
+        with pytest.raises(wire.FrameError):
+            wire.loads(b"Z")
+
+
+# --------------------------------------------------------------------------
+# jittered backoff + health serialization (satellites)
+# --------------------------------------------------------------------------
+
+class TestBackoffJitter:
+    def test_no_rng_returns_deterministic_cap(self):
+        assert retry_backoff(1, 0.01, 0.08) == pytest.approx(0.01)
+        assert retry_backoff(3, 0.01, 0.08) == pytest.approx(0.04)
+        assert retry_backoff(10, 0.01, 0.08) == pytest.approx(0.08)
+
+    def test_full_jitter_bounded_and_seeded(self):
+        draws = [retry_backoff(3, 0.01, 0.08,
+                               rng=np.random.default_rng(7))
+                 for _ in range(3)]
+        assert draws[0] == draws[1] == draws[2]      # reproducible
+        rng = np.random.default_rng(123)
+        xs = [retry_backoff(3, 0.01, 0.08, rng=rng) for _ in range(200)]
+        assert all(0.0 <= x <= 0.04 for x in xs)
+        assert len(set(xs)) > 100                    # actually jittered
+
+    def test_defended_round_backoff_reproducible(self):
+        # same spec twice -> identical jittered wait accounting
+        def run():
+            spec = ClusterSpec.from_dict({
+                "code": {"scheme": "spacdc", "n_workers": 6, "k_blocks": 2},
+                "straggler": {"n_stragglers": 0, "delay_s": 0.01},
+                "fault": {"crash_rate": 0.25, "handle": True, "seed": 139,
+                          "max_retries": 3},
+                "seed": 7,
+            })
+            a = np.random.default_rng(0).standard_normal((8, 6)) \
+                .astype(np.float32)
+            b = np.random.default_rng(1).standard_normal((6, 4)) \
+                .astype(np.float32)
+            with Session(spec) as s:
+                out, stats = s.matmul(a, b, round_idx=0)
+            return out, stats
+        o1, s1 = run()
+        o2, s2 = run()
+        assert s1.retries == s2.retries >= 1
+        # wait accounting includes a MEASURED worker-compute sample, so
+        # only the decode bits (and the retry trace) are exactly equal
+        assert np.array_equal(o1, o2)
+
+
+class TestHealthToDict:
+    def test_json_roundtrip(self):
+        h = WorkerHealth(3)
+        h.record_ok(0, 0.05)
+        h.record_crash(1, 0)
+        h.record_crash(1, 1)      # -> quarantined
+        h.record_drop(2, 1)
+        d = json.loads(json.dumps(h.to_dict()))
+        assert d["n_workers"] == 3
+        w1 = d["workers"][1]
+        assert w1["n_crash"] == 2 and w1["n_quarantines"] == 1
+        assert d["workers"][0]["ewma_latency_s"] == pytest.approx(0.05)
+        assert d["workers"][2]["n_drop"] == 1
+        # never-measured latency serializes as null, not NaN
+        assert d["workers"][1]["ewma_latency_s"] is None
+
+
+# --------------------------------------------------------------------------
+# registry + spec plumbing
+# --------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_socket_registered(self):
+        assert "socket" in available_backends()
+
+    def test_unknown_backend_error_enumerates_registry(self):
+        st = StragglerModel(4, 1, seed=0)
+        with pytest.raises(ValueError, match="socket"):
+            build_transport("carrier-pigeon", 4, st)
+
+    def test_transport_spec_socket_options(self):
+        ts = TransportSpec(backend="socket", heartbeat_s=0.1,
+                           liveness_timeout_s=0.5)
+        opts = ts.backend_options()
+        assert opts["heartbeat_s"] == 0.1
+        assert TransportSpec(backend="threads").backend_options() == {}
+
+    def test_liveness_must_exceed_heartbeat(self):
+        with pytest.raises(ValueError, match="liveness"):
+            TransportSpec(backend="socket", heartbeat_s=0.5,
+                          liveness_timeout_s=0.5)
+
+    def test_os_level_requires_socket_backend(self):
+        with pytest.raises(ValueError, match="os_level"):
+            ClusterSpec.from_dict({
+                "code": {"scheme": "spacdc", "n_workers": 4, "k_blocks": 2},
+                "fault": {"crash_rate": 0.2, "os_level": True},
+                "transport": {"backend": "threads"},
+            })
+
+
+# --------------------------------------------------------------------------
+# the process mesh
+# --------------------------------------------------------------------------
+
+def _mesh(n=3, **kw):
+    st = StragglerModel(n, 0, delay_s=0.01, seed=0)
+    kw.setdefault("heartbeat_s", 0.1)
+    kw.setdefault("liveness_timeout_s", 1.0)
+    kw.setdefault("connect_timeout_s", 60.0)
+    return SocketTransport(n, st, **kw)
+
+
+_B = np.arange(12, dtype=np.float32).reshape(3, 4)
+
+
+def _shards(n):
+    return [np.full((2, 3), i + 1, np.float32) for i in range(n)]
+
+
+class TestSocketMesh:
+    def test_clean_round_all_respond(self):
+        tr = _mesh(3)
+        try:
+            h = tr.submit_round(_shards(3), MatmulTask(_B), 0)
+            evs = list(h.events())
+            assert sorted(e.worker for e in evs) == [0, 1, 2]
+            for e in evs:
+                assert np.array_equal(h.result(e.worker),
+                                      _shards(3)[e.worker] @ _B)
+            h.finish()
+        finally:
+            tr.close()
+
+    def test_kill_mid_round_and_reconnect_after_crash(self):
+        tr = _mesh(3)
+        try:
+            tr.start()
+            # round 1: SIGKILL worker 0 right after dispatch — the round
+            # must END (no hang) with the two survivors
+            plan = FaultPlan(crash=np.array([True, False, False]),
+                             drop=np.zeros(3, bool),
+                             corrupt=np.zeros(3, bool),
+                             spike_s=np.zeros(3))
+            tr.schedule_os_faults(0, plan, FaultSpec(), 0)
+            h = tr.submit_round(_shards(3), MatmulTask(_B), 0)
+            evs = list(h.events())
+            h.finish()
+            assert sorted(e.worker for e in evs) == [1, 2]
+            assert tr.stats["kills"] == 1
+            # respawn + re-registration: worker 0 comes back and serves
+            deadline = time.time() + 30
+            while time.time() < deadline:
+                c = tr._conns.get(0)
+                if c is not None and c.alive and c.generation >= 1:
+                    break
+                time.sleep(0.05)
+            h2 = tr.submit_round(_shards(3), MatmulTask(_B), 1)
+            evs2 = list(h2.events())
+            h2.finish()
+            assert sorted(e.worker for e in evs2) == [0, 1, 2]
+            assert np.array_equal(h2.result(0), _shards(3)[0] @ _B)
+            assert tr.stats["respawns"] >= 1
+        finally:
+            tr.close()
+
+    def test_tampered_frame_reported_dropped(self):
+        tr = _mesh(3)
+        try:
+            plan = FaultPlan(crash=np.zeros(3, bool),
+                             drop=np.array([False, True, False]),
+                             corrupt=np.zeros(3, bool),
+                             spike_s=np.zeros(3))
+            tr.schedule_os_faults(0, plan, FaultSpec(), 0)
+            h = tr.submit_round(_shards(3), MatmulTask(_B), 0)
+            evs = list(h.events())
+            h.finish()
+            # the tampered worker still ARRIVES (its frame routed), but
+            # its payload failed CRC -> the result was dropped in transit
+            assert sorted(e.worker for e in evs) == [0, 1, 2]
+            with pytest.raises(ResultDropped):
+                h.result(1)
+            assert np.array_equal(h.result(0), _shards(3)[0] @ _B)
+            assert tr.stats["crc_failures"] == 1
+        finally:
+            tr.close()
+
+    def test_liveness_deadline_ends_round_on_frozen_worker(self):
+        tr = _mesh(3, liveness_timeout_s=0.8)
+        try:
+            tr.start()
+            pid = tr.worker_pid(2)
+            import os
+            os.kill(pid, signal.SIGSTOP)
+            try:
+                time.sleep(0.2)
+                t0 = time.perf_counter()
+                h = tr.submit_round(_shards(3), MatmulTask(_B), 0)
+                evs = list(h.events())
+                h.finish()
+                took = time.perf_counter() - t0
+                assert sorted(e.worker for e in evs) == [0, 1]
+                assert took < 10.0          # bounded by liveness, no hang
+                assert tr.stats["liveness_expired"] >= 1
+            finally:
+                os.kill(pid, signal.SIGCONT)
+        finally:
+            tr.close()
+
+    def test_orphaned_results_reaped(self):
+        st = StragglerModel(3, 0, delay_s=0.01, seed=0)
+        tr = SocketTransport(3, st, heartbeat_s=0.1, liveness_timeout_s=2.0)
+        try:
+            tr.start()
+            slow = [np.full((2, 3), 1, np.float32)] * 3
+            # worker 2 sleeps long via an injected straggler delay: give
+            # up on the round early, its late result must be reaped
+            class _Slow:
+                n_workers, n_stragglers = 3, 0
+                def delays(self, r):
+                    return np.array([0.0, 0.0, 1.0])
+            tr.straggler = _Slow()
+            h = tr.submit_round(slow, MatmulTask(_B), 0,
+                                budget=0.4, min_ready=1)
+            evs = list(h.events())
+            h.finish()                       # round forgotten here
+            assert len(evs) == 2
+            deadline = time.time() + 10
+            while time.time() < deadline and not tr.stats["orphans_reaped"]:
+                time.sleep(0.05)
+            assert tr.stats["orphans_reaped"] >= 1
+        finally:
+            tr.close()
+
+    def test_bounded_close_with_frozen_worker(self):
+        tr = _mesh(3)
+        tr.start()
+        import os
+        os.kill(tr.worker_pid(1), signal.SIGSTOP)
+        t0 = time.perf_counter()
+        tr.close()
+        took = time.perf_counter() - t0
+        assert took < tr.join_timeout_s + 5.0
+        for w in range(3):
+            assert tr._procs[w].poll() is not None     # all reaped
+        tr.close()                                     # idempotent
+
+    def test_lazy_until_first_round(self):
+        tr = _mesh(3)
+        assert not tr._procs and tr._listener is None
+        tr.close()
+
+
+# --------------------------------------------------------------------------
+# cross-backend parity + the defended SIGKILL round (Session level)
+# --------------------------------------------------------------------------
+
+def _parity_spec(backend, encrypt=None, fused=None):
+    return ClusterSpec.from_dict({
+        "code": {"scheme": "spacdc", "n_workers": 5, "k_blocks": 2,
+                 "fused": fused},
+        "straggler": {"n_stragglers": 0, "delay_s": 0.02},
+        "transport": {"backend": backend, "heartbeat_s": 0.1,
+                      "liveness_timeout_s": 1.5},
+        "crypto": {"encrypt": encrypt},
+        "seed": 7,
+    })
+
+
+def _run_matmul(spec):
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((8, 6)).astype(np.float32)
+    b = rng.standard_normal((6, 4)).astype(np.float32)
+    with Session(spec) as s:
+        out, stats = s.matmul(a, b, round_idx=0)
+    return np.asarray(a @ b), out, stats
+
+
+class TestCrossBackendParity:
+    def test_plain_trace_bit_identical_virtual_threads_socket(self):
+        # the virtual clock's loop path (fused=False) runs the same task
+        # math as the real backends — one clean trace, three transports,
+        # identical bits
+        _, o_virtual, _ = _run_matmul(_parity_spec("virtual", fused=False))
+        _, o_threads, _ = _run_matmul(_parity_spec("threads"))
+        _, o_socket, _ = _run_matmul(_parity_spec("socket"))
+        assert np.array_equal(o_virtual, o_threads)
+        assert np.array_equal(o_threads, o_socket)
+
+    def test_real_crypto_trace_bit_identical_and_sealed(self):
+        _, o_virtual, _ = _run_matmul(
+            _parity_spec("virtual", encrypt="real", fused=False))
+        _, o_threads, _ = _run_matmul(_parity_spec("threads",
+                                                   encrypt="real"))
+        _, o_socket, st = _run_matmul(_parity_spec("socket",
+                                                   encrypt="real"))
+        assert np.array_equal(o_virtual, o_threads)
+        assert np.array_equal(o_threads, o_socket)
+        assert st.crypto_s > 0          # the sealed wire was measured
+
+    def test_defended_sigkill_round_completes(self):
+        # a live worker is SIGKILLed mid-round; the defended socket round
+        # re-dispatches its slot and still decodes at reference accuracy
+        spec = ClusterSpec.from_dict({
+            "code": {"scheme": "spacdc", "n_workers": 6, "k_blocks": 2},
+            "straggler": {"n_stragglers": 0, "delay_s": 0.02},
+            "transport": {"backend": "socket", "heartbeat_s": 0.1,
+                          "liveness_timeout_s": 1.5},
+            "fault": {"crash_rate": 0.25, "handle": True, "os_level": True,
+                      "seed": 139, "worker_timeout_s": 1.5,
+                      "max_retries": 3},
+            "seed": 7,
+        })
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal((8, 6)).astype(np.float32)
+        b = rng.standard_normal((6, 4)).astype(np.float32)
+        with Session(spec) as s:
+            out, stats = s.matmul(a, b, round_idx=0)
+            kills = s.engine.pool.transport.stats["kills"]
+            health = s.engine.health.to_dict()
+        ref = a @ b
+        rel = float(np.linalg.norm(out - ref) / np.linalg.norm(ref))
+        assert kills >= 1                      # a real PID died
+        assert stats.retries >= 1              # ...and was re-dispatched
+        assert not stats.degraded
+        assert rel <= 1e-2
+        crashed = [w for w in health["workers"] if w["n_crash"] > 0]
+        assert crashed                         # the kill is in the record
+        assert json.dumps(health)              # and it serializes
+
+    def test_defended_sigkill_matches_simulated_threads(self):
+        # same seeded fault plan, physical on the mesh vs simulated on
+        # threads: the defended decode is bit-identical
+        def run(backend):
+            spec = ClusterSpec.from_dict({
+                "code": {"scheme": "spacdc", "n_workers": 6,
+                         "k_blocks": 2},
+                "straggler": {"n_stragglers": 0, "delay_s": 0.02},
+                "transport": {"backend": backend, "heartbeat_s": 0.1,
+                              "liveness_timeout_s": 1.5},
+                "fault": {"crash_rate": 0.25, "handle": True,
+                          "os_level": backend == "socket", "seed": 139,
+                          "worker_timeout_s": 1.5, "max_retries": 3},
+                "seed": 7,
+            })
+            rng = np.random.default_rng(0)
+            a = rng.standard_normal((8, 6)).astype(np.float32)
+            b = rng.standard_normal((6, 4)).astype(np.float32)
+            with Session(spec) as s:
+                out, _ = s.matmul(a, b, round_idx=0)
+            return out
+        assert np.array_equal(run("socket"), run("threads"))
