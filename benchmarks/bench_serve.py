@@ -1,16 +1,27 @@
-"""Coded serving smoke: deadline-bounded greedy decode end-to-end.
+"""Continuous-batching coded serving under Poisson traffic.
 
-One tiny architecture, a ``ClusterSpec`` with a ``Deadline`` wait policy,
-and a short batched generation through ``Session.serve`` — every step's
-output projection is a coded round that must decode at (or before) the
-budget.  Gates:
+A bimodal request mix (a quarter of the requests generate ~10x longer
+than the rest) arrives on a Poisson timeline and is served twice through
+``Session.serve`` with every per-step projection coded
+(``coded_layers="all"``, one fused round per decode step under a
+``Deadline`` wait policy):
 
-  * every generation step emits a ``RoundStats`` with the deadline policy;
-  * every step's coded decode fires within the virtual budget (SPACDC is
-    rateless — minimum decodable prefix 1 — so the deadline never has to
-    extend);
-  * tokens actually come out (shape (batch, gen)), within a wall-time
-    sanity bound.
+  * ``continuous`` admission — the continuous-batching scheduler admits
+    arrivals into free slots at step boundaries and evicts finished
+    requests immediately;
+  * ``gated`` admission — the static-batch baseline: a batch is admitted
+    together and held until its LAST request finishes.
+
+Gates (full mode):
+
+  * continuous batching sustains >= 2x the requests/sec of the static
+    batch at equal (or better) p99 step latency;
+  * with ``coded_layers="all"`` the coded FLOP fraction of the full
+    (non-tiny) model config is >= 0.9;
+  * every step's coded decode fires within the Deadline budget under the
+    shared straggler trace;
+  * slot churn never retriggers compilation: traced step programs are
+    bounded by the number of distinct pow2 batch buckets.
 
   PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--out PATH]
 
@@ -25,75 +36,163 @@ import platform
 from pathlib import Path
 
 import jax
+import numpy as np
 
 from repro.api import ClusterSpec, Session
+from repro.runtime.serve_loop import Request
 
-FULL = dict(arch="qwen2-7b", batch=4, prompt_len=16, gen=32,
-            n_workers=8, k_blocks=4, n_stragglers=2, t_budget=8e-3)
+FULL = dict(arch="qwen2-7b", n_requests=24, rate_rps=150.0, gen_long=48,
+            gen_short=4, long_every=4, n_workers=8, k_blocks=4,
+            n_stragglers=2, t_budget=8e-3, max_slots=8, seed=7)
 # smoke budget is 15 ms, not 8: the virtual arrival times embed a
 # machine-measured per-worker compute sample, and a slower CI host must
 # not push the fast pool past the gate — the injected stragglers sit at
 # >= 20 ms, so the deadline still demonstrably cuts them
-SMOKE = dict(arch="qwen2-7b", batch=2, prompt_len=8, gen=8,
-             n_workers=8, k_blocks=4, n_stragglers=2, t_budget=15e-3)
+SMOKE = dict(arch="qwen2-7b", n_requests=12, rate_rps=150.0, gen_long=24,
+             gen_short=3, long_every=4, n_workers=8, k_blocks=4,
+             n_stragglers=2, t_budget=15e-3, max_slots=8, seed=7)
+
+
+def bimodal_workload(cfg):
+    """Poisson arrivals, ragged prompts, bimodal generation lengths —
+    the mix where static batching holds finished short requests hostage
+    to the long ones."""
+    rng = np.random.default_rng(cfg["seed"])
+    gaps = rng.exponential(1.0 / cfg["rate_rps"], cfg["n_requests"])
+    arrivals = np.cumsum(gaps) - gaps[0]
+    return [Request(rid=i,
+                    prompt=rng.integers(1, 256, int(rng.integers(6, 13)))
+                    .astype(np.int32),
+                    gen=(cfg["gen_long"] if i % cfg["long_every"] == 0
+                         else cfg["gen_short"]),
+                    arrival_s=float(arrivals[i]))
+            for i in range(cfg["n_requests"])]
+
+
+def _mode_metrics(rep):
+    return {
+        "requests_per_s": rep.requests_per_s,
+        "tok_s": rep.tok_s,
+        "steps": len(rep.step_stats),
+        "steps_within_budget": rep.steps_within_budget,
+        "p50_step_ms": rep.p50_step_s * 1e3,
+        "p99_step_ms": rep.p99_step_s * 1e3,
+        "ttft_p50_ms": float(np.percentile(rep.ttft_s, 50)) * 1e3,
+        "ttft_p99_ms": float(np.percentile(rep.ttft_s, 99)) * 1e3,
+        "virtual_s": rep.virtual_s,
+        "busy_wall_s": rep.busy_wall_s,
+        "trace_count": rep.trace_count,
+        "decode_at_ms": [st.decode_at_s * 1e3 for st in rep.step_stats],
+    }
 
 
 def measure(smoke: bool = False):
     cfg = SMOKE if smoke else FULL
     spec = ClusterSpec.serve_deadline(
         t_budget=cfg["t_budget"], n_workers=cfg["n_workers"],
-        k_blocks=cfg["k_blocks"], n_stragglers=cfg["n_stragglers"])
+        k_blocks=cfg["k_blocks"], n_stragglers=cfg["n_stragglers"],
+        coded_layers="all", max_slots=cfg["max_slots"])
+    requests = bimodal_workload(cfg)
     with Session(spec) as s:
-        rep = s.serve(arch=cfg["arch"], tiny=True, batch=cfg["batch"],
-                      prompt_len=cfg["prompt_len"], gen=cfg["gen"], seed=0)
+        cont = s.serve(arch=cfg["arch"], tiny=True, requests=requests,
+                       check_agreement=False, admission="continuous")
+        gated = s.serve(arch=cfg["arch"], tiny=True, requests=requests,
+                        check_agreement=False, admission="gated")
 
-    waits_ms = [st.decode_at_s * 1e3 for st in rep.step_stats]
+    # the FLOP-fraction gate is a property of the FULL model config, not
+    # of the tiny stand-in the timing runs use
+    from repro.configs import get_config
+    from repro.models.coded import coded_flop_fraction
+    flop_frac = coded_flop_fraction(get_config(cfg["arch"]), "all")
+
+    speedup = cont.requests_per_s / max(gated.requests_per_s, 1e-12)
+    p99_ratio = cont.p99_step_s / max(gated.p99_step_s, 1e-12)
     report = {
         "config": dict(cfg, backend=jax.default_backend(),
                        platform=platform.platform(), smoke=smoke),
         "spec": spec.to_dict(),
-        "tok_s": rep.tok_s,
-        "wall_s": rep.wall_s,
-        "argmax_agreement": rep.argmax_agreement,
-        "steps": len(rep.step_stats),
-        "steps_within_budget": rep.steps_within_budget,
-        "decode_at_ms": waits_ms,
-        "n_waited": [st.n_waited for st in rep.step_stats],
+        "poisson": {
+            "workload": {
+                "arrivals_s": [r.arrival_s for r in requests],
+                "prompt_lens": [len(r.prompt) for r in requests],
+                "gens": [r.gen for r in requests],
+            },
+            "continuous": _mode_metrics(cont),
+            "gated": _mode_metrics(gated),
+            "requests_per_s_speedup": speedup,
+            "p99_step_ratio": p99_ratio,
+            "coded_flop_fraction": flop_frac,
+        },
     }
-    return report, rep, cfg
+    return report, (cont, gated), cfg
 
 
-def _gate_and_row(rows, report, rep, cfg):
-    n_steps = report["steps"]
-    waits_ms = report["decode_at_ms"]
+def _gate_and_rows(rows, gates, report, reps, cfg, smoke):
+    cont, gated = reps
+    po = report["poisson"]
+    speedup, p99_ratio = po["requests_per_s_speedup"], po["p99_step_ratio"]
 
     # ---- gates -----------------------------------------------------------
-    assert rep.tokens.shape == (cfg["batch"], cfg["gen"]), rep.tokens.shape
-    assert n_steps == cfg["gen"], (n_steps, cfg["gen"])
-    assert all(st.policy == "deadline" for st in rep.step_stats)
-    assert rep.steps_within_budget == n_steps, (
-        f"only {rep.steps_within_budget}/{n_steps} coded decodes fired "
-        f"within the {cfg['t_budget'] * 1e3:.1f} ms budget: {waits_ms}")
-    assert all(1 <= st.n_waited <= cfg["n_workers"]
-               for st in rep.step_stats)
-    print(f"serve gate OK: {n_steps} steps, all decoded within "
-          f"{cfg['t_budget'] * 1e3:.1f} ms "
-          f"(decode at {min(waits_ms):.2f}-{max(waits_ms):.2f} ms, "
-          f"{rep.tok_s:.1f} tok/s, agreement {rep.argmax_agreement:.2f})")
+    assert len(cont.requests) == len(gated.requests) == cfg["n_requests"]
+    assert all(st.policy == "deadline" for st in cont.step_stats)
+    assert all(st.dispatches == 1 for st in cont.step_stats)
+    assert cont.steps_within_budget == len(cont.step_stats), (
+        f"only {cont.steps_within_budget}/{len(cont.step_stats)} coded "
+        f"decodes fired within the {cfg['t_budget'] * 1e3:.1f} ms budget")
+    assert gated.steps_within_budget == len(gated.step_stats)
+    # slot churn never retraces: one program per distinct pow2 bucket
+    n_buckets = len({1 << i for i in range(cfg["max_slots"].bit_length())})
+    assert cont.trace_count <= n_buckets, (cont.trace_count, n_buckets)
+    assert po["coded_flop_fraction"] >= 0.9, po["coded_flop_fraction"]
+    if not smoke:
+        assert speedup >= 2.0, (
+            f"continuous batching only {speedup:.2f}x the static batch "
+            f"(gate: >= 2x requests/sec)")
+        assert p99_ratio <= 1.02, (
+            f"continuous p99 step latency {p99_ratio:.3f}x gated "
+            f"(gate: equal or better)")
+    print(f"serve gate OK: {speedup:.2f}x requests/sec over static batch "
+          f"at p99 ratio {p99_ratio:.3f} "
+          f"({cont.requests_per_s:.1f} vs {gated.requests_per_s:.1f} req/s, "
+          f"p99 {po['continuous']['p99_step_ms']:.2f} vs "
+          f"{po['gated']['p99_step_ms']:.2f} ms), "
+          f"{cont.steps_within_budget}/{len(cont.step_stats)} steps in "
+          f"budget, coded FLOP fraction {po['coded_flop_fraction']:.3f}, "
+          f"{cont.trace_count} compiles")
 
-    rows.append(("serve_coded_deadline_tok_s", 1e6 / max(rep.tok_s, 1e-9),
+    rows.append(("serve_cb_coded_req", 1e6 / max(cont.requests_per_s, 1e-9),
                  f"N={cfg['n_workers']},K={cfg['k_blocks']},"
-                 f"budget={cfg['t_budget'] * 1e3:.0f}ms,"
-                 f"within={rep.steps_within_budget}/{n_steps}"))
+                 f"layers=all,speedup={speedup:.2f}x,"
+                 f"p99={po['continuous']['p99_step_ms']:.2f}ms,"
+                 f"within={cont.steps_within_budget}/"
+                 f"{len(cont.step_stats)}"))
+    rows.append(("serve_static_batch_req",
+                 1e6 / max(gated.requests_per_s, 1e-9),
+                 f"gated admission baseline,"
+                 f"p99={po['gated']['p99_step_ms']:.2f}ms"))
+    if gates is not None:
+        thr = None if smoke else 2.0
+        gates.append({"benchmark": "serve",
+                      "metric": "requests_per_s_speedup",
+                      "value": round(speedup, 3), "direction": "higher",
+                      "kind": "ratio", "threshold": thr})
+        gates.append({"benchmark": "serve", "metric": "p99_step_ratio",
+                      "value": round(p99_ratio, 3), "direction": "lower",
+                      "kind": "ratio",
+                      "threshold": None if smoke else 1.02})
+        gates.append({"benchmark": "serve", "metric": "coded_flop_fraction",
+                      "value": round(po["coded_flop_fraction"], 3),
+                      "direction": "higher", "kind": "ratio",
+                      "threshold": 0.9})
     return rows
 
 
-def run(rows, smoke: bool = False):
+def run(rows, smoke: bool = False, gates=None):
     """benchmarks.run entry point: gates + CSV rows, no artifact write
     (``main`` writes BENCH_serve.json — keep the checked-in artifact a
     full-mode run)."""
-    report, rep, cfg = measure(smoke=smoke)
-    return _gate_and_row(rows, report, rep, cfg)
+    report, reps, cfg = measure(smoke=smoke)
+    return _gate_and_rows(rows, gates, report, reps, cfg, smoke)
 
 
 def main(argv=None):
@@ -101,10 +200,10 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
-    report, rep, cfg = measure(smoke=args.smoke)
+    report, reps, cfg = measure(smoke=args.smoke)
     Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
     print(f"wrote {args.out}")
-    _gate_and_row([], report, rep, cfg)
+    _gate_and_rows([], [], report, reps, cfg, args.smoke)
     return 0
 
 

@@ -1,14 +1,19 @@
-"""Coded serving demo: deadline-bounded greedy decode of a 4-request batch
-on a reduced deepseek (MLA absorbed-cache decode path) — every generation
-step's output projection is a coded round that decodes at (or before) the
-budget, whatever the stragglers do.
+"""Coded continuous-batching demo: Poisson arrivals, deadline-bounded
+greedy decode on a reduced deepseek (MLA absorbed-cache decode path) —
+every per-step projection the spec selects (here: all of them) runs
+inside ONE coded round per step, decoding at (or before) the budget,
+whatever the stragglers do.  Requests are admitted as slots free up and
+evicted the step they finish.
 
   PYTHONPATH=src python examples/serve_demo.py
 
 Extra arguments pass straight through to ``repro.launch.serve`` (argparse
-last-wins), so the same demo runs on any registered transport backend:
+last-wins), so the same demo runs on any registered transport backend or
+admission policy:
 
   PYTHONPATH=src python examples/serve_demo.py --transport socket
+  PYTHONPATH=src python examples/serve_demo.py --uncoded
+  PYTHONPATH=src python examples/serve_demo.py --admission gated
 """
 
 import sys
@@ -17,5 +22,6 @@ from repro.launch.serve import main
 
 if __name__ == "__main__":
     main(["--arch", "deepseek-v2-lite-16b", "--tiny",
-          "--batch", "4", "--prompt-len", "12", "--gen", "24",
+          "--requests", "6", "--rate", "30", "--slots", "4", "--ragged",
+          "--prompt-len", "12", "--gen", "24",
           "--deadline-ms", "8"] + sys.argv[1:])

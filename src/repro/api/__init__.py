@@ -15,11 +15,12 @@ the legacy ``DistributedMatmul`` kwargs.
 """
 
 from .spec import (ClusterSpec, CodeSpec, CryptoSpec, FaultSpec,
-                   PrivacySpec, StragglerSpec, TransportSpec, WaitSpec)
+                   PrivacySpec, ServeSpec, StragglerSpec, TransportSpec,
+                   WaitSpec)
 from .session import ServeReport, Session, coded_mlp_init, coded_mlp_step
 
 __all__ = [
     "ClusterSpec", "CodeSpec", "CryptoSpec", "FaultSpec", "PrivacySpec",
-    "StragglerSpec", "TransportSpec", "WaitSpec", "Session", "ServeReport",
-    "coded_mlp_init", "coded_mlp_step",
+    "ServeSpec", "StragglerSpec", "TransportSpec", "WaitSpec", "Session",
+    "ServeReport", "coded_mlp_init", "coded_mlp_step",
 ]

@@ -21,7 +21,6 @@ produce bit-identical rounds.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -114,19 +113,43 @@ def coded_mlp_step(weights, biases, matmul, x, y, lr: float = 0.05,
 
 @dataclasses.dataclass
 class ServeReport:
-    """One coded serving run: what came out and what every step cost."""
-    tokens: np.ndarray               # (batch, gen) generated token ids
-    step_stats: List[RoundStats]     # one coded round per generation step
-    wall_s: float                    # wall time of the generation loop
-    tok_s: float                     # batch * gen / wall_s
+    """One coded serving run: what came out and what every step cost.
+
+    The continuous-batching loop (``runtime.serve_loop``) serves requests
+    off a (possibly Poisson) arrival timeline, so the report carries two
+    clocks: the **virtual clock** (straggler waits + measured master
+    walls — ``virtual_s``, ``step_latency_s``, per-request timelines) and
+    **busy wall** (measured master dispatches only).  ``tok_s`` divides
+    by busy wall, so admission idle — the loop parked waiting for the
+    next arrival — never inflates decode throughput.
+    """
+    tokens: np.ndarray               # (n_requests, max_gen) ids, -1 padded
+    step_stats: List[RoundStats]     # ONE coded round per decode step
+    wall_s: float                    # busy wall of the serve loop
+    tok_s: float                     # generated tokens / busy wall
     t_budget: Optional[float]        # the Deadline budget (None: no deadline)
-    argmax_agreement: float          # fraction of coded argmax == exact
+    argmax_agreement: float          # fraction of coded tokens == uncoded
+    # --- continuous-batching accounting ----------------------------------
+    requests: list = dataclasses.field(default_factory=list)
+    ttft_s: np.ndarray = dataclasses.field(           # per-request TTFT
+        default_factory=lambda: np.zeros(0))          # (arrival → 1st token)
+    step_latency_s: np.ndarray = dataclasses.field(   # per-step virtual
+        default_factory=lambda: np.zeros(0))          # durations
+    p50_step_s: float = 0.0
+    p99_step_s: float = 0.0
+    requests_per_s: float = 0.0      # served requests / virtual makespan
+    virtual_s: float = 0.0           # virtual makespan of the run
+    busy_wall_s: float = 0.0
+    coded_fraction: float = 0.0      # analytic coded share of step FLOPs
+    trace_count: int = 0             # step-program compiles (churn-free: a
+                                     # few pow2 buckets, however slots churn)
+    mode: str = ""                   # "instep" | "round" | "plain"
 
     @property
     def steps_within_budget(self) -> int:
-        """Generation steps whose coded decode fired at/before the
-        deadline (all of them, for a rateless scheme — SPACDC's minimum
-        decodable prefix is 1)."""
+        """Decode steps whose coded decode fired at/before the deadline
+        (all of them, for a rateless scheme — SPACDC's minimum decodable
+        prefix is 1)."""
         if self.t_budget is None:
             return len(self.step_stats)
         return sum(1 for s in self.step_stats
@@ -149,6 +172,10 @@ class Session:
         self._mlp = None                 # (weights, biases, lr)
         self._round = 0
         self.round_stats: List[RoundStats] = []
+        self._serve_models: dict = {}    # (arch, tiny, seed) -> model, params
+        self._serve_batchers: dict = {}  # + (coded_layers, admission) ->
+                                         # ContinuousBatcher (compiled steps,
+                                         # pre-encoded weights, warm buckets)
 
     # ----------------------------------------------------------- lifecycle
     def __enter__(self) -> "Session":
@@ -241,86 +268,104 @@ class Session:
 
     # ------------------------------------------------------------- serving
     def serve(self, arch: str = "qwen2-7b", *, tiny: bool = True,
-              batch: int = 4, prompt_len: int = 16, gen: int = 32,
-              seed: int = 0, check_agreement: bool = True) -> ServeReport:
-        """Batched greedy decode with the output projection run as coded
-        rounds — deadline-bounded coded inference (the ROADMAP serving
-        item).
+              batch: Optional[int] = None, prompt_len: int = 16,
+              gen: int = 32, seed: int = 0, check_agreement: bool = True,
+              requests=None, arrival_rate: float = 0.0,
+              ragged: bool = False,
+              admission: str = "continuous") -> ServeReport:
+        """Continuous-batching greedy decode with every selected
+        projection run as coded rounds (``ServeSpec.coded_layers``).
 
-        Each generation step computes the model's last hidden state on
-        the plain decode path, then runs the unembed projection
-        ``logits = h @ W`` as the coded job ``W^T_rows-coded @ h^T``
-        (Eq. 23's layout) under the session's wait policy.  With
-        ``WaitSpec(policy="deadline", t_budget=...)`` every step's coded
-        matmul decodes at (or before) the budget from whatever responder
-        prefix arrived — fixed latency, best-effort accuracy — and the
-        per-step :class:`RoundStats` land in the report.  Swapping
-        ``TransportSpec(backend="threads")`` for ``"virtual"`` changes
-        nothing else.
+        Requests are served off an arrival timeline by the scheduler in
+        :mod:`repro.runtime.serve_loop`: free slots admit arrivals at
+        step boundaries, finished/EOS requests are evicted and their
+        slots refilled, and the jitted step only sees pow2 batch buckets
+        so slot churn never recompiles.  On the virtual transport the
+        WHOLE step — attention q/k/v/o, FFN up/down, unembed, per the
+        spec's ``coded_layers`` — is ONE coded round under one straggler
+        plan and the spec's wait policy; with
+        ``WaitSpec(policy="deadline", t_budget=...)`` every step decodes
+        at (or before) the budget from whatever responder prefix arrived.
+        Real transports (threads/socket) keep the PR 5 semantics: the
+        unembed projection as one real round per step.
+
+        ``requests`` (a list of :class:`~repro.runtime.serve_loop.Request`)
+        overrides the synthetic workload; otherwise ``batch`` requests of
+        ``prompt_len``/``gen`` arrive Poisson at ``arrival_rate`` req/s
+        (0 = all at t=0 — the legacy fixed-batch shape; with a uniform
+        workload ``tokens`` is exactly (batch, gen)).
+        ``admission="gated"`` reproduces the static-batch baseline.
         """
         self._check_open()
         import jax
-        import jax.numpy as jnp
         from ..configs import get_config, tiny_config
         from ..models import build_model
-        from ..launch.steps import build_serve_step
+        from ..runtime.serve_loop import ContinuousBatcher, poisson_workload
 
-        cfg = tiny_config(arch) if tiny else get_config(arch)
-        model = build_model(cfg)
-        params = model.init(jax.random.PRNGKey(seed))
-        hidden_step = jax.jit(build_serve_step(model, return_hidden=True))
+        mkey = (arch, tiny, seed)
+        if mkey not in self._serve_models:
+            cfg = tiny_config(arch) if tiny else get_config(arch)
+            model = build_model(cfg)
+            self._serve_models[mkey] = (model,
+                                        model.init(jax.random.PRNGKey(seed)))
+        model, params = self._serve_models[mkey]
+        cfg = model.cfg
+        serve_spec = self.spec.serve
+        n_req = batch if batch is not None else serve_spec.max_slots
+        if requests is None:
+            requests = poisson_workload(
+                n_req, rate_rps=arrival_rate, prompt_len=prompt_len,
+                gen=gen, vocab=cfg.vocab_size, seed=seed, ragged=ragged)
 
-        rng = np.random.default_rng(seed)
-        max_len = prompt_len + gen + 1
-        cache = model.init_cache(batch, max_len)
-        prompts = rng.integers(1, cfg.vocab_size, (batch, prompt_len))
+        def run_loop(coded_layers: str):
+            # batchers are cached across serve() calls: compiled step
+            # programs, pre-encoded serving weights and warm buckets are
+            # reused — a second serve with the same shapes retraces NOTHING
+            bkey = mkey + (coded_layers, admission)
+            bat = self._serve_batchers.get(bkey)
+            if bat is None:
+                bat = ContinuousBatcher(
+                    self.engine, model, params, coded_layers=coded_layers,
+                    max_slots=serve_spec.max_slots, eos_id=serve_spec.eos_id,
+                    backend=self.spec.transport.backend, admission=admission)
+                self._serve_batchers[bkey] = bat
+            bat._round = self._round
+            res = bat.run(requests)
+            self._round = bat._round
+            return res
 
-        # prefill via the decode path (cache-consistent; fine at demo
-        # scale — the coded rounds are the generation steps' projections)
-        for t in range(prompt_len - 1):
-            _, cache = hidden_step(params, cache,
-                                   jnp.asarray(prompts[:, t:t + 1],
-                                               jnp.int32), t)
+        res = run_loop(serve_spec.coded_layers)
+        # token matrix, -1 padded for ragged generation lengths
+        max_gen = max((len(r.tokens) for r in res.requests), default=0)
+        tokens = np.full((len(res.requests), max_gen), -1, np.int32)
+        for i, r in enumerate(res.requests):
+            tokens[i, :len(r.tokens)] = r.tokens
 
-        # the projection the coded rounds compute: logits = h @ W with
-        # W (H, V); the coded job runs row-block-coded A=W^T against h^T.
-        # greedy argmax is invariant under the monotone logit softcap, so
-        # the coded path skips it.
-        emb = params["embedding"]
-        wt = np.asarray(emb["table"] if cfg.tie_embeddings
-                        else emb["unembed"].T, np.float32)       # (V, H)
-
-        tok = jnp.asarray(prompts[:, -1:], jnp.int32)
-        out_tokens, stats_list, hiddens = [], [], []
-        round0 = self._round            # each serve step is a fresh straggler
-        self._round += gen              # draw, like every other session round
-        t0 = time.perf_counter()
-        for t in range(gen):
-            hidden, cache = hidden_step(params, cache, tok,
-                                        prompt_len - 1 + t)
-            h = np.asarray(hidden[:, -1, :], np.float32)         # (B, H)
-            prod, stats = self.engine.matmul(wt, h.T, round_idx=round0 + t)
-            logits = prod.T                                      # (B, V)
-            nxt = logits.argmax(-1).astype(np.int32)
-            stats_list.append(stats)
-            out_tokens.append(nxt)
-            if check_agreement:
-                hiddens.append(h)
-            tok = jnp.asarray(nxt[:, None], jnp.int32)
-        wall = time.perf_counter() - t0
-        tokens = (np.stack(out_tokens, axis=1) if out_tokens
-                  else np.zeros((batch, 0), np.int32))           # (B, gen)
-        # fidelity diagnostic OUTSIDE the timed window — it redoes the
-        # whole exact unembed GEMM, so production-shaped callers pass
-        # check_agreement=False (agreement reports NaN)
-        agree = 1.0 if check_agreement else float("nan")
-        if hiddens:
-            exact_tok = np.stack([h @ wt.T for h in hiddens],
-                                 axis=1).argmax(-1)              # (B, gen)
-            agree = float((tokens == exact_tok).mean())
-        self.round_stats.extend(stats_list)
+        # fidelity diagnostic OUTSIDE the serve accounting: greedy tokens
+        # of a request depend only on its own prompt, so the uncoded
+        # reference is one plain continuous-batching replay of the same
+        # workload.  Production-shaped callers pass check_agreement=False
+        # (agreement reports NaN).
+        agree = float("nan")
+        if check_agreement:
+            if res.mode == "plain":
+                agree = 1.0
+            else:
+                ref = run_loop("none")
+                match = total = 0
+                for a, b_ in zip(res.requests, ref.requests):
+                    n = min(len(a.tokens), len(b_.tokens))
+                    match += int(np.sum(a.tokens[:n] == b_.tokens[:n]))
+                    total += max(len(a.tokens), len(b_.tokens))
+                agree = match / max(total, 1)
+        self.round_stats.extend(res.step_stats)
         return ServeReport(
-            tokens=tokens, step_stats=stats_list, wall_s=wall,
-            tok_s=batch * gen / max(wall, 1e-9),
-            t_budget=self.spec.wait.t_budget,
-            argmax_agreement=agree)
+            tokens=tokens, step_stats=res.step_stats,
+            wall_s=res.busy_wall_s, tok_s=res.tok_s,
+            t_budget=self.spec.wait.t_budget, argmax_agreement=agree,
+            requests=res.requests, ttft_s=res.ttft_s,
+            step_latency_s=res.step_virtual_s, p50_step_s=res.p50_step_s,
+            p99_step_s=res.p99_step_s, requests_per_s=res.requests_per_s,
+            virtual_s=res.virtual_s, busy_wall_s=res.busy_wall_s,
+            coded_fraction=res.coded_fraction, trace_count=res.trace_count,
+            mode=res.mode)

@@ -36,7 +36,7 @@ from ..runtime.straggler import StragglerModel
 
 __all__ = [
     "CodeSpec", "PrivacySpec", "CryptoSpec", "WaitSpec", "StragglerSpec",
-    "TransportSpec", "FaultSpec", "ClusterSpec",
+    "TransportSpec", "FaultSpec", "ServeSpec", "ClusterSpec",
 ]
 
 def _transport_backends() -> tuple:
@@ -49,6 +49,7 @@ def _transport_backends() -> tuple:
 
 
 _CIPHER_MODES = ("stream", "paper")
+_CODED_LAYERS = ("none", "unembed", "attn", "ffn", "all")
 _ENCRYPT_MODES = (None, "modeled", "real")
 _WAIT_POLICIES = ("fixed_quantile", "first_k", "deadline", "error_target")
 _CORRUPT_MODES = ("scale", "bitflip")
@@ -491,6 +492,53 @@ class FaultSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Continuous-batching serving knobs (``Session.serve``).
+
+    ``coded_layers`` selects which per-step projections run as coded
+    work — the Eq.-23 layout generalizes from the unembed to every
+    ``x @ W`` in the decode step:
+
+    * ``"none"``    — plain local decode (the ``--uncoded`` baseline);
+    * ``"unembed"`` — output projection only (the PR 5 behavior);
+    * ``"attn"``    — attention q/k/v and o projections + unembed;
+    * ``"ffn"``     — FFN up/(gate)/down projections + unembed;
+    * ``"all"``     — attn + ffn + unembed (coded FLOP fraction → 1).
+
+    All selected projections of a step are *stacked into one coded
+    round*: one straggler plan, one decode mask, one dispatch.  Real
+    transports (threads/socket) ship whole per-site rounds over the
+    event loop and are restricted to ``"none"``/``"unembed"``; the
+    fused whole-step stack is virtual-clock only.
+
+    ``max_slots`` bounds the in-flight request batch of the continuous
+    -batching loop (``runtime.serve_loop``); active slots are packed at
+    the front and padded up to the next power of two so admission/
+    eviction churn never retriggers compilation.  ``eos_id`` (optional)
+    ends a request early when greedy decode emits it.
+    """
+    coded_layers: str = "unembed"
+    max_slots: int = 8
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        if self.coded_layers not in _CODED_LAYERS:
+            raise ValueError(f"serve: coded_layers must be one of "
+                             f"{_CODED_LAYERS}, got {self.coded_layers!r}")
+        if self.max_slots < 1:
+            raise ValueError("serve: max_slots must be >= 1")
+        if self.eos_id is not None and self.eos_id < 0:
+            raise ValueError("serve: eos_id must be >= 0 (or None)")
+
+    def to_dict(self):
+        return _as_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "ServeSpec":
+        return _from_dict(cls, d, "serve")
+
+
+@dataclasses.dataclass(frozen=True)
 class ClusterSpec:
     """Everything a :class:`repro.api.Session` needs, in one frozen value.
 
@@ -508,6 +556,7 @@ class ClusterSpec:
     transport: TransportSpec = dataclasses.field(
         default_factory=TransportSpec)
     fault: FaultSpec = dataclasses.field(default_factory=FaultSpec)
+    serve: ServeSpec = dataclasses.field(default_factory=ServeSpec)
     seed: int = 0
     pipeline_encode: bool = False
 
@@ -540,6 +589,14 @@ class ClusterSpec:
                     "error_target needs the virtual clock's batched prefix "
                     "pipeline (real backends validate the clock) — use "
                     "transport 'virtual'")
+        if (self.transport.backend != "virtual" and
+                self.serve.coded_layers not in ("none", "unembed")):
+            raise ValueError(
+                f"serve: coded_layers={self.serve.coded_layers!r} stacks "
+                "every selected projection of a step into one fused "
+                "dispatch, which is virtual-clock only; transport "
+                f"{self.transport.backend!r} runs per-round wire traffic — "
+                "use coded_layers 'none'/'unembed' or transport 'virtual'")
         if self.fault.os_level and self.transport.backend != "socket":
             raise ValueError(
                 "fault: os_level=True needs real worker processes to "
@@ -626,7 +683,7 @@ class ClusterSpec:
         nested = {"code": CodeSpec, "privacy": PrivacySpec,
                   "crypto": CryptoSpec, "wait": WaitSpec,
                   "straggler": StragglerSpec, "transport": TransportSpec,
-                  "fault": FaultSpec}
+                  "fault": FaultSpec, "serve": ServeSpec}
         kw = {}
         for key, val in d.items():
             sub = nested.get(key)
@@ -709,14 +766,18 @@ class ClusterSpec:
     @classmethod
     def serve_deadline(cls, t_budget: float = 0.008, n_workers: int = 8,
                        k_blocks: int = 4, t_colluding: int = 1,
-                       n_stragglers: int = 2,
-                       backend: str = "virtual") -> "ClusterSpec":
+                       n_stragglers: int = 2, backend: str = "virtual",
+                       coded_layers: str = "unembed",
+                       max_slots: int = 8,
+                       eos_id: Optional[int] = None) -> "ClusterSpec":
         """Deadline-bounded coded serving: every generation step's
-        projection matmul decodes at (or before) ``t_budget`` seconds."""
+        coded projections decode at (or before) ``t_budget`` seconds."""
         return cls(code=CodeSpec(scheme="spacdc", n_workers=n_workers,
                                  k_blocks=k_blocks),
                    privacy=PrivacySpec(t_colluding=t_colluding,
                                        noise_scale=0.05),
                    wait=WaitSpec(policy="deadline", t_budget=t_budget),
                    straggler=StragglerSpec(n_stragglers=n_stragglers),
-                   transport=TransportSpec(backend=backend))
+                   transport=TransportSpec(backend=backend),
+                   serve=ServeSpec(coded_layers=coded_layers,
+                                   max_slots=max_slots, eos_id=eos_id))

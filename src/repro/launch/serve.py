@@ -1,77 +1,60 @@
-"""Batched serving driver — coded by default.
+"""Continuous-batching serving driver — coded by default.
 
-Continuous greedy decode over a request batch with a step-level KV cache;
-each generation step's output projection runs as a coded round under a
-``Deadline`` wait policy (fixed latency budget, best-effort accuracy —
-the deadline-bounded coded inference the ROADMAP asks for).  The whole
-serving configuration is one declarative ``repro.api.ClusterSpec``;
-``--transport threads`` (real threads) or ``--transport socket`` (real
-worker processes on a localhost TCP mesh) swaps the round backend with
-no other change — the choices enumerate the transport registry.
+Requests arrive on a Poisson timeline and are served by the
+continuous-batching scheduler (``repro.runtime.serve_loop``): free slots
+admit arrivals at step boundaries, finished requests are evicted and
+their slots refilled, and each decode step runs as ONE coded round under
+a ``Deadline`` wait policy (fixed latency budget, best-effort accuracy).
+``--coded-layers`` selects how much of the step is coded — from just the
+unembed projection up to every attention/FFN projection (``all``, virtual
+transport).  The whole configuration is one declarative
+``repro.api.ClusterSpec``; ``--transport threads`` / ``--transport
+socket`` swaps the round backend (real transports serve the unembed-round
+path) with no other change.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --tiny \
-      --batch 4 --prompt-len 16 --gen 32 --deadline-ms 8
+      --requests 8 --rate 20 --prompt-len 16 --gen 32 --deadline-ms 8 \
+      --coded-layers all
 
-``--uncoded`` keeps the original plain decode loop (no coded rounds) for
-comparison.
+``--uncoded`` runs the same continuous-batching loop with no coded
+rounds (``coded_layers="none"``) for comparison.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
-import jax
-import jax.numpy as jnp
-
-from ..configs import get_config, tiny_config
-from ..models import build_model
-from .steps import build_serve_step
-
-
-def uncoded_loop(args):
-    """The pre-spec plain serving loop (kept as the uncoded baseline)."""
-    cfg = tiny_config(args.arch) if args.tiny else get_config(args.arch)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    serve = jax.jit(build_serve_step(model))
-
-    rng = np.random.default_rng(args.seed)
-    max_len = args.prompt_len + args.gen + 1
-    cache = model.init_cache(args.batch, max_len)
-    prompts = rng.integers(1, cfg.vocab_size, (args.batch, args.prompt_len))
-
-    # prefill via the decode path (cache-consistent; fine at demo scale)
-    for t in range(args.prompt_len - 1):
-        _, cache = serve(params, cache,
-                         jnp.asarray(prompts[:, t:t + 1], jnp.int32), t)
-
-    tok = jnp.asarray(prompts[:, -1:], jnp.int32)
-    out = []
-    t0 = time.time()
-    for t in range(args.gen):
-        tok, cache = serve(params, cache, tok, args.prompt_len - 1 + t)
-        out.append(np.asarray(tok)[:, 0])
-    dt = time.time() - t0
-    gen = np.stack(out, axis=1)
-    print(f"generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s) [uncoded]")
-    for b in range(min(args.batch, 2)):
-        print(f"  req{b}: {gen[b][:16].tolist()}...")
-    return 0
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-7b")
     ap.add_argument("--tiny", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="alias for --requests (legacy flag)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="number of requests to serve (default 8)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate, requests/s on the virtual "
+                    "clock (0 = all arrive at t=0)")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="max in-flight requests (batch slots)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--ragged", action="store_true",
+                    help="draw ragged per-request prompt lengths")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--uncoded", action="store_true",
-                    help="plain decode loop, no coded rounds")
+                    help="continuous batching without coded rounds "
+                    "(coded_layers=none)")
+    ap.add_argument("--coded-layers", default=None,
+                    choices=["none", "unembed", "attn", "ffn", "all"],
+                    help="which per-step projections run coded "
+                    "(default: all on virtual, unembed on real transports)")
+    ap.add_argument("--admission", default="continuous",
+                    choices=["continuous", "gated"],
+                    help="'gated' reproduces the static-batch baseline")
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--k-blocks", type=int, default=4)
     ap.add_argument("--stragglers", type=int, default=2)
@@ -84,30 +67,51 @@ def main(argv=None):
                     "'socket' spawns real worker processes on localhost")
     args = ap.parse_args(argv)
 
-    if args.uncoded:
-        return uncoded_loop(args)
+    n_requests = args.requests if args.requests is not None else \
+        (args.batch if args.batch is not None else 8)
+    if args.coded_layers is not None:
+        coded_layers = args.coded_layers
+    elif args.uncoded:
+        coded_layers = "none"
+    else:
+        coded_layers = "all" if args.transport == "virtual" else "unembed"
 
     from ..api import ClusterSpec, Session
     spec = ClusterSpec.serve_deadline(
         t_budget=args.deadline_ms * 1e-3, n_workers=args.workers,
         k_blocks=args.k_blocks, n_stragglers=args.stragglers,
-        backend=args.transport)
+        backend=args.transport, coded_layers=coded_layers,
+        max_slots=args.slots)
     with Session(spec) as s:
-        rep = s.serve(arch=args.arch, tiny=args.tiny, batch=args.batch,
+        rep = s.serve(arch=args.arch, tiny=args.tiny, batch=n_requests,
                       prompt_len=args.prompt_len, gen=args.gen,
-                      seed=args.seed)
-    waits = [st.decode_at_s * 1e3 for st in rep.step_stats]
-    print(f"generated {args.batch}x{args.gen} tokens in {rep.wall_s:.2f}s "
-          f"({rep.tok_s:.1f} tok/s) [coded, {spec.code.scheme} "
-          f"N={spec.code.n_workers} K={spec.code.k_blocks}, "
-          f"{args.transport} transport]")
-    if waits:
+                      seed=args.seed, arrival_rate=args.rate,
+                      ragged=args.ragged, admission=args.admission)
+
+    label = ("uncoded" if coded_layers == "none" else
+             f"coded[{coded_layers}], {spec.code.scheme} "
+             f"N={spec.code.n_workers} K={spec.code.k_blocks}")
+    print(f"served {len(rep.requests)} requests "
+          f"({rep.tokens.shape[0]}x<= {args.gen} tokens, "
+          f"{rep.requests_per_s:.1f} req/s virtual, {rep.tok_s:.1f} tok/s "
+          f"busy-wall) [{label}, {args.transport} transport, "
+          f"{args.admission} admission]")
+    print(f"  steps: {len(rep.step_stats)}  "
+          f"p50/p99 step {rep.p50_step_s * 1e3:.2f}/"
+          f"{rep.p99_step_s * 1e3:.2f} ms  "
+          f"compiles {rep.trace_count}  "
+          f"coded FLOP fraction {rep.coded_fraction:.2f}")
+    if rep.ttft_s.size:
+        print(f"  ttft p50/p99 {np.percentile(rep.ttft_s, 50) * 1e3:.2f}/"
+              f"{np.percentile(rep.ttft_s, 99) * 1e3:.2f} ms")
+    if coded_layers != "none" and rep.step_stats:
+        waits = [st.decode_at_s * 1e3 for st in rep.step_stats]
         print(f"  deadline {args.deadline_ms:.1f} ms: "
               f"{rep.steps_within_budget}/{len(rep.step_stats)} steps "
               f"decoded in budget (decode at {min(waits):.2f}-"
               f"{max(waits):.2f} ms, "
               f"argmax agreement {rep.argmax_agreement:.2f})")
-    for b in range(min(args.batch, 2)):
+    for b in range(min(rep.tokens.shape[0], 2)):
         print(f"  req{b}: {rep.tokens[b][:16].tolist()}...")
     return 0
 

@@ -211,11 +211,18 @@ def attention_specs(cfg: ModelConfig):
 
 
 def _project_qkv(p, x, cfg: ModelConfig, positions, use_rope: bool,
-                 mrope_positions=None):
+                 mrope_positions=None, matmul=None):
+    """``matmul`` (optional) replaces ONLY the three projection einsums —
+    the coded serve path supplies a closure running them as one stacked
+    coded matmul; bias / qk-norm / RoPE stay on this (master) side either
+    way, so the coded and plain paths share every non-matmul op."""
     cd = dtype_of(cfg, "compute")
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if matmul is not None:
+        q, k, v = matmul(x)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
     if cfg.qkv_bias:
         q = q + p["bq"].astype(cd)
         k = k + p["bk"].astype(cd)
@@ -303,16 +310,47 @@ def _quantize_kv(x):
     return q, scale.astype(jnp.float16)
 
 
+def _dus_seq(cache_leaf, new, pos):
+    """Sequence-axis cache write.  ``cache_leaf`` (B, L, ...); ``new``
+    (B, 1, ...); ``pos`` scalar (uniform position — the PR 5 fixed-batch
+    path, bit-identical to the original code) or (B,) int32 (per-slot
+    positions — the continuous-batching ragged path, one vmapped
+    dynamic_update_slice per batch element)."""
+    if jnp.ndim(pos) == 0:
+        start = (0, pos) + (0,) * (cache_leaf.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache_leaf, new, start)
+
+    def one(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n, (p,) + (0,) * (c.ndim - 1))
+
+    return jax.vmap(one)(cache_leaf, new, pos.astype(jnp.int32))
+
+
+def _decode_positions(b, pos):
+    """(B, 1) int32 rope positions from a scalar or per-slot ``pos``."""
+    if jnp.ndim(pos) == 0:
+        return jnp.full((b, 1), pos, jnp.int32)
+    return pos.astype(jnp.int32).reshape(b, 1)
+
+
 def attn_decode(p, x, cache, pos, cfg: ModelConfig, *, use_rope=True,
-                mrope_positions=None, cross_kv=None):
-    """One-token decode.  x (B,1,d); pos scalar int32 (current length).
+                mrope_positions=None, cross_kv=None, proj=None):
+    """One-token decode.  x (B,1,d); pos int32 — scalar (current length,
+    uniform across the batch) or (B,) per-slot positions (ragged
+    continuous-batching decode).
+
+    ``proj`` (optional) = dict of projection-matmul overrides
+    (``{"qkv": fn, "o": fn}``) — the coded serve path routes the q/k/v
+    and output matmuls through coded rounds; everything else (bias,
+    qk-norm, RoPE, cache update, softmax) is shared with the plain path.
 
     Returns (y (B,1,d), new_cache).  Cache seq axis may be sharded: the DUS
     write and the softmax over the seq axis both partition (see DESIGN.md).
     """
     cd = dtype_of(cfg, "compute")
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    proj = proj or {}
+    positions = _decode_positions(b, pos)
     if cross_kv is not None:
         q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wq"].astype(cd))
         if cfg.qkv_bias:
@@ -322,30 +360,30 @@ def attn_decode(p, x, cache, pos, cfg: ModelConfig, *, use_rope=True,
         valid = jnp.ones((b, kv_len), bool)
         new_cache = cache
     else:
-        q, k_new, v_new = _project_qkv(p, x, cfg, positions, use_rope, mrope_positions)
+        q, k_new, v_new = _project_qkv(p, x, cfg, positions, use_rope,
+                                       mrope_positions, matmul=proj.get("qkv"))
         if cfg.kv_cache_dtype == "int8":
             k8, ks = _quantize_kv(k_new)
             v8, vs = _quantize_kv(v_new)
             new_cache = {
-                "k": jax.lax.dynamic_update_slice(cache["k"], k8, (0, pos, 0, 0)),
-                "v": jax.lax.dynamic_update_slice(cache["v"], v8, (0, pos, 0, 0)),
-                "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks,
-                                                        (0, pos, 0)),
-                "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs,
-                                                        (0, pos, 0)),
+                "k": _dus_seq(cache["k"], k8, pos),
+                "v": _dus_seq(cache["v"], v8, pos),
+                "k_scale": _dus_seq(cache["k_scale"], ks, pos),
+                "v_scale": _dus_seq(cache["v_scale"], vs, pos),
             }
             k = (new_cache["k"].astype(jnp.float32)
                  * new_cache["k_scale"].astype(jnp.float32)[..., None])
             v = (new_cache["v"].astype(jnp.float32)
                  * new_cache["v_scale"].astype(jnp.float32)[..., None])
         else:
-            k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                             (0, pos, 0, 0))
-            v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                             (0, pos, 0, 0))
+            k = _dus_seq(cache["k"], k_new.astype(cache["k"].dtype), pos)
+            v = _dus_seq(cache["v"], v_new.astype(cache["v"].dtype), pos)
             new_cache = {"k": k, "v": v}
         kv_len = k.shape[1]
-        valid = (jnp.arange(kv_len)[None, :] <= pos)
+        if jnp.ndim(pos) == 0:
+            valid = (jnp.arange(kv_len)[None, :] <= pos)
+        else:
+            valid = (jnp.arange(kv_len)[None, :] <= pos[:, None])
 
     kvh = k.shape[2]
     g = q.shape[2] // kvh
@@ -357,8 +395,11 @@ def attn_decode(p, x, cache, pos, cfg: ModelConfig, *, use_rope=True,
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
     out = out.reshape(b, 1, -1).astype(cd)
-    y = jnp.einsum("bsf,fd->bsd", out,
-                   p["wo"].reshape(-1, cfg.d_model).astype(cd))
+    if proj.get("o") is not None:
+        y = proj["o"](out)
+    else:
+        y = jnp.einsum("bsf,fd->bsd", out,
+                       p["wo"].reshape(-1, cfg.d_model).astype(cd))
     return y, new_cache
 
 
@@ -394,14 +435,23 @@ def mla_specs(cfg: ModelConfig):
     }
 
 
-def _mla_qc(p, x, cfg: ModelConfig, positions):
-    """Shared q / compressed-kv projections.  Returns (q_nope, q_rope, ckv, k_rope)."""
+def _mla_qc(p, x, cfg: ModelConfig, positions, matmul=None):
+    """Shared q / compressed-kv projections.  Returns (q_nope, q_rope, ckv, k_rope).
+
+    ``matmul`` (optional) replaces only the two projection matmuls (wq and
+    w_dkv share the input x, so the coded serve path runs them stacked as
+    one site); the rope/normalize post-processing is shared either way."""
     cd = dtype_of(cfg, "compute")
     nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    if matmul is not None:
+        q, dkv = matmul(x)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+        dkv = None
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
-    dkv = x @ p["w_dkv"].astype(cd)                      # (B,S,lora+rope)
+    if dkv is None:
+        dkv = x @ p["w_dkv"].astype(cd)                  # (B,S,lora+rope)
     ckv = rms_normalize(dkv[..., : cfg.kv_lora_rank]) * p["kv_norm"].astype(cd)
     k_rope = apply_rope(dkv[..., cfg.kv_lora_rank:][:, :, None, :], positions,
                         cfg.rope_theta)                  # (B,S,1,rope)
@@ -433,22 +483,27 @@ def mla_cache_specs(cfg: ModelConfig):
     return {"ckv": P("data", "model", None), "kpe": P("data", "model", None)}
 
 
-def mla_decode(p, x, cache, pos, cfg: ModelConfig, **_):
+def mla_decode(p, x, cache, pos, cfg: ModelConfig, *, proj=None, **_):
     """Absorbed-form MLA decode: scores/values in the lora latent space.
 
     q_eff[b,h,l] = Σ_k q_nope[b,h,k]·w_uk[l,h,k];  s = q_eff·ckv + q_rope·k_pe;
     o_latent = Σ_s w·ckv[s];  out = o_latent·w_uv.  Per-step FLOPs O(H·lora·S)
     with no cache re-expansion.
+
+    ``pos`` may be a scalar (uniform) or (B,) per-slot positions; ``proj``
+    optionally routes the wq/w_dkv and wo matmuls through coded rounds
+    (``{"qkv": fn, "o": fn}`` — the latent-space w_uk/w_uv contractions
+    stay on the master, they are per-head maps, not ``x @ W`` sites).
     """
     cd = dtype_of(cfg, "compute")
     b = x.shape[0]
     x = x.astype(cd)
-    positions = jnp.full((b, 1), pos, jnp.int32)
-    q_nope, q_rope, ckv_new, k_rope_new = _mla_qc(p, x, cfg, positions)
-    ckv = jax.lax.dynamic_update_slice(
-        cache["ckv"], ckv_new[:, :1].astype(cache["ckv"].dtype), (0, pos, 0))
-    kpe = jax.lax.dynamic_update_slice(
-        cache["kpe"], k_rope_new[:, 0].astype(cache["kpe"].dtype), (0, pos, 0))
+    proj = proj or {}
+    positions = _decode_positions(b, pos)
+    q_nope, q_rope, ckv_new, k_rope_new = _mla_qc(p, x, cfg, positions,
+                                                  matmul=proj.get("qkv"))
+    ckv = _dus_seq(cache["ckv"], ckv_new[:, :1].astype(cache["ckv"].dtype), pos)
+    kpe = _dus_seq(cache["kpe"], k_rope_new[:, 0].astype(cache["kpe"].dtype), pos)
     new_cache = {"ckv": ckv, "kpe": kpe}
 
     scale = 1.0 / (cfg.head_dim_ ** 0.5)
@@ -456,10 +511,16 @@ def mla_decode(p, x, cache, pos, cfg: ModelConfig, **_):
     s = (jnp.einsum("bhl,bsl->bhs", q_eff.astype(jnp.float32), ckv.astype(jnp.float32))
          + jnp.einsum("bshr,btr->bht", q_rope.astype(jnp.float32),
                       kpe.astype(jnp.float32))) * scale
-    valid = jnp.arange(ckv.shape[1])[None, None, :] <= pos
+    if jnp.ndim(pos) == 0:
+        valid = jnp.arange(ckv.shape[1])[None, None, :] <= pos
+    else:
+        valid = jnp.arange(ckv.shape[1])[None, None, :] <= pos[:, None, None]
     s = jnp.where(valid, s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhs,bsl->bhl", w, ckv.astype(jnp.float32)).astype(cd)
     o = jnp.einsum("bhl,lhk->bhk", o_lat, p["w_uv"].astype(cd))
-    y = jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(cd))
+    if proj.get("o") is not None:
+        y = proj["o"](o.reshape(b, -1))
+    else:
+        y = jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(cd))
     return y[:, None, :], new_cache

@@ -102,15 +102,27 @@ def ffn_specs(cfg: ModelConfig):
     return {"w_up": P(None, "model"), "w_down": P("model", None)}
 
 
-def apply_ffn(p, x, cfg: ModelConfig):
+def apply_ffn(p, x, cfg: ModelConfig, *, matmul_up=None, matmul_down=None):
+    """``matmul_up``/``matmul_down`` (optional) replace only the projection
+    matmuls — the coded serve path runs gate|up stacked as one coded site
+    and down as another; the activation stays on the master either way.
+    ``matmul_up(x)`` returns ``(gate, up)`` for swiglu, else ``up``."""
     cd = dtype_of(cfg, "compute")
     x = x.astype(cd)
     if cfg.activation == "swiglu":
-        h = jax.nn.silu(x @ p["w_gate"].astype(cd)) * (x @ p["w_up"].astype(cd))
-    elif cfg.activation == "relu_sq":
-        h = jnp.square(jax.nn.relu(x @ p["w_up"].astype(cd)))
-    else:  # gelu
-        h = jax.nn.gelu(x @ p["w_up"].astype(cd))
+        if matmul_up is not None:
+            g, u = matmul_up(x)
+        else:
+            g, u = x @ p["w_gate"].astype(cd), x @ p["w_up"].astype(cd)
+        h = jax.nn.silu(g) * u
+    else:
+        u = matmul_up(x) if matmul_up is not None else x @ p["w_up"].astype(cd)
+        if cfg.activation == "relu_sq":
+            h = jnp.square(jax.nn.relu(u))
+        else:  # gelu
+            h = jax.nn.gelu(u)
+    if matmul_down is not None:
+        return matmul_down(h)
     return h @ p["w_down"].astype(cd)
 
 

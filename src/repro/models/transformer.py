@@ -154,8 +154,15 @@ def apply_layer(p, x, cfg: ModelConfig, desc: LayerDesc, *, positions,
 
 
 def decode_layer(p, x, cfg: ModelConfig, desc: LayerDesc, *, cache, pos,
-                 mrope_positions=None):
-    """One-token layer step.  Returns (x, new_cache)."""
+                 mrope_positions=None, proj=None):
+    """One-token layer step.  Returns (x, new_cache).
+
+    ``pos`` is scalar (uniform) or (B,) per-slot positions (continuous
+    batching); ``proj`` optionally reroutes this layer's projection matmuls
+    through coded rounds: ``{"qkv", "o"}`` feed the attention/MLA mixer,
+    ``{"up", "down"}`` the dense FFN (MoE/SSM mixers stay uncoded — their
+    maps are data-dependent or recurrent, not a fixed ``x @ W``)."""
+    proj = proj or {}
     h = apply_norm(p["norm1"], x, cfg)
     if desc.mixer == "rwkv":
         y, cache = ssm.rwkv_decode_step(p["mixer"], h, cache, cfg)
@@ -166,20 +173,23 @@ def decode_layer(p, x, cfg: ModelConfig, desc: LayerDesc, *, cache, pos,
     if desc.mixer == "mamba":
         y, cache = ssm.mamba_decode_step(p["mixer"], h, cache, cfg)
     elif desc.mixer == "mla":
-        y, cache = attn.mla_decode(p["mixer"], h, cache, pos, cfg)
+        y, cache = attn.mla_decode(p["mixer"], h, cache, pos, cfg,
+                                   proj={k: proj.get(k) for k in ("qkv", "o")})
     else:
         y, cache = attn.attn_decode(p["mixer"], h, cache, pos, cfg,
                                     use_rope=desc.rope,
-                                    mrope_positions=mrope_positions)
+                                    mrope_positions=mrope_positions,
+                                    proj={k: proj.get(k) for k in ("qkv", "o")})
+    ffn_mm = {"matmul_up": proj.get("up"), "matmul_down": proj.get("down")}
     if cfg.parallel_block:
-        f = apply_ffn(p["ffn"], h, cfg)
+        f = apply_ffn(p["ffn"], h, cfg, **ffn_mm)
         return x + y + f, cache
     x = x + y
     h2 = apply_norm(p["norm2"], x, cfg)
     if desc.ffn == "moe":
         f = moe_mod.moe_ffn_decode(p["ffn"], h2, cfg)
     else:
-        f = apply_ffn(p["ffn"], h2, cfg)
+        f = apply_ffn(p["ffn"], h2, cfg, **ffn_mm)
     return x + f, cache
 
 

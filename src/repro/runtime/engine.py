@@ -598,6 +598,71 @@ class RoundEngine:
                           self.straggler.n_stragglers, proxy_fn=proxy_fn)
         return blk, plan
 
+    # ------------------------------------------------------------- serving
+    # Minimal public hooks the continuous-batching serve loop
+    # (``runtime.serve_loop``) builds on.  The loop owns its own step
+    # programs (a whole decode step — every coded site — is ONE jitted
+    # dispatch), but prices workers, plans rounds, draws wire material and
+    # attributes crypto time through the same machinery as every other
+    # round, so serve RoundStats stay comparable with matmul rounds.
+
+    def worker_time(self, lhs_shape, rhs_shape) -> float:
+        """Per-worker virtual seconds for one coded site's matmul."""
+        return self._worker_compute_time(lhs_shape, rhs_shape)
+
+    def serve_round_plan(self, round_idx: int, t_comp: float):
+        """Straggler plan for one serve step treated as ONE coded round.
+        ``t_comp`` is the per-worker compute of every coded site in the
+        step, summed — each worker runs all of its site shards
+        back-to-back before replying."""
+        return plan_round(self.scheme, self.policy,
+                          self.straggler.delays(round_idx), t_comp,
+                          self.straggler.n_stragglers)
+
+    def serve_wire_params(self):
+        """(q, cipher_mode) for in-step ``wire_roundtrip`` calls, or None
+        when this spec doesn't run real encryption."""
+        if getattr(self, "_mea", None) is None:
+            return None
+        return self._mea.curve.q, self._mea.mode
+
+    def serve_wire_material(self, count: int):
+        """``count`` fresh (out, back) wire-material pairs — one pair per
+        coded site instance in a serve step (stream mode draws fresh
+        nonces per site per step from the same nonce stream as the staged
+        wire; paper mode returns the static Ψ stack).  Each side is
+        (count, N, W) numpy."""
+        outs, backs = zip(*(self._fused_mask_material()
+                            for _ in range(count)))
+        return np.stack(outs), np.stack(backs)
+
+    def serve_crypto_time(self, elems_out: int, elems_back: int) -> float:
+        """Measured wall seconds of ONE serve step's wire work alone: the
+        per-channel payloads of every coded site, flattened to (N, elems)
+        and timed on a jitted wire-only program once per element-count
+        class (the serve analogue of :meth:`_fused_crypto_time` — the
+        in-step wire has no boundary to put a timer on)."""
+        key = ("serve", elems_out, elems_back)
+        if key not in self._fused_crypto_t:
+            from ..kernels.encrypted_round import wire_roundtrip
+            mode = self._mea.mode
+            q = self._mea.curve.q
+            mat_out, mat_back = self._fused_mask_material()
+
+            def _wires(x_out, x_back, mo, mb):
+                return (wire_roundtrip(x_out, mo, q=q, mode=mode),
+                        wire_roundtrip(x_back, mb, q=q, mode=mode))
+
+            fn = jax.jit(_wires)
+            args = (jnp.zeros((self.n, max(elems_out, 1)), jnp.float32),
+                    jnp.zeros((self.n, max(elems_back, 1)), jnp.float32),
+                    jnp.asarray(mat_out), jnp.asarray(mat_back))
+            jax.block_until_ready(fn(*args))           # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            self._fused_crypto_t[key] = time.perf_counter() - t0
+        return self._fused_crypto_t[key]
+
     def _encode_only_time(self, a_shape) -> float:
         """Measured wall seconds of ONE jitted encode at this shape
         (cached).  Caps the pipelining credit on paths whose master timer
