@@ -1,0 +1,212 @@
+"""Adaptive redundancy vs every fixed policy under a shifting trace.
+
+One deterministic operating point (SPACDC on the virtual clock, a seeded
+``shifting_markov`` straggler trace whose congestion regime flips every
+``REGIME_LEN`` rounds), five runs over the SAME trace:
+
+  * **adaptive** — ``AdaptiveSpec(policy="adaptive")``: the controller
+    fits the straggler process online and retunes redundancy + wait
+    policy + ``fh_degree`` between rounds.
+  * **four fixed baselines** — the seed-default ``FixedQuantile``, plus
+    ``FirstK``, ``Deadline`` and ``ErrorTarget`` at representative
+    settings.  Each pins one point in the (redundancy, wait) plane, so
+    each is wrong in at least one regime.
+
+The per-round metric is *latency at the error target*: time-to-decode,
+plus the full straggler makespan as penalty when the round's relative
+error misses ``TARGET`` (a miss means you would have had to wait for
+everyone).  Gates (full run): adaptive strictly beats EVERY fixed
+policy's mean latency-at-error, the controller actually retunes, and
+the engine's trace count stays flat over the closing third of the run —
+retuning cycles jit caches, it never recompiles per round.
+
+  PYTHONPATH=src python benchmarks/bench_adaptive.py [--smoke] [--out PATH]
+
+Writes ``BENCH_adaptive.json``.  The ratio row
+``adaptive_vs_best_fixed_x`` (best fixed latency-at-error / adaptive
+latency-at-error) feeds CI's regression check.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.api import (AdaptiveSpec, ClusterSpec, CodeSpec, PrivacySpec,
+                       Session, StragglerSpec, WaitSpec)
+
+# N=16, K=8 rateless SPACDC: enough arrival prefixes that the wait
+# policy genuinely matters, and a delay/jitter ratio (30ms vs 2ms) where
+# waiting for stragglers is expensive but decoding too early misses the
+# error target.
+OP = dict(n_workers=16, k_blocks=8, t_colluding=1, noise_scale=0.01,
+          n_stragglers=4, seed=7, delay_s=0.03, jitter_scale=0.002)
+FULL_ROUNDS, SMOKE_ROUNDS = 48, 24
+FULL_REGIME_LEN, SMOKE_REGIME_LEN = 16, 8
+TARGET = 0.12                   # latency-at-error error budget
+RATIO_MIN = 1.1                 # full-run floor for adaptive/best-fixed
+
+FIXED_POLICIES = {
+    "fixed_quantile": WaitSpec(),
+    "first_k": WaitSpec(policy="first_k", k=10),
+    "deadline": WaitSpec(policy="deadline", t_budget=0.010),
+    "error_target": WaitSpec(policy="error_target", eps=TARGET,
+                             min_prefix=4),
+}
+
+
+def _spec(regime_len: int, wait: WaitSpec | None = None,
+          adaptive: AdaptiveSpec | None = None) -> ClusterSpec:
+    return ClusterSpec(
+        code=CodeSpec(scheme="spacdc", n_workers=OP["n_workers"],
+                      k_blocks=OP["k_blocks"]),
+        privacy=PrivacySpec(t_colluding=OP["t_colluding"],
+                            noise_scale=OP["noise_scale"]),
+        straggler=StragglerSpec(n_stragglers=OP["n_stragglers"],
+                                mode="shifting_markov",
+                                delay_s=OP["delay_s"],
+                                jitter_scale=OP["jitter_scale"],
+                                regime_len=regime_len),
+        wait=wait if wait is not None else WaitSpec(),
+        adaptive=adaptive if adaptive is not None else AdaptiveSpec(),
+        seed=OP["seed"])
+
+
+def _run_policy(spec: ClusterSpec, rounds: int) -> dict:
+    rng = np.random.default_rng(42)
+    a = rng.standard_normal((64, 32)).astype(np.float32)
+    b = rng.standard_normal((32, 16)).astype(np.float32)
+    ref = a @ b
+    lats, errs, traces = [], [], []
+    report = None
+    with Session(spec) as s:
+        for _ in range(rounds):
+            out, st = s.matmul(a, b)
+            err = float(np.linalg.norm(out - ref) / np.linalg.norm(ref))
+            makespan = (float(st.arrivals[-1][0]) if st.arrivals
+                        else float(st.decode_at_s))
+            lats.append(float(st.decode_at_s)
+                        + (makespan if err > TARGET else 0.0))
+            errs.append(err)
+            traces.append(int(s.engine.trace_count))
+        if spec.adaptive is not None and spec.adaptive.enabled:
+            report = s.adaptive_report()
+    out = {
+        "lat_at_err_ms": round(float(np.mean(lats)) * 1e3, 4),
+        "lat_ms": [round(v * 1e3, 4) for v in lats],
+        "misses": int(sum(e > TARGET for e in errs)),
+        "median_rel_err": float(f"{np.median(errs):.3e}"),
+        "trace_count": traces[-1],
+        "trace_count_by_round": traces,
+    }
+    if report is not None:
+        out["adaptive_report"] = report
+    return out
+
+
+def measure(smoke: bool = False) -> dict:
+    rounds = SMOKE_ROUNDS if smoke else FULL_ROUNDS
+    regime_len = SMOKE_REGIME_LEN if smoke else FULL_REGIME_LEN
+    ad = AdaptiveSpec(policy="adaptive", target_rel_err=TARGET,
+                      warmup_rounds=6, retune_every=2, max_candidates=5)
+    policies = {"adaptive": _run_policy(_spec(regime_len, adaptive=ad),
+                                        rounds)}
+    for name, wait in FIXED_POLICIES.items():
+        policies[name] = _run_policy(_spec(regime_len, wait=wait), rounds)
+    fixed = {k: v["lat_at_err_ms"] for k, v in policies.items()
+             if k != "adaptive"}
+    best_fixed = min(fixed, key=fixed.get)
+    return {
+        "config": dict(OP, rounds=rounds, regime_len=regime_len,
+                       target_rel_err=TARGET, smoke=smoke,
+                       backend=jax.default_backend(),
+                       platform=platform.platform()),
+        "policies": policies,
+        "best_fixed": best_fixed,
+        "best_fixed_lat_ms": fixed[best_fixed],
+        "adaptive_vs_best_fixed_x": round(
+            fixed[best_fixed] / policies["adaptive"]["lat_at_err_ms"], 3),
+    }
+
+
+def gate_rows(report: dict, smoke: bool) -> list:
+    return [
+        {"benchmark": "adaptive", "metric": "adaptive_vs_best_fixed_x",
+         "value": report["adaptive_vs_best_fixed_x"],
+         "direction": "higher", "kind": "ratio",
+         "threshold": None if smoke else RATIO_MIN},
+    ]
+
+
+def _gate_and_row(rows, report: dict, smoke: bool):
+    pol = report["policies"]
+    ad = pol["adaptive"]
+    rep = ad["adaptive_report"]
+    n_rounds = report["config"]["rounds"]
+
+    # ---- gates -----------------------------------------------------------
+    assert len(ad["lat_ms"]) == n_rounds, (
+        f"adaptive trace aborted at {len(ad['lat_ms'])}/{n_rounds} rounds")
+    assert rep["decisions"], "controller never retuned"
+    n_cands = len(rep["candidates"])
+    assert ad["trace_count"] <= n_cands + 4, (
+        f"trace count {ad['trace_count']} not bounded by the candidate "
+        f"set ({n_cands}) — retuning is recompiling")
+    tail = ad["trace_count_by_round"][-(n_rounds // 3):]
+    assert tail[0] == tail[-1], (
+        f"traces still appearing in the closing third ({tail[0]} -> "
+        f"{tail[-1]}) — retuning is recompiling per round")
+    if not smoke:
+        for name in FIXED_POLICIES:
+            assert ad["lat_at_err_ms"] < pol[name]["lat_at_err_ms"], (
+                f"adaptive ({ad['lat_at_err_ms']}ms) did not beat "
+                f"{name} ({pol[name]['lat_at_err_ms']}ms)")
+        assert report["adaptive_vs_best_fixed_x"] >= RATIO_MIN, (
+            f"adaptive only {report['adaptive_vs_best_fixed_x']}x vs best "
+            f"fixed (need >= {RATIO_MIN})")
+    print(f"adaptive gate OK: {ad['lat_at_err_ms']}ms vs best fixed "
+          f"{report['best_fixed']} {report['best_fixed_lat_ms']}ms "
+          f"({report['adaptive_vs_best_fixed_x']}x), "
+          f"{len(rep['decisions'])} retunes, "
+          f"{ad['trace_count']} traces over {n_rounds} rounds")
+
+    rows.append(("adaptive_round", ad["lat_at_err_ms"] * 1e3,
+                 f"miss={ad['misses']}/{n_rounds},"
+                 f"retunes={len(rep['decisions'])},"
+                 f"traces={ad['trace_count']}"))
+    for name in FIXED_POLICIES:
+        rows.append((f"adaptive_{name}_round",
+                     pol[name]["lat_at_err_ms"] * 1e3,
+                     f"miss={pol[name]['misses']}/{n_rounds}"))
+    return rows
+
+
+def run(rows, smoke: bool = False, gates=None):
+    """benchmarks.run entry point: gates + CSV rows, no artifact write."""
+    report = measure(smoke=smoke)
+    _gate_and_row(rows, report, smoke)
+    if gates is not None:
+        gates.extend(gate_rows(report, smoke=smoke))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent
+                                         .parent / "BENCH_adaptive.json"))
+    args = ap.parse_args(argv)
+    report = measure(smoke=args.smoke)
+    Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    _gate_and_row([], report, smoke=args.smoke)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -32,6 +32,8 @@ BENCHES = {
                   "fault-injected rounds: defended vs undefended", True),
     "transport": ("bench_transport",
                   "socket mesh vs threads + live SIGKILL round", True),
+    "adaptive":  ("bench_adaptive",
+                  "adaptive redundancy vs every fixed wait policy", True),
     "roofline":  ("roofline", "kernel arithmetic-intensity report", False),
 }
 ALIASES = {"fig5": "table2", "fig6": "table2", "fig7": "table2"}

@@ -14,13 +14,14 @@ See README "Public API" for the spec schema and the migration table from
 the legacy ``DistributedMatmul`` kwargs.
 """
 
-from .spec import (ClusterSpec, CodeSpec, CryptoSpec, FaultSpec,
-                   PrivacySpec, ServeSpec, StragglerSpec, TransportSpec,
-                   WaitSpec)
+from .spec import (AdaptiveSpec, ClusterSpec, CodeSpec, CryptoSpec,
+                   FaultSpec, PrivacySpec, ServeSpec, StragglerSpec,
+                   TransportSpec, WaitSpec)
 from .session import ServeReport, Session, coded_mlp_init, coded_mlp_step
 
 __all__ = [
-    "ClusterSpec", "CodeSpec", "CryptoSpec", "FaultSpec", "PrivacySpec",
-    "ServeSpec", "StragglerSpec", "TransportSpec", "WaitSpec", "Session",
-    "ServeReport", "coded_mlp_init", "coded_mlp_step",
+    "AdaptiveSpec", "ClusterSpec", "CodeSpec", "CryptoSpec", "FaultSpec",
+    "PrivacySpec", "ServeSpec", "StragglerSpec", "TransportSpec",
+    "WaitSpec", "Session", "ServeReport", "coded_mlp_init",
+    "coded_mlp_step",
 ]

@@ -199,9 +199,38 @@ class Session:
     @property
     def health(self):
         """The engine's :class:`~repro.runtime.faults.WorkerHealth`
-        tracker (None unless the spec's ``FaultSpec`` is active) — EWMA
-        latency, crash/drop/corrupt counts, quarantine state per worker."""
+        tracker (None unless the spec's ``FaultSpec`` is active or
+        ``AdaptiveSpec`` is enabled) — EWMA latency, crash/drop/corrupt
+        counts, quarantine state per worker."""
         return self.engine.health
+
+    def adaptive_report(self) -> dict:
+        """JSON-ready snapshot of the adaptive controller's state: the
+        fitted straggler model, the candidate space, every per-round
+        :class:`~repro.runtime.adaptive.Decision`, and the per-worker
+        health (``WorkerHealth.to_dict``).  With ``policy="fixed"`` the
+        report just says so — callers (``launch/serve.py --report``) can
+        dump it unconditionally."""
+        eng = self.engine
+        report = {
+            "scheme": self.spec.code.scheme,
+            "n_workers": self.spec.code.n_workers,
+            "adaptive": getattr(self.spec, "adaptive", None) is not None
+            and self.spec.adaptive.enabled,
+            "rounds_run": len(self.round_stats),
+        }
+        if eng.adaptive is not None:
+            report.update(eng.adaptive.report())
+            report["active"] = {
+                "k_blocks": int(getattr(eng.scheme, "k_blocks", eng.k)),
+                "policy": eng.policy.name,
+                "fh_degree": int(eng.fh_degree),
+            }
+        else:
+            report["policy"] = "fixed"
+        if eng.health is not None:
+            report["health"] = eng.health.to_dict()
+        return report
 
     def _check_open(self):
         if self._closed:

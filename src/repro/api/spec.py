@@ -32,11 +32,12 @@ from typing import Any, Dict, Mapping, Optional
 
 from ..runtime.wait_policy import (Deadline, ErrorTarget, FirstK,
                                    FixedQuantile, WaitPolicy)
-from ..runtime.straggler import StragglerModel
+from ..runtime.straggler import STRAGGLER_MODES, StragglerModel
 
 __all__ = [
     "CodeSpec", "PrivacySpec", "CryptoSpec", "WaitSpec", "StragglerSpec",
-    "TransportSpec", "FaultSpec", "ServeSpec", "ClusterSpec",
+    "TransportSpec", "FaultSpec", "ServeSpec", "AdaptiveSpec",
+    "ClusterSpec",
 ]
 
 def _transport_backends() -> tuple:
@@ -270,8 +271,14 @@ class WaitSpec:
 @dataclasses.dataclass(frozen=True)
 class StragglerSpec:
     """The injected straggler environment (paper §VII-B sleep() delays;
-    ``pareto``/``markov`` are the beyond-paper heavy-tail/bursty modes).
-    ``seed=None`` follows the cluster seed."""
+    ``pareto``/``markov`` are the beyond-paper heavy-tail/bursty modes,
+    ``shifting_markov`` the non-stationary regime-schedule trace the
+    adaptive controller is benchmarked against).  ``seed=None`` follows
+    the cluster seed.
+
+    Parameters are validated HERE (and again in ``StragglerModel``), so a
+    typo'd probability or an α ≤ 1 Pareto tail (undefined mean) fails at
+    spec construction instead of deep inside ``delays()`` mid-run."""
     n_stragglers: int = 0
     delay_s: float = 0.02
     jitter_scale: float = 0.002
@@ -279,14 +286,41 @@ class StragglerSpec:
     pareto_shape: float = 1.5
     p_fail: float = 0.1
     p_recover: float = 0.5
+    # shifting_markov: ((p_fail, p_recover), ...) cycled every regime_len
+    # rounds; () = runtime.straggler.DEFAULT_SHIFT_REGIMES
+    regimes: tuple = ()
+    regime_len: int = 40
     seed: Optional[int] = None
 
     def __post_init__(self):
         if self.n_stragglers < 0:
             raise ValueError("straggler: n_stragglers must be >= 0")
-        if self.mode not in ("paper", "pareto", "markov"):
+        if self.mode not in STRAGGLER_MODES:
             raise ValueError(f"straggler: unknown mode {self.mode!r} "
-                             "(paper | pareto | markov)")
+                             f"({' | '.join(STRAGGLER_MODES)})")
+        if self.delay_s < 0 or self.jitter_scale < 0:
+            raise ValueError("straggler: delay_s and jitter_scale must "
+                             "be >= 0")
+        if not self.pareto_shape > 1.0:
+            raise ValueError(
+                f"straggler: pareto_shape must be > 1 (a tail index α ≤ 1 "
+                f"has an undefined mean), got {self.pareto_shape!r}")
+        for name in ("p_fail", "p_recover"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"straggler: {name} must be in [0, 1], "
+                                 f"got {v!r}")
+        if self.regime_len < 1:
+            raise ValueError("straggler: regime_len must be >= 1")
+        # JSON round trips lists; coerce back to tuples so frozen-spec
+        # equality survives to_dict/from_dict
+        regimes = tuple(tuple(float(p) for p in r) for r in self.regimes)
+        for r in regimes:
+            if len(r) != 2 or not all(0.0 <= p <= 1.0 for p in r):
+                raise ValueError(
+                    f"straggler: each regime must be a (p_fail, p_recover) "
+                    f"pair in [0, 1]^2, got {r!r}")
+        object.__setattr__(self, "regimes", regimes)
 
     def build(self, n_workers: int, seed: int) -> StragglerModel:
         return StragglerModel(
@@ -294,14 +328,16 @@ class StragglerSpec:
             jitter_scale=self.jitter_scale,
             seed=self.seed if self.seed is not None else seed,
             mode=self.mode, pareto_shape=self.pareto_shape,
-            p_fail=self.p_fail, p_recover=self.p_recover)
+            p_fail=self.p_fail, p_recover=self.p_recover,
+            regimes=self.regimes, regime_len=self.regime_len)
 
     @classmethod
     def from_model(cls, m: StragglerModel) -> "StragglerSpec":
         return cls(n_stragglers=m.n_stragglers, delay_s=m.delay_s,
                    jitter_scale=m.jitter_scale, mode=m.mode,
                    pareto_shape=m.pareto_shape, p_fail=m.p_fail,
-                   p_recover=m.p_recover, seed=m.seed)
+                   p_recover=m.p_recover, regimes=m.regimes,
+                   regime_len=m.regime_len, seed=m.seed)
 
     def to_dict(self):
         return _as_dict(self)
@@ -539,6 +575,92 @@ class ServeSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class AdaptiveSpec:
+    """The between-rounds redundancy controller (``runtime.adaptive``).
+
+    ``policy="fixed"`` (default) changes nothing: the Session runs the
+    hand-set K/N, wait policy and fh_degree forever, exactly as before.
+    ``policy="adaptive"`` closes the loop: an online estimator fits the
+    straggler model (markov transition rates, pareto tail, paper-mode
+    shift/scale) from the arrival timestamps every round already records,
+    and every ``retune_every`` rounds (after ``warmup_rounds`` of pure
+    observation) the controller re-picks the redundancy N−K, the wait
+    policy and ``fh_degree`` that minimize predicted latency at
+    ``target_rel_err`` under the fitted model.  Candidate redundancy is
+    bounded to [``min_redundancy``, ``max_redundancy``] (and at most
+    ``max_candidates`` K values), so the fused-kernel cache warms once
+    per candidate and retuning never recompiles per round.
+
+    * ``latency_budget_s`` — optional hard budget: when the predicted
+      wait at the error target exceeds it, the controller falls back to a
+      ``Deadline`` round at the budget (best-effort accuracy).
+    * ``window`` / ``cp_window`` / ``cp_threshold`` — estimator sliding
+      window length and change-point detector: when the congested
+      fraction over the last ``cp_window`` rounds jumps by more than
+      ``cp_threshold`` vs the preceding ``cp_window``, the window resets
+      so a regime shift is re-fit within a bounded number of rounds.
+    * ``quantize_s`` — observation grid (seconds).  Arrival timestamps
+      are quantized before fitting so the virtual clock and the real
+      thread transport produce identical fits (and identical controller
+      decisions) for the same trace + seed.
+    """
+    policy: str = "fixed"               # "fixed" | "adaptive"
+    target_rel_err: float = 1e-2
+    latency_budget_s: Optional[float] = None
+    retune_every: int = 2
+    warmup_rounds: int = 6
+    min_redundancy: int = 1             # bounds on N − K
+    max_redundancy: Optional[int] = None    # None = N − 1
+    max_candidates: int = 5
+    window: int = 64
+    cp_window: int = 6
+    cp_threshold: float = 0.25
+    quantize_s: float = 1e-3
+
+    def __post_init__(self):
+        if self.policy not in ("fixed", "adaptive"):
+            raise ValueError(f"adaptive: policy must be 'fixed' or "
+                             f"'adaptive', got {self.policy!r}")
+        if self.target_rel_err <= 0:
+            raise ValueError("adaptive: target_rel_err must be > 0")
+        if self.latency_budget_s is not None and self.latency_budget_s <= 0:
+            raise ValueError("adaptive: latency_budget_s must be > 0 "
+                             "(or None)")
+        if self.retune_every < 1 or self.warmup_rounds < 0:
+            raise ValueError("adaptive: need retune_every >= 1 and "
+                             "warmup_rounds >= 0")
+        if self.min_redundancy < 1:
+            raise ValueError("adaptive: min_redundancy must be >= 1 "
+                             "(a rateless round still needs headroom to "
+                             "drop stragglers)")
+        if (self.max_redundancy is not None and
+                self.max_redundancy < self.min_redundancy):
+            raise ValueError("adaptive: max_redundancy must be >= "
+                             "min_redundancy (or None)")
+        if self.max_candidates < 1:
+            raise ValueError("adaptive: max_candidates must be >= 1")
+        if self.window < 4:
+            raise ValueError("adaptive: window must be >= 4 rounds")
+        if self.cp_window < 2 or self.cp_window * 2 > self.window:
+            raise ValueError("adaptive: need 2 <= cp_window <= window/2")
+        if not 0.0 < self.cp_threshold < 1.0:
+            raise ValueError("adaptive: cp_threshold must be in (0, 1)")
+        if self.quantize_s <= 0:
+            raise ValueError("adaptive: quantize_s must be > 0")
+
+    @property
+    def enabled(self) -> bool:
+        return self.policy == "adaptive"
+
+    def to_dict(self):
+        return _as_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "AdaptiveSpec":
+        return _from_dict(cls, d, "adaptive")
+
+
+@dataclasses.dataclass(frozen=True)
 class ClusterSpec:
     """Everything a :class:`repro.api.Session` needs, in one frozen value.
 
@@ -557,6 +679,7 @@ class ClusterSpec:
         default_factory=TransportSpec)
     fault: FaultSpec = dataclasses.field(default_factory=FaultSpec)
     serve: ServeSpec = dataclasses.field(default_factory=ServeSpec)
+    adaptive: AdaptiveSpec = dataclasses.field(default_factory=AdaptiveSpec)
     seed: int = 0
     pipeline_encode: bool = False
 
@@ -626,6 +749,27 @@ class ClusterSpec:
                     "fault: crypto.fused=True runs the round as ONE "
                     "dispatch with no per-worker results to screen or "
                     "retry — drop crypto.fused or fault handling")
+        if self.adaptive.enabled:
+            # the controller retunes K by rebuilding the scheme through the
+            # registry and predicts error from per-prefix decode profiles —
+            # both need a linear data-coded scheme (per-worker encoder
+            # rows); pair-coded schemes have neither
+            if getattr(scheme, "pair_coded", False):
+                raise ValueError(
+                    f"adaptive: {self.code.scheme!r} is pair-coded — "
+                    "redundancy retuning needs a linear data-coded scheme")
+            n = self.code.n_workers
+            max_red = (self.adaptive.max_redundancy
+                       if self.adaptive.max_redundancy is not None
+                       else n - 1)
+            if self.adaptive.min_redundancy > n - 1:
+                raise ValueError(
+                    f"adaptive: min_redundancy={self.adaptive.min_redundancy}"
+                    f" leaves no data blocks at n_workers={n}")
+            if max_red > n - 1:
+                raise ValueError(
+                    f"adaptive: max_redundancy={max_red} exceeds "
+                    f"n_workers-1={n - 1}")
         # NOTE: error_target × crypto "real" is a supported combination —
         # the anytime pipeline runs over genuine ciphertexts (fused: two
         # dispatches; staged: split at the wire boundaries).
@@ -683,7 +827,8 @@ class ClusterSpec:
         nested = {"code": CodeSpec, "privacy": PrivacySpec,
                   "crypto": CryptoSpec, "wait": WaitSpec,
                   "straggler": StragglerSpec, "transport": TransportSpec,
-                  "fault": FaultSpec, "serve": ServeSpec}
+                  "fault": FaultSpec, "serve": ServeSpec,
+                  "adaptive": AdaptiveSpec}
         kw = {}
         for key, val in d.items():
             sub = nested.get(key)

@@ -35,7 +35,7 @@ from . import berrut, registry
 
 __all__ = [
     "UncodedScheme", "MDSCode", "PolynomialCode", "MatDotCode",
-    "LCCScheme", "SecPolyCode", "BACCScheme",
+    "LCCScheme", "GLCCScheme", "SecPolyCode", "BACCScheme",
 ]
 
 
@@ -278,6 +278,88 @@ class LCCScheme(_SchemeBase):
 
 
 @dataclasses.dataclass
+class GLCCScheme(_SchemeBase):
+    """Group Lagrange Coded Computing [arXiv 2204.11168].
+
+    LCC with the K data blocks partitioned into ``n_groups`` groups of
+    ``per = K / n_groups`` blocks, each group Lagrange-encoded separately
+    (with its own T noise blocks) over ONE shared (N, per+T) encoder.
+    Grouping divides the interpolation degree, so the recovery threshold
+    drops from ``(K+T-1)·deg_f + 1`` to ``(per+T-1)·deg_f + 1`` — paid
+    for with ``n_groups``× the per-worker computation and communication
+    (each worker holds one coded block per group).  That
+    computation–communication tradeoff is the knob the adaptive
+    controller (``runtime.adaptive``) sweeps; ``n_groups=1`` is exactly
+    LCC (asserted bit-identical in tests).
+    """
+    n_workers: int
+    k_blocks: int
+    t_colluding: int = 0
+    deg_f: int = 2
+    n_groups: int = 1
+    noise_scale: float = 1.0
+    seed: int = 0
+    name: str = "glcc"
+
+    def __post_init__(self):
+        if self.n_groups < 1 or self.k_blocks % self.n_groups:
+            raise ValueError(
+                f"GLCC needs n_groups >= 1 dividing k_blocks, got "
+                f"n_groups={self.n_groups}, K={self.k_blocks}")
+        self.per_group = self.k_blocks // self.n_groups
+        pt = self.per_group + self.t_colluding
+        self.recovery_threshold = (pt - 1) * self.deg_f + 1
+        if self.n_workers < self.recovery_threshold:
+            raise ValueError("GLCC needs N >= (K/g + T - 1)deg_f + 1")
+        self.beta = _cheb_points(pt)
+        self.alpha = berrut.chebyshev_points(self.n_workers, kind=2,
+                                             lo=-1.05, hi=1.05)
+        for i in range(len(self.alpha)):
+            while np.any(np.abs(self.alpha[i] - self.beta) < 1e-9):
+                self.alpha[i] += 1e-3
+        self.encoder = _lagrange_matrix(self.alpha, self.beta)  # (N, per+T)
+
+    def _grouped_blocks(self, x):
+        """Per-group (per+T, blk, ...) stacks; all groups' noise comes off
+        ONE seeded stream in group order, so n_groups=1 draws exactly the
+        LCC noise."""
+        from .spacdc import pad_to_blocks
+        x = pad_to_blocks(x, self.k_blocks)
+        blocks = x.reshape((self.k_blocks, -1) + x.shape[1:])
+        rng = np.random.default_rng(self.seed)
+        per, out = self.per_group, []
+        for gi in range(self.n_groups):
+            gb = blocks[gi * per: (gi + 1) * per]
+            if self.t_colluding:
+                noise = self.noise_scale * rng.standard_normal(
+                    (self.t_colluding,) + tuple(gb.shape[1:]))
+                gb = jnp.concatenate([gb, jnp.asarray(noise, gb.dtype)], 0)
+            out.append(gb)
+        return out
+
+    def encode(self, x: jnp.ndarray, key=None) -> jnp.ndarray:
+        # worker i's shard stacks its coded block from every group:
+        # (N, n_groups·blk, ...) — the g× communication cost of the
+        # threshold reduction
+        shards = [self._combine(self.encoder, gb)
+                  for gb in self._grouped_blocks(x)]
+        return jnp.concatenate(shards, axis=1)
+
+    def decode(self, results: jnp.ndarray, responders: Sequence[int]):
+        self._check(responders)
+        r = self.recovery_threshold
+        resp = np.asarray(responders[:r])
+        nodes = self.alpha[resp]
+        eval_mat = _lagrange_matrix(self.beta[: self.per_group], nodes)
+        res = jnp.asarray(results)[:r]
+        blk = res.shape[1] // self.n_groups
+        res = res.reshape((r, self.n_groups, blk) + res.shape[2:])
+        return jnp.concatenate(
+            [self._combine(eval_mat, res[:, gi])
+             for gi in range(self.n_groups)], axis=0)   # (K, blk, ...)
+
+
+@dataclasses.dataclass
 class SecPolyCode(_SchemeBase):
     """Secure polynomial codes [Yang & Lee '19]: polynomial code + 1 random
     block appended to the A-polynomial for (T=1) privacy."""
@@ -399,6 +481,11 @@ registry.register(
     lambda n_workers, k_blocks, t_colluding=0, deg_f=2, noise_scale=1.0,
     seed=0: LCCScheme(n_workers, k_blocks, t_colluding, deg_f, noise_scale,
                       seed))
+registry.register(
+    "glcc",
+    lambda n_workers, k_blocks, t_colluding=0, deg_f=2, n_groups=1,
+    noise_scale=1.0, seed=0: GLCCScheme(n_workers, k_blocks, t_colluding,
+                                        deg_f, n_groups, noise_scale, seed))
 registry.register("secpoly", _secpoly_factory)
 registry.register("bacc", lambda n_workers, k_blocks: BACCScheme(n_workers,
                                                                  k_blocks))

@@ -65,6 +65,9 @@ def main(argv=None):
                     choices=available_backends(),
                     help="round backend (from the transport registry); "
                     "'socket' spawns real worker processes on localhost")
+    ap.add_argument("--report", action="store_true",
+                    help="after serving, print the session's adaptive/"
+                    "health report (Session.adaptive_report) as JSON")
     args = ap.parse_args(argv)
 
     n_requests = args.requests if args.requests is not None else \
@@ -87,6 +90,7 @@ def main(argv=None):
                       prompt_len=args.prompt_len, gen=args.gen,
                       seed=args.seed, arrival_rate=args.rate,
                       ragged=args.ragged, admission=args.admission)
+        session_report = s.adaptive_report() if args.report else None
 
     label = ("uncoded" if coded_layers == "none" else
              f"coded[{coded_layers}], {spec.code.scheme} "
@@ -113,6 +117,9 @@ def main(argv=None):
               f"argmax agreement {rep.argmax_agreement:.2f})")
     for b in range(min(rep.tokens.shape[0], 2)):
         print(f"  req{b}: {rep.tokens[b][:16].tolist()}...")
+    if session_report is not None:
+        import json
+        print(json.dumps(session_report, indent=2))
     return 0
 
 

@@ -2,8 +2,10 @@ from .straggler import StragglerModel
 from .wait_policy import (ArrivalEvent, Deadline, ErrorTarget, FirstK,
                           FixedQuantile, WaitPolicy, resolve_policy)
 from .scheduler import (AnytimePoint, EncodePipeline, RoundPlan,
-                        plan_round, policy_mask_fn, retry_backoff,
-                        screen_responders, virtual_events)
+                        observed_delays, plan_round, policy_mask_fn,
+                        retry_backoff, screen_responders, virtual_events)
+from .adaptive import (AdaptiveController, Decision, FittedModel,
+                       OnlineStragglerEstimator, error_profile)
 from .transport import (TRANSPORTS, ThreadTransport, Transport,
                         VirtualClockTransport, available_backends,
                         build_transport)
@@ -28,4 +30,6 @@ __all__ = [
     "SealedMatmulTask",
     "DegradedRoundError", "FaultInjectingTransport", "ResultDropped",
     "WorkerHealth", "plan_faults",
+    "observed_delays", "AdaptiveController", "Decision", "FittedModel",
+    "OnlineStragglerEstimator", "error_profile",
 ]

@@ -325,6 +325,27 @@ class RoundEngine:
         self._fused_cache_max = 8
         self._worker_t = {}                 # shapes -> per-worker seconds
         self._encode_t = {}                 # shapes -> encode-only seconds
+        # adaptive redundancy (runtime.adaptive): every jit cache key
+        # carries the active scheme's identity token, so a retuned scheme
+        # reuses ITS compiled functions instead of tracing fresh ones —
+        # retuning cycles the LRU, it never recompiles per round
+        self._scheme_token = ("base",)
+        self.adaptive = None
+        ad = getattr(spec, "adaptive", None)
+        if ad is not None and ad.enabled:
+            from .adaptive import AdaptiveController
+            self.adaptive = AdaptiveController(
+                ad, self.n, self.scheme, self._build_candidate_scheme,
+                seed=spec.seed)
+            if self.health is None:
+                # the controller blends per-worker EWMA latency into its
+                # fits; outside fault mode nothing else creates the tracker
+                self.health = WorkerHealth(self.n)
+            # every candidate may hold compiled fns for a few shape
+            # classes concurrently — size the LRU so retuning cycles
+            # between candidates without evicting live entries
+            self._fused_cache_max = max(
+                8, 4 * (len(self.adaptive.candidates) + 1))
         self._crypto = None
         self._crypto_per_elem = {}          # (dtype, mode) -> seconds/element
         if mode is not None:
@@ -468,7 +489,7 @@ class RoundEngine:
     def _fused_fn(self, a_shape, b_shape, dtype):
         """The jitted round for one shape class, LRU-cached.  The straggler
         mask is a traced argument, so responder churn never recompiles."""
-        key = (a_shape, b_shape, dtype)
+        key = (self._scheme_token, a_shape, b_shape, dtype)
         fn = self._fused_cache.get(key)
         if fn is None:
             scheme = self.scheme
@@ -494,7 +515,7 @@ class RoundEngine:
         once per shape class while genuine ciphertexts cross between the
         stages.  The stages mirror ``kernels.ref.coded_matmul`` op-for-op,
         so a real round is bit-identical to the single-dispatch round."""
-        key = ("real", a_shape, b_shape, dtype)
+        key = ("real", self._scheme_token, a_shape, b_shape, dtype)
         fns = self._fused_cache.get(key)
         if fns is None:
             scheme = self.scheme
@@ -535,7 +556,7 @@ class RoundEngine:
         recompile.  The wire is the lossless bits codec, so the output is
         bit-identical to both the plain fused round and the staged real
         round (same contractions, same precision) — asserted in tests."""
-        key = ("real_fused", a_shape, b_shape, dtype)
+        key = ("real_fused", self._scheme_token, a_shape, b_shape, dtype)
         fn = self._fused_cache.get(key)
         if fn is None:
             scheme = self.scheme
@@ -669,7 +690,7 @@ class RoundEngine:
         lumps encode with decode/reassembly: only the encode can genuinely
         overlap the previous round's wait window — this round's decode
         needs this round's results."""
-        key = tuple(a_shape)
+        key = (self._scheme_token, tuple(a_shape))
         if key not in self._encode_t:
             fn = jax.jit(self.scheme.encode)
             z = jnp.zeros(a_shape, jnp.float32)
@@ -827,7 +848,7 @@ class RoundEngine:
         """Jitted stage 1 of the anytime round: encode + ALL N worker
         matmuls in one ``kernels.ops.coded_matmul`` dispatch (no decode —
         the decode point isn't known yet)."""
-        key = ("any_results", a_shape, b_shape, dtype)
+        key = ("any_results", self._scheme_token, a_shape, b_shape, dtype)
         fn = self._fused_cache.get(key)
         if fn is None:
             scheme = self.scheme
@@ -854,7 +875,8 @@ class RoundEngine:
         crosses the wire in-dispatch — the one-dispatch tradeoff: the
         arrivals past the stop prefix transmit too, where the staged path
         wires back only what the policy consumed."""
-        key = ("any_results_real", a_shape, b_shape, dtype)
+        key = ("any_results_real", self._scheme_token, a_shape, b_shape,
+               dtype)
         fn = self._fused_cache.get(key)
         if fn is None:
             scheme = self.scheme
@@ -882,7 +904,8 @@ class RoundEngine:
         error proxy (and, for curve reporting, true relative errors
         against an in-trace A@B reference).  The per-round weight stacks
         are runtime arguments — straggler churn never recompiles."""
-        key = ("any_curve", with_ref, a_shape, b_shape, dtype)
+        key = ("any_curve", self._scheme_token, with_ref, a_shape, b_shape,
+               dtype)
         fn = self._fused_cache.get(key)
         if fn is None:
             scheme = self.scheme
@@ -1122,6 +1145,60 @@ class RoundEngine:
         return assemble_curve(events, np.asarray(rel, np.float64), ready,
                               prox)
 
+    # ------------------------------------------------------------ adaptive
+    def _build_candidate_scheme(self, **overrides):
+        """Registry-backed scheme construction for the adaptive
+        controller's candidates: the spec's own build, with ``k_blocks``
+        (or a scheme-specific knob like GLCC's ``n_groups``) overridden."""
+        from ..core import registry
+        code = self.spec.code
+        kwargs = dict(n_workers=code.n_workers, k_blocks=code.k_blocks,
+                      t_colluding=self.spec.privacy.t_colluding,
+                      noise_scale=self.spec.privacy.noise_scale,
+                      seed=self.spec.seed, use_kernel=code.use_kernel,
+                      **dict(code.extra))
+        kwargs.update(overrides)
+        return registry.build(code.scheme, **kwargs)
+
+    def _adaptive_retune(self, round_idx: int) -> None:
+        """Apply the controller's decision (if one is due) BEFORE the
+        round runs: swap scheme / wait policy / fh_degree.  The swapped
+        scheme's compiled functions live under its own cache token, so
+        redispatch is recompile-free once each (candidate, shape) pair
+        has been traced."""
+        dec = self.adaptive.maybe_decide(round_idx, health=self.health)
+        if dec is None:
+            return
+        scheme = self.adaptive.scheme_for(dec)
+        if scheme is not self.scheme:
+            self.scheme = scheme
+            self.k = int(dec.k_blocks)
+            self._scheme_token = self.adaptive._key(dec.overrides)
+            supports = bool(getattr(scheme, "supports_fused", False))
+            stable = bool(getattr(scheme, "fused_decode_stable", False))
+            fused = self.spec.code.fused
+            self.use_fused = (supports and stable) if fused is None \
+                else bool(fused)
+            if self.spec.transport.backend != "virtual" or self.fault.active:
+                self.use_fused = False
+        self.policy = self.adaptive.policy_for(dec)
+        self.fh_degree = dec.fh_degree
+        self.wait_for = self.scheme.wait_policy(self.straggler.n_stragglers)
+
+    def _adaptive_observe(self, round_idx: int, stats: RoundStats) -> None:
+        """Feed the round's consumed arrivals back to the estimator and
+        the health tracker.  Only the consumed prefix is observed — the
+        real transports never see past what the policy waited for, so
+        observing the virtual clock's full timeline would make the two
+        transports fit different models from the same trace."""
+        consumed = tuple(stats.arrivals[: max(stats.n_waited, 1)])
+        self.adaptive.observe(round_idx, consumed,
+                              k_blocks=int(getattr(self.scheme, "k_blocks",
+                                                   self.k)))
+        if self.health is not None and not self.fault.active:
+            for t, w in consumed:
+                self.health.record_ok(int(w), float(t))
+
     # --------------------------------------------------------------- rounds
     def matmul(self, a: np.ndarray, b: np.ndarray, round_idx: int = 0):
         """Returns (result (m, n), RoundStats).  Result stacked over K blocks
@@ -1130,7 +1207,19 @@ class RoundEngine:
         On the fused path encode/compute/decode are one dispatch, so the
         whole master-side wall time is reported as ``encode_s`` and
         ``decode_s`` is 0; ``compute_wait_s`` stays the virtual-clock wait.
+
+        Under ``AdaptiveSpec(policy="adaptive")`` each round is bracketed
+        by the controller: retune (maybe) before, observe arrivals after
+        — the round itself runs the unchanged engine paths.
         """
+        if self.adaptive is not None:
+            self._adaptive_retune(round_idx)
+            out, stats = self._matmul_inner(a, b, round_idx)
+            self._adaptive_observe(round_idx, stats)
+            return out, stats
+        return self._matmul_inner(a, b, round_idx)
+
+    def _matmul_inner(self, a: np.ndarray, b: np.ndarray, round_idx: int = 0):
         a = jnp.asarray(a, jnp.float32)
         b = jnp.asarray(b, jnp.float32)
         real = self.encrypt == "real"

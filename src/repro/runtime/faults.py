@@ -432,6 +432,14 @@ class WorkerHealth:
 
         return sorted(cands, key=key)
 
+    def ewma_latencies(self) -> np.ndarray:
+        """(N,) EWMA latency seconds per worker, NaN where never measured
+        — the per-worker signal the adaptive estimator blends with its
+        fleet fit (``runtime.adaptive``), consumed here instead of
+        re-derived from raw arrivals."""
+        return np.asarray([st.ewma_latency_s for st in self.workers],
+                          np.float64)
+
     def snapshot(self) -> dict:
         """JSON-able health summary (benchmarks / RoundStats feeds)."""
         return {

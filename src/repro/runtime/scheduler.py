@@ -32,8 +32,33 @@ from .wait_policy import (ArrivalEvent, RoundContext, WaitPolicy,
 __all__ = [
     "RoundPlan", "AnytimePoint", "EncodePipeline", "virtual_events",
     "plan_round", "assemble_curve", "policy_mask_fn",
-    "screen_responders", "retry_backoff",
+    "screen_responders", "retry_backoff", "observed_delays",
 ]
+
+
+def observed_delays(arrivals, n_workers: int,
+                    quantize_s: float = 1e-3) -> np.ndarray:
+    """Per-worker delay observations off one round's recorded arrival
+    timestamps (``RoundStats.arrivals``: ((t, worker), ...)).
+
+    The round's fastest arrival is the baseline — subtracting it removes
+    the shared compute time (and, on real transports, wall-clock offset),
+    so the same injected trace yields the same observations on the
+    virtual clock and the thread backend.  Results are quantized to the
+    ``quantize_s`` grid for exactly that reason: sub-grid scheduling
+    noise on real threads must not desynchronize the adaptive
+    estimator's fits across transports.  Unobserved workers are NaN.
+    """
+    obs = np.full(int(n_workers), np.nan, np.float64)
+    if not arrivals:
+        return obs
+    base = min(float(t) for t, _ in arrivals)
+    for t, w in arrivals:
+        w = int(w)
+        if 0 <= w < n_workers:
+            d = float(t) - base
+            obs[w] = round(d / quantize_s) * quantize_s
+    return obs
 
 
 @dataclasses.dataclass

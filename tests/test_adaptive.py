@@ -1,0 +1,402 @@
+"""Adaptive redundancy controller (``runtime.adaptive``): estimator
+parameter recovery, change-point latency, determinism across transports,
+zero-recompile retuning, and the AdaptiveSpec / StragglerSpec surface.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (AdaptiveSpec, ClusterSpec, CodeSpec, PrivacySpec,
+                       Session, StragglerSpec, TransportSpec, WaitSpec)
+from repro.core import registry
+from repro.runtime import observed_delays
+from repro.runtime.adaptive import (AdaptiveController,
+                                    OnlineStragglerEstimator, error_profile,
+                                    predict_wait)
+from repro.runtime.straggler import DEFAULT_SHIFT_REGIMES, StragglerModel
+
+
+def _feed(model, est, rounds, t_comp=0.001, start=0):
+    """Feed a StragglerModel's injected trace to an estimator, shaped as
+    the (t, worker) arrival records a round produces."""
+    for r in range(start, start + rounds):
+        d = model.delays(r)
+        arr = sorted((float(d[w]) + t_comp, w)
+                     for w in range(model.n_workers))
+        est.observe(r, arr)
+
+
+def _mats(seed=0, m=32, d=16, q=8):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((m, d)).astype(np.float32),
+            rng.standard_normal((d, q)).astype(np.float32))
+
+
+# -------------------------------------------------------- spec validation
+
+@pytest.mark.parametrize("bad", [
+    dict(p_fail=1.5), dict(p_recover=-0.1), dict(pareto_shape=1.0),
+    dict(pareto_shape=0.5), dict(regime_len=0),
+    dict(regimes=((0.1, 2.0),)), dict(regimes=((0.1,),)),
+])
+def test_straggler_spec_rejects_bad_params(bad):
+    with pytest.raises(ValueError):
+        StragglerSpec(**bad)
+    with pytest.raises(ValueError):
+        StragglerModel(8, 2, **bad)
+
+
+@pytest.mark.parametrize("bad", [
+    dict(policy="sometimes"), dict(target_rel_err=0.0),
+    dict(retune_every=0), dict(warmup_rounds=-1),
+    dict(min_redundancy=0), dict(min_redundancy=4, max_redundancy=2),
+    dict(window=2), dict(cp_window=1), dict(window=8, cp_window=5),
+    dict(cp_threshold=0.0), dict(quantize_s=0.0),
+    dict(latency_budget_s=-1.0),
+])
+def test_adaptive_spec_rejects_bad_params(bad):
+    with pytest.raises(ValueError):
+        AdaptiveSpec(**bad)
+
+
+def test_adaptive_spec_json_roundtrip():
+    ad = AdaptiveSpec(policy="adaptive", target_rel_err=0.05,
+                      latency_budget_s=0.02, retune_every=3,
+                      max_redundancy=6, quantize_s=5e-3)
+    assert ad.enabled
+    assert not AdaptiveSpec().enabled
+    back = AdaptiveSpec.from_dict(json.loads(json.dumps(ad.to_dict())))
+    assert back == ad
+    spec = ClusterSpec(code=CodeSpec(n_workers=12, k_blocks=4),
+                       adaptive=ad, seed=3)
+    spec2 = ClusterSpec.from_dict(json.loads(spec.to_json()))
+    assert spec2.adaptive == ad
+
+
+def test_validate_rejects_pair_coded_and_bad_bounds():
+    ad = AdaptiveSpec(policy="adaptive")
+    with pytest.raises(ValueError, match="pair-coded"):
+        ClusterSpec(code=CodeSpec(scheme="polynomial", n_workers=12,
+                                  k_blocks=4, extra={"p": 2, "q": 2}),
+                    adaptive=ad).validate()
+    with pytest.raises(ValueError, match="max_redundancy"):
+        ClusterSpec(code=CodeSpec(n_workers=8, k_blocks=4),
+                    adaptive=AdaptiveSpec(policy="adaptive",
+                                          max_redundancy=8)).validate()
+
+
+# ------------------------------------------------------- shifting_markov
+
+def test_shifting_markov_schedule_and_determinism():
+    m = StragglerModel(8, 2, delay_s=0.05, jitter_scale=1e-4, seed=4,
+                       mode="shifting_markov",
+                       regimes=((0.0, 1.0), (1.0, 0.0)), regime_len=4)
+    assert [m.regime_at(r) for r in (0, 3, 4, 7, 8)] == [0, 0, 1, 1, 0]
+    # regime 0 recovers everyone instantly; regime 1 congests everyone
+    assert (m.delays(2) < 0.01).all()
+    assert (m.delays(6) >= 0.05).all()
+    m2 = StragglerModel(8, 2, delay_s=0.05, jitter_scale=1e-4, seed=4,
+                        mode="shifting_markov",
+                        regimes=((0.0, 1.0), (1.0, 0.0)), regime_len=4)
+    for r in range(8):
+        np.testing.assert_array_equal(m.delays(r), m2.delays(r))
+
+
+def test_shifting_markov_default_regimes():
+    m = StragglerModel(8, 2, mode="shifting_markov")
+    assert m.regimes == DEFAULT_SHIFT_REGIMES
+    spec = StragglerSpec(n_stragglers=2, mode="shifting_markov",
+                         regime_len=8)
+    assert spec.build(8, seed=0).regimes == DEFAULT_SHIFT_REGIMES
+
+
+# -------------------------------------------------------- observed_delays
+
+def test_observed_delays_quantize_and_missing():
+    arr = [(0.0101, 1), (0.0302, 3), (0.0118, 0)]
+    obs = observed_delays(arr, 5, quantize_s=5e-3)
+    # baseline (the 0.0101 min) subtracted, then snapped to the 5ms grid
+    assert obs[1] == 0.0
+    assert obs[0] == 0.0
+    assert obs[3] == pytest.approx(0.020)
+    assert np.isnan(obs[2]) and np.isnan(obs[4])
+    assert np.isnan(observed_delays([], 3)).all()
+
+
+# ------------------------------------------------------ estimator recovery
+
+def test_estimator_recovers_markov_params():
+    m = StragglerModel(16, 4, delay_s=0.03, jitter_scale=0.002, seed=3,
+                       mode="markov", p_fail=0.1, p_recover=0.5)
+    est = OnlineStragglerEstimator(16, window=64)
+    _feed(m, est, 48)
+    fm = est.fitted()
+    assert fm.mode == "markov"
+    assert abs(fm.delay_s - 0.03) < 0.015
+    assert abs(fm.jitter_scale - 0.002) < 0.002
+    assert abs(fm.p_fail - 0.1) < 0.08
+    assert abs(fm.p_recover - 0.5) < 0.25
+
+
+def test_estimator_recovers_paper_params():
+    m = StragglerModel(16, 4, delay_s=0.03, jitter_scale=0.002, seed=5,
+                       mode="paper")
+    est = OnlineStragglerEstimator(16, window=64)
+    _feed(m, est, 48)
+    fm = est.fitted()
+    assert fm.mode == "paper"
+    assert abs(fm.delay_s - 0.03) < 0.015
+    # exactly S/N = 4/16 of the fleet is delayed each round
+    assert abs(fm.congested_frac - 0.25) < 0.1
+
+
+def test_estimator_recovers_pareto_tail():
+    m = StragglerModel(16, 4, delay_s=0.03, jitter_scale=0.002, seed=7,
+                       mode="pareto", pareto_shape=1.5)
+    est = OnlineStragglerEstimator(16, window=64)
+    _feed(m, est, 48)
+    fm = est.fitted()
+    assert fm.mode == "pareto"
+    assert abs(fm.pareto_shape - 1.5) < 0.6
+
+
+def test_estimator_determinism_same_trace():
+    fits = []
+    for _ in range(2):
+        m = StragglerModel(12, 3, delay_s=0.02, seed=9, mode="markov")
+        est = OnlineStragglerEstimator(12, window=32)
+        _feed(m, est, 24)
+        fits.append(dataclasses.asdict(est.fitted()))
+    assert fits[0] == fits[1]
+
+
+def test_change_point_detected_within_bound():
+    """A regime shift at round 16 must be detected within 2·cp_window
+    rounds, and the window must collapse so the new regime is re-fit."""
+    calm = StragglerModel(16, 2, delay_s=0.01, jitter_scale=0.001, seed=9,
+                          mode="markov", p_fail=0.02, p_recover=0.8)
+    hot = StragglerModel(16, 10, delay_s=0.05, jitter_scale=0.001, seed=9,
+                         mode="markov", p_fail=0.5, p_recover=0.1)
+    est = OnlineStragglerEstimator(16, window=64, cp_window=6)
+    _feed(calm, est, 16)
+    assert est.change_points == []
+    _feed(hot, est, 16, start=16)
+    assert est.change_points, "regime shift never detected"
+    first = min(est.change_points)
+    assert 16 <= first <= 16 + 2 * 6
+    # post-reset fit reflects the hot regime, not an average of both
+    assert est.fitted().delay_s > 0.025
+
+
+def test_predict_wait_monotone_in_responders():
+    m = StragglerModel(16, 4, delay_s=0.03, jitter_scale=0.002, seed=3,
+                       mode="markov", p_fail=0.1, p_recover=0.5)
+    est = OnlineStragglerEstimator(16, window=64)
+    _feed(m, est, 32)
+    fm = est.fitted()
+    waits = [predict_wait(fm, p, 16) for p in range(1, 17)]
+    assert all(b >= a for a, b in zip(waits, waits[1:]))
+    # waiting for the stragglers costs delay_s-scale time
+    assert waits[-1] > 10 * waits[3]
+
+
+# --------------------------------------------------------- error profiles
+
+def test_error_profile_rateless_and_threshold():
+    sp = registry.build("spacdc", n_workers=12, k_blocks=4, t_colluding=1,
+                        noise_scale=0.01, seed=0)
+    prof = error_profile(sp)
+    assert prof.shape == (12,)
+    assert np.isfinite(prof).all()          # rateless: every prefix decodes
+    assert prof[-1] < 0.2                   # full fleet decodes well
+    assert prof[0] > prof[-1]               # one responder decodes badly
+    lcc = registry.build("lcc", n_workers=12, k_blocks=4, t_colluding=1,
+                         deg_f=2, noise_scale=0.01, seed=0)
+    lprof = error_profile(lcc)
+    thr = lcc.recovery_threshold
+    assert np.isinf(lprof[: thr - 1]).all()
+    assert (lprof[thr - 1:] < 1e-4).all()   # threshold decode is exact
+
+
+# ------------------------------------------------------------- controller
+
+def _controller(n=12, k=6, **ad_over):
+    ad_kw = dict(policy="adaptive", target_rel_err=0.2, warmup_rounds=4,
+                 retune_every=2, max_candidates=4)
+    ad_kw.update(ad_over)
+    ad = AdaptiveSpec(**ad_kw)
+    build = lambda **ov: registry.build(
+        "spacdc", n_workers=n, k_blocks=ov.get("k_blocks", k),
+        t_colluding=1, noise_scale=0.01, seed=0)
+    return AdaptiveController(ad, n, build(), build, seed=0)
+
+
+def test_controller_warmup_cadence_and_decisions():
+    ctrl = _controller()
+    m = StragglerModel(12, 4, delay_s=0.04, jitter_scale=0.001, seed=2,
+                       mode="markov", p_fail=0.3, p_recover=0.2)
+    decided_at = []
+    for r in range(12):
+        d = m.delays(r)
+        arr = sorted((float(d[w]) + 0.001, w) for w in range(12))
+        ctrl.observe(r, arr, k_blocks=6)
+        if ctrl.maybe_decide(r) is not None:
+            decided_at.append(r)
+    # nothing during warmup, then every retune_every rounds
+    assert decided_at == [3, 5, 7, 9, 11]
+    dec = ctrl.decisions[-1]
+    assert 1 <= dec.wait_for <= 12
+    assert dec.policy == "first_k"
+    assert dec.overrides in ctrl.candidates
+    from repro.runtime.wait_policy import FirstK
+    assert isinstance(ctrl.policy_for(dec), FirstK)
+    # scheme_for returns a scheme at the decided geometry
+    assert ctrl.scheme_for(dec).k_blocks == dec.k_blocks
+
+
+def test_controller_latency_budget_falls_back_to_deadline():
+    ctrl = _controller(latency_budget_s=1e-6)
+    m = StragglerModel(12, 4, delay_s=0.04, jitter_scale=0.001, seed=2,
+                       mode="markov", p_fail=0.3, p_recover=0.2)
+    for r in range(6):
+        d = m.delays(r)
+        arr = sorted((float(d[w]) + 0.001, w) for w in range(12))
+        ctrl.observe(r, arr, k_blocks=6)
+        ctrl.maybe_decide(r)
+    dec = ctrl.decisions[-1]
+    assert dec.policy == "deadline"
+    assert dec.policy_params["t_budget"] == pytest.approx(1e-6)
+
+
+def test_controller_candidates_respect_redundancy_bounds():
+    ctrl = _controller(min_redundancy=2, max_redundancy=6, max_candidates=3)
+    ks = [c["k_blocks"] for c in ctrl.candidates]
+    assert all(12 - 6 <= k <= 12 - 2 for k in ks)
+    assert len(ks) <= 3
+
+
+def test_controller_sweeps_glcc_groups():
+    ad = AdaptiveSpec(policy="adaptive", target_rel_err=0.2)
+    build = lambda **ov: registry.build(
+        "glcc", n_workers=12, k_blocks=ov.get("k_blocks", 4),
+        n_groups=ov.get("n_groups", 1), t_colluding=1, deg_f=2,
+        noise_scale=0.01, seed=0)
+    ctrl = AdaptiveController(ad, 12, build(), build, seed=0)
+    groups = sorted(c["n_groups"] for c in ctrl.candidates
+                    if "n_groups" in c)
+    # every divisor of K=4 whose threshold fits in N=12
+    assert groups == [1, 2, 4]
+
+
+# ----------------------------------------------- sessions: retune + report
+
+_AD = AdaptiveSpec(policy="adaptive", target_rel_err=0.15, warmup_rounds=4,
+                   retune_every=2, max_candidates=4)
+
+
+def _session_spec(backend="virtual", **over):
+    kw = dict(
+        code=CodeSpec(scheme="spacdc", n_workers=12, k_blocks=6),
+        privacy=PrivacySpec(t_colluding=1, noise_scale=0.01),
+        straggler=StragglerSpec(n_stragglers=3, mode="shifting_markov",
+                                delay_s=0.02, jitter_scale=0.001,
+                                regime_len=6),
+        transport=TransportSpec(backend=backend),
+        adaptive=_AD, seed=13)
+    kw.update(over)
+    return ClusterSpec(**kw)
+
+
+def test_session_adaptive_zero_recompiles_after_warmup():
+    """Retuning swaps schemes through token-keyed jit caches: traces are
+    bounded by the candidate set and stop appearing once the active
+    candidates have each compiled once — never per round."""
+    a, b = _mats()
+    rounds = []   # (trace_count, active scheme token) per round
+    with Session(_session_spec()) as s:
+        n_cands = len(s.engine.adaptive.candidates)
+        for _ in range(24):
+            s.matmul(a, b)
+            rounds.append((s.engine.trace_count, s.engine._scheme_token))
+        assert s.engine.adaptive.decisions, "controller never retuned"
+    # a new trace is allowed ONLY the first time a scheme is activated —
+    # revisiting a previously-compiled candidate must hit the cache
+    seen = {rounds[0][1]}
+    for (t0, _), (t1, tok) in zip(rounds, rounds[1:]):
+        if t1 > t0:
+            assert tok not in seen, (
+                f"recompile on revisit of {tok}: {t0} -> {t1}")
+        seen.add(tok)
+    assert rounds[-1][0] <= n_cands + 2, (
+        f"{rounds[-1][0]} traces for {n_cands} candidates")
+
+
+def test_session_adaptive_outputs_stay_correct():
+    a, b = _mats()
+    ref = a @ b
+    with Session(_session_spec()) as s:
+        for _ in range(16):
+            out, st = s.matmul(a, b)
+            assert out.shape == ref.shape
+            assert np.isfinite(np.asarray(out)).all()
+        # at least one post-warmup round ran at a retuned geometry
+        ks = {d.k_blocks for d in s.engine.adaptive.decisions}
+        assert ks, "no decisions recorded"
+
+
+def test_adaptive_determinism_virtual_vs_threads():
+    """Same trace + seed → identical fitted model-family parameters and
+    identical decision sequences on the virtual clock and real threads.
+    (``per_worker_congestion`` is exempt: it blends WorkerHealth's raw
+    measured EWMA latencies, which are transport-real by design.)"""
+    spec_kw = dict(
+        straggler=StragglerSpec(n_stragglers=2, mode="markov",
+                                delay_s=0.06, jitter_scale=1e-4),
+        adaptive=AdaptiveSpec(policy="adaptive", target_rel_err=0.2,
+                              warmup_rounds=4, retune_every=2,
+                              quantize_s=0.03),
+        code=CodeSpec(scheme="spacdc", n_workers=8, k_blocks=4))
+
+    def run(backend):
+        a, b = _mats()
+        with Session(_session_spec(backend=backend, **spec_kw)) as s:
+            for _ in range(12):
+                s.matmul(a, b)
+            rep = s.adaptive_report()
+        fit = {k: v for k, v in rep["fitted"].items()
+               if k != "per_worker_congestion"}
+        return fit, rep["decisions"]
+
+    fit_v, dec_v = run("virtual")
+    fit_t, dec_t = run("threads")
+    assert fit_v == fit_t
+    assert dec_v == dec_t
+    assert dec_v, "no decisions to compare"
+
+
+def test_adaptive_report_shapes():
+    a, b = _mats()
+    with Session(_session_spec()) as s:
+        for _ in range(10):
+            s.matmul(a, b)
+        rep = s.adaptive_report()
+    assert rep["adaptive"] is True
+    assert rep["scheme"] == "spacdc"
+    assert rep["rounds_run"] == 10
+    assert rep["fitted"]["n_rounds"] > 0
+    assert rep["decisions"]
+    assert {"k_blocks", "policy", "fh_degree"} <= set(rep["active"])
+    json.dumps(rep)   # the whole report must be JSON-serializable
+
+
+def test_adaptive_report_fixed_policy():
+    a, b = _mats()
+    with Session(_session_spec(adaptive=AdaptiveSpec())) as s:
+        s.matmul(a, b)
+        rep = s.adaptive_report()
+    assert rep["adaptive"] is False
+    assert rep["policy"] == "fixed"
+    json.dumps(rep)

@@ -1,0 +1,89 @@
+"""Group Lagrange Coded Computing (arXiv 2204.11168): the grouped-LCC
+scheme whose n_groups knob trades per-worker computation/communication
+against recovery threshold.  g=1 must be bit-identical to LCC.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import registry
+from repro.core.baselines import GLCCScheme, LCCScheme
+
+
+def _x(seed=0, rows=24, d=8):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((rows, d)).astype(np.float32)
+
+
+def test_glcc_degenerate_group_matches_lcc_bitwise():
+    kw = dict(n_workers=12, k_blocks=4, t_colluding=1, deg_f=2,
+              noise_scale=0.05, seed=3)
+    lcc = LCCScheme(**kw)
+    glcc = GLCCScheme(n_groups=1, **kw)
+    assert glcc.recovery_threshold == lcc.recovery_threshold
+    np.testing.assert_array_equal(glcc.encoder, lcc.encoder)
+    x = _x()
+    np.testing.assert_array_equal(np.asarray(glcc.encode(x)),
+                                  np.asarray(lcc.encode(x)))
+    shards = np.asarray(lcc.encode(x))
+    results = shards @ shards.transpose(0, 2, 1)   # f(X) = X X^T, deg 2
+    resp = list(range(lcc.recovery_threshold))
+    np.testing.assert_array_equal(np.asarray(glcc.decode(results, resp)),
+                                  np.asarray(lcc.decode(results, resp)))
+
+
+def test_glcc_threshold_drops_and_shards_grow_with_groups():
+    prev_thr, prev_rows = None, None
+    for g in (1, 2, 4):
+        s = GLCCScheme(n_workers=12, k_blocks=4, t_colluding=1, deg_f=2,
+                       n_groups=g, noise_scale=0.05, seed=3)
+        shards = np.asarray(s.encode(_x()))
+        rows = shards.shape[1]
+        if prev_thr is not None:
+            assert s.recovery_threshold < prev_thr
+            assert rows > prev_rows     # the g× communication price
+        prev_thr, prev_rows = s.recovery_threshold, rows
+        # per-worker shard stacks one coded block per group
+        assert rows == g * (24 // 4)
+
+
+def test_glcc_exactness_linear_f():
+    """deg_f=1 with f(X) = X @ B is within Lagrange conditioning of exact:
+    decode recovers the K data blocks' products from any threshold-sized
+    responder set."""
+    rng = np.random.default_rng(1)
+    b = rng.standard_normal((8, 5)).astype(np.float32)
+    for g in (1, 2, 4):
+        s = GLCCScheme(n_workers=12, k_blocks=4, t_colluding=0, deg_f=1,
+                       n_groups=g, seed=3)
+        x = _x()
+        shards = np.asarray(s.encode(x))
+        resp = [11, 3, 7, 0, 5][: s.recovery_threshold]
+        results = shards[resp] @ b     # results aligned with the responders
+        out = np.asarray(s.decode(results, resp))
+        want = x.reshape(4, 6, 8) @ b
+        err = np.linalg.norm(out - want) / np.linalg.norm(want)
+        assert err < 1e-2, f"g={g}: rel err {err:.2e}"
+
+
+def test_glcc_validation():
+    with pytest.raises(ValueError, match="dividing"):
+        GLCCScheme(n_workers=12, k_blocks=4, n_groups=3)
+    with pytest.raises(ValueError, match="dividing"):
+        GLCCScheme(n_workers=12, k_blocks=4, n_groups=0)
+    with pytest.raises(ValueError, match="N >="):
+        GLCCScheme(n_workers=4, k_blocks=6, n_groups=1, deg_f=2)
+    # decoding below threshold refuses
+    s = GLCCScheme(n_workers=12, k_blocks=4, n_groups=2, deg_f=2)
+    with pytest.raises(ValueError):
+        s.decode(np.zeros((2, 12, 8)), [0, 1])
+
+
+def test_glcc_registry_build():
+    s = registry.build("glcc", n_workers=12, k_blocks=6, t_colluding=1,
+                       deg_f=2, n_groups=3, noise_scale=0.05, seed=0)
+    assert isinstance(s, GLCCScheme)
+    assert s.n_groups == 3 and s.per_group == 2
+    # registry.build drops kwargs the factory doesn't take (use_kernel)
+    s2 = registry.build("glcc", n_workers=12, k_blocks=6, use_kernel=None)
+    assert s2.n_groups == 1
